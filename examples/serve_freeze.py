@@ -1,0 +1,59 @@
+"""End-to-end serving driver (the paper is an inference paper, so this is
+the primary E2E example): serve a small model with batched requests through
+the Scheduler with ASR-KF-EGR freeze management, and compare against the
+full-KV baseline — the paper's Table 1 protocol at example scale.
+
+    PYTHONPATH=src python examples/serve_freeze.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving.engine import Engine
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler
+
+
+def main():
+    cfg = get_config("llama3-8b-tiny")
+    fc = dataclasses.replace(cfg.freeze, window=16, tau_mode="quantile",
+                             quantile=0.45, k_soft=1.0, page_size=16,
+                             entropy_abs_threshold=1e9)
+    cfg = dataclasses.replace(cfg, freeze=fc)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+
+    for label, freeze in (("full-KV baseline", False), ("ASR-KF-EGR", True)):
+        eng = Engine(cfg, params, max_seq=512, enable_freeze=freeze)
+        sched = Scheduler(eng, batch_size=4)
+        for _ in range(8):                      # 8 requests, 2 batches
+            prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(16, 48))
+            sched.submit(prompt, n_tokens=160,
+                         sampling=SamplingParams(temperature=0.7))
+        t0 = time.time()
+        sched.run()
+        dt = time.time() - t0
+        total = sum(len(r.result) for r in sched.done.values())
+        # last engine result telemetry
+        print(f"{label:18s}: {len(sched.done)} requests, {total} tokens, "
+              f"{dt:.1f}s ({1e3 * dt / total:.1f} ms/token)")
+        if freeze:
+            res = None
+    # detailed freeze stats from one fresh batched run
+    eng = Engine(cfg, params, max_seq=512)
+    toks = rng.randint(0, cfg.vocab_size, size=(4, 32)).astype(np.int32)
+    import jax.numpy as jnp
+    res = eng.generate({"tokens": jnp.asarray(toks)}, 200)
+    print(f"\nASR-KF-EGR telemetry (batch=4, 200 tokens):")
+    print(f"  compression        : {100 * res.compression:.1f}%")
+    print(f"  mean active KV     : {np.mean(res.active_kv):.0f}")
+    print(f"  host-offloaded     : {max(res.offloaded_tokens)} tokens peak")
+    print(f"  recovery events    : {len(res.recovery_events)}")
+
+
+if __name__ == "__main__":
+    main()

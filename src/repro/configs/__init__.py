@@ -1,0 +1,49 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, FreezeConfig, InputShape, ModelConfig
+
+_ARCH_MODULES = {
+    "chameleon-34b": "chameleon_34b",
+    "mistral-large-123b": "mistral_large_123b",
+    "starcoder2-15b": "starcoder2_15b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "granite-20b": "granite_20b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "whisper-base": "whisper_base",
+    "llama3-8b": "llama3_8b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    tiny = name.endswith("-tiny")
+    base = name[: -len("-tiny")] if tiny else name
+    if base not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[base]}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.tiny() if tiny else cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in _ARCH_MODULES}
+
+
+__all__ = [
+    "ModelConfig",
+    "FreezeConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "get_config",
+    "list_archs",
+    "all_configs",
+]

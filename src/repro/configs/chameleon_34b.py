@@ -1,0 +1,21 @@
+"""chameleon-34b [vlm] — early-fusion mixed-modal transformer; image content
+arrives as VQ tokens / patch embeddings consumed by the decoder backbone.
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536.  [arXiv:2405.09818]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    arch_type="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    multimodal=True,
+    num_patches=256,
+    rope_theta=10000.0,
+    source="arXiv:2405.09818",
+)

@@ -1,0 +1,21 @@
+"""rwkv6-1.6b [ssm] — Finch: 24L d_model=2048 attention-free, d_ff=7168
+vocab=65536; data-dependent decay linear attention.  [arXiv:2404.05892]
+
+ASR-KF-EGR is inapplicable (no KV cache; O(1) recurrent WKV state) — the
+architecture is built and served without the technique (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    rwkv_head_dim=64,
+    source="arXiv:2404.05892",
+)

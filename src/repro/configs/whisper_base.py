@@ -1,0 +1,26 @@
+"""whisper-base [audio] — enc-dec, 6L d_model=512 8H d_ff=2048 vocab=51865;
+conv/mel frontend is a STUB (input_specs provides precomputed frame
+embeddings, 1500 frames for 30s audio).  [arXiv:2212.04356]
+
+Vocab padded 51865 -> 51968 for 16-way tensor sharding (DESIGN.md §4).
+ASR-KF-EGR applies to the decoder self-attention cache only; cross-attention
+KV is static (encoder length).  No long_500k shape (DESIGN.md §5 skip note).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="audio",
+    num_layers=6,                # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_layers=6,
+    encoder_frames=1500,
+    rope_theta=10000.0,          # unused (learned positions) but kept uniform
+    source="arXiv:2212.04356",
+)

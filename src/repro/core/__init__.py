@@ -1,0 +1,28 @@
+"""ASR-KF-EGR core: the paper's contribution as composable JAX modules.
+
+freeze.py    — Algorithm 1 (soft freeze + sublinear schedule + rolling
+               re-evaluation), vectorized for in-jit execution
+recovery.py  — Entropy-Guided Recovery ladder (§3.6, implemented)
+cache.py     — contiguous KV cache + host offload controller
+paging.py    — bounded-active paged cache (TPU-native long-context mode)
+"""
+from repro.core.freeze import (FreezeState, active_mask, freeze_update,
+                               full_reset, init_freeze_state, schedule,
+                               soft_reset, window_reset)
+from repro.core.recovery import (RecoveryState, init_recovery_state,
+                                 recovery_update, token_entropy)
+from repro.core.cache import (HostOffloadController, KVCache, PagedKVCache,
+                              cache_write, init_kv_cache, init_paged_cache)
+from repro.core.paging import (PagedController, PageFreezeState,
+                               init_page_freeze_state, page_freeze_update,
+                               paged_decode_attention, write_tail)
+
+__all__ = [
+    "FreezeState", "active_mask", "freeze_update", "full_reset",
+    "init_freeze_state", "schedule", "soft_reset", "window_reset",
+    "RecoveryState", "init_recovery_state", "recovery_update", "token_entropy",
+    "HostOffloadController", "KVCache", "PagedKVCache", "cache_write",
+    "init_kv_cache", "init_paged_cache",
+    "PagedController", "PageFreezeState", "init_page_freeze_state",
+    "page_freeze_update", "paged_decode_attention", "write_tail",
+]

@@ -1,0 +1,151 @@
+"""KV cache structures for ASR-KF-EGR serving.
+
+Two layouts:
+
+* **Contiguous** — (L, B, S_max, KVH, hd) buffers with a freeze mask; the
+  faithful in-step representation of the paper (every slot addressable,
+  frozen ones excluded from attention).  Offload of frozen *pages* to host
+  memory is handled by `HostOffloadController` between steps.
+
+* **Paged / bounded-active** — the TPU-native long-context layout: the device
+  holds only `max_active_pages` pages per sequence plus a page table; all
+  other pages (frozen or cold) live in the host store.  This is what makes
+  `long_500k` decode lower with a bounded device footprint (DESIGN.md §2/§5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # (L, B, S, KVH, hd)
+    v: jnp.ndarray   # (L, B, S, KVH, hd)
+
+    @property
+    def seq_len(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    n_attn = sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l))
+    shape = (n_attn, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_write(k_layer: jnp.ndarray, v_layer: jnp.ndarray,
+                new_k: jnp.ndarray, new_v: jnp.ndarray,
+                pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write one token (B, KVH, hd) at position `pos` into (B, S, KVH, hd)."""
+    k = jax.lax.dynamic_update_slice_in_dim(k_layer, new_k[:, None], pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(v_layer, new_v[:, None], pos, axis=1)
+    return k, v
+
+
+class PagedKVCache(NamedTuple):
+    """Bounded-active paged cache (one entry per attention layer).
+
+    k, v:        (L, B, P, page, KVH, hd) — device-resident active pages only
+    page_table:  (L, B, P) int32 — global page id held in each physical slot
+                 (-1 = empty slot)
+    slot_mask:   (L, B, P, page) bool — valid+unfrozen token positions within
+                 each physical page (padding/frozen tokens are False)
+    positions:   (L, B, P, page) int32 — global token position of each slot
+                 (for telemetry; RoPE is applied at write time)
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    page_table: jnp.ndarray
+    slot_mask: jnp.ndarray
+    positions: jnp.ndarray
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[3]
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_active_pages: int,
+                     dtype=jnp.bfloat16) -> PagedKVCache:
+    n_attn = sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l))
+    P, page = max_active_pages, cfg.freeze.page_size
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    return PagedKVCache(
+        k=jnp.zeros((n_attn, batch, P, page, kvh, hd), dtype),
+        v=jnp.zeros((n_attn, batch, P, page, kvh, hd), dtype),
+        page_table=jnp.full((n_attn, batch, P), -1, jnp.int32),
+        slot_mask=jnp.zeros((n_attn, batch, P, page), bool),
+        positions=jnp.zeros((n_attn, batch, P, page), jnp.int32),
+    )
+
+
+# ===================================================================== #
+# Host offload controller — runs OUTSIDE the jitted step, page-granular.
+# ===================================================================== #
+@dataclasses.dataclass
+class HostOffloadController:
+    """Keeps the paper's "frozen storage F" in host RAM.
+
+    After each jitted step the controller reads the freeze masks, finds pages
+    whose tokens are *all* frozen, copies them to the host store (numpy) and
+    marks them released; when any token of an offloaded page is restored
+    (timer expiry / recovery reset) the page is uploaded back before the next
+    step.  Transfers are page-batched — the TPU analogue of the paper's
+    proposed "batched transfers" fix for their 5x Python overhead (§6).
+
+    On real TPU hardware the store would live in `pinned_host` memory with
+    async DMA; on CPU the mechanism (and its bookkeeping) is identical.
+    """
+    page_size: int
+    store: Dict[Tuple[int, int, int], Tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+    offloaded: set = dataclasses.field(default_factory=set)
+    n_offloads: int = 0
+    n_restores: int = 0
+
+    def sync(self, cache: KVCache, frozen: np.ndarray) -> KVCache:
+        """frozen: (L, B, S) bool (post-step).  Returns cache with restored
+        pages written back.  Offloaded pages are tracked; their device slots
+        are considered reclaimable (zeroed to model release)."""
+        L, B, S = frozen.shape
+        pg = self.page_size
+        n_pages = S // pg
+        fz = frozen[:, :, : n_pages * pg].reshape(L, B, n_pages, pg)
+        all_frozen = fz.all(axis=-1)                       # (L, B, n_pages)
+        k_host = np.array(cache.k)     # mutable host copies
+        v_host = np.array(cache.v)
+        dirty = False
+        for (l, b, p) in zip(*np.nonzero(all_frozen)):
+            key = (int(l), int(b), int(p))
+            if key not in self.offloaded:
+                sl = slice(p * pg, (p + 1) * pg)
+                self.store[key] = (k_host[l, b, sl].copy(), v_host[l, b, sl].copy())
+                self.offloaded.add(key)
+                self.n_offloads += 1
+                k_host[l, b, sl] = 0                       # model slot release
+                v_host[l, b, sl] = 0
+                dirty = True
+        # restore pages that are no longer fully frozen
+        for key in list(self.offloaded):
+            l, b, p = key
+            if not all_frozen[l, b, p]:
+                kk, vv = self.store.pop(key)
+                sl = slice(p * pg, (p + 1) * pg)
+                k_host[l, b, sl] = kk
+                v_host[l, b, sl] = vv
+                self.offloaded.discard(key)
+                self.n_restores += 1
+                dirty = True
+        if dirty:
+            return KVCache(k=jnp.asarray(k_host), v=jnp.asarray(v_host))
+        return cache
+
+    @property
+    def offloaded_tokens(self) -> int:
+        return len(self.offloaded) * self.page_size

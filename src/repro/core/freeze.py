@@ -1,0 +1,161 @@
+"""ASR-KF-EGR soft-freeze state machine (paper Algorithm 1), fully
+vectorized so it runs inside a jitted decode step on TPU.
+
+Per KV slot we track:
+  c          low-importance detection counter (Eq. 3 input)
+  d          remaining freeze duration (steps)
+  frozen     True -> excluded from attention, (K,V) eligible for host offload
+  frozen_at  decode step at which the slot was last frozen (Window Reset)
+
+All arrays are (B, S); the transformer stacks them (L, B, S) per layer.
+
+Deviation from the paper's pseudocode (documented in DESIGN.md): Alg. 1
+decrements *all* frozen timers in the same step tokens are frozen, which
+would immediately restore any token frozen with d=1 (contradicting §3.4's
+"c=4 -> d=1" example).  We decrement only slots frozen in *previous* steps,
+so d=1 means "frozen for exactly one step" — matching the schedule's intent.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FreezeConfig
+
+
+class FreezeState(NamedTuple):
+    c: jnp.ndarray          # (B, S) int32
+    d: jnp.ndarray          # (B, S) int32
+    frozen: jnp.ndarray     # (B, S) bool
+    frozen_at: jnp.ndarray  # (B, S) int32
+
+
+def init_freeze_state(batch: int, seq: int) -> FreezeState:
+    return FreezeState(
+        c=jnp.zeros((batch, seq), jnp.int32),
+        d=jnp.zeros((batch, seq), jnp.int32),
+        frozen=jnp.zeros((batch, seq), bool),
+        frozen_at=jnp.full((batch, seq), -1, jnp.int32),
+    )
+
+
+def schedule(c: jnp.ndarray, k_soft: float) -> jnp.ndarray:
+    """Eq. 3: d = floor(sqrt(c) / k) — sublinear freeze duration."""
+    return jnp.floor(jnp.sqrt(c.astype(jnp.float32)) / k_soft).astype(jnp.int32)
+
+
+def effective_tau(relevance: jnp.ndarray, eligible: jnp.ndarray,
+                  cfg: FreezeConfig) -> jnp.ndarray:
+    """Paper mode: fixed tau (Eq. 2 threshold).  Beyond-paper "quantile"
+    mode: per-sequence threshold at the `cfg.quantile` quantile of currently
+    eligible scores — flag rate becomes scale-invariant across models."""
+    if cfg.tau_mode == "fixed":
+        return jnp.asarray(cfg.tau, relevance.dtype)
+    scores = jnp.where(eligible, relevance, jnp.nan)
+    tau = jnp.nanquantile(scores.astype(jnp.float32), cfg.quantile,
+                          axis=-1, keepdims=True)
+    return jnp.where(jnp.isnan(tau), -jnp.inf, tau).astype(relevance.dtype)
+
+
+def active_mask(state: FreezeState, pos: jnp.ndarray, seq: int) -> jnp.ndarray:
+    """(B, S) True for slots that participate in attention: written
+    (slot <= pos) and not frozen."""
+    idx = jnp.arange(seq)
+    exists = idx[None, :] <= pos[:, None] if pos.ndim else idx[None, :] <= pos
+    return exists & ~state.frozen
+
+
+def freeze_update(
+    state: FreezeState,
+    relevance: jnp.ndarray,      # (B, S) Eq. 2 scores for the current step
+    pos: jnp.ndarray,            # () or (B,) index of the newest token
+    step: jnp.ndarray,           # () global decode step (for frozen_at / decay)
+    cfg: FreezeConfig,
+) -> Tuple[FreezeState, Dict[str, jnp.ndarray]]:
+    """One rolling ASR-KF-EGR update (Alg. 1 lines 2–15).
+
+    Returns (new_state, info) with info masks for the host-offload
+    controller and telemetry:
+      just_frozen / restored : (B, S) bool — slots that changed state
+      active                  : (B, S) bool — post-update attention mask
+      n_active / n_frozen     : (B,) int32
+    """
+    B, S = relevance.shape
+    pos = jnp.asarray(pos)
+    pos_b = pos[:, None] if pos.ndim else pos[None, None]
+    idx = jnp.arange(S)[None, :]
+    exists = idx <= pos_b
+    in_window = idx > (pos_b - cfg.window)          # K most-recent tokens
+    was_frozen = state.frozen
+
+    # -- lines 3–9: flag low-importance tokens outside the window --------- #
+    eligible = exists & ~in_window & ~was_frozen
+    tau = effective_tau(relevance, eligible, cfg)
+    flagged = eligible & (relevance < tau)
+    c_new = state.c + flagged.astype(jnp.int32)
+    d_sched = schedule(c_new, cfg.k_soft)
+    just_frozen = flagged & (d_sched > 0)
+    frozen_mid = was_frozen | just_frozen
+    d_mid = jnp.where(just_frozen, d_sched, state.d)
+    frozen_at = jnp.where(just_frozen, step, state.frozen_at)
+
+    # -- lines 10–14: rolling decrement + restore (previously-frozen only) #
+    d_dec = jnp.where(was_frozen, d_mid - 1, d_mid)
+    restored = was_frozen & (d_dec <= 0)
+    frozen_new = frozen_mid & ~restored
+    d_new = jnp.where(restored, 0, d_dec)
+
+    # -- history window W: age out stale detections (periodic decay) ------ #
+    decay = (step % cfg.history) == (cfg.history - 1)
+    c_new = jnp.where(decay, jnp.maximum(c_new - 1, 0), c_new)
+
+    new_state = FreezeState(c=c_new, d=d_new, frozen=frozen_new, frozen_at=frozen_at)
+    active = exists & ~frozen_new
+    info = {
+        "just_frozen": just_frozen,
+        "restored": restored,
+        "active": active,
+        "n_active": jnp.sum(active, axis=-1).astype(jnp.int32),
+        "n_frozen": jnp.sum(frozen_new & exists, axis=-1).astype(jnp.int32),
+    }
+    return new_state, info
+
+
+# --------------------------------------------------------------------- #
+# Recovery actions (used by repro.core.recovery) — operate on stacked or
+# unstacked FreezeState; `sel` is a (B,) bool mask broadcast over slots.
+# --------------------------------------------------------------------- #
+def _bmask(sel: jnp.ndarray, arr: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast (B,) selector over (..., B, S) arrays."""
+    shape = [1] * arr.ndim
+    shape[-2] = sel.shape[0]
+    return sel.reshape(shape)
+
+
+def soft_reset(state: FreezeState, sel: jnp.ndarray) -> FreezeState:
+    """SR: unfreeze tokens with d > 1 (the long-frozen ones)."""
+    hit = _bmask(sel, state.d) & (state.d > 1)
+    return state._replace(frozen=state.frozen & ~hit,
+                          d=jnp.where(hit, 0, state.d))
+
+
+def window_reset(state: FreezeState, sel: jnp.ndarray, step: jnp.ndarray,
+                 window: int) -> FreezeState:
+    """WR: unfreeze everything frozen within the last `window` steps."""
+    recent = state.frozen_at > (step - window)
+    hit = _bmask(sel, state.d) & recent
+    return state._replace(frozen=state.frozen & ~hit,
+                          d=jnp.where(hit, 0, state.d))
+
+
+def full_reset(state: FreezeState, sel: jnp.ndarray) -> FreezeState:
+    """FR: clear all freeze state globally (for selected sequences)."""
+    hit = _bmask(sel, state.d) & jnp.ones_like(state.frozen)
+    return FreezeState(
+        c=jnp.where(hit, 0, state.c),
+        d=jnp.where(hit, 0, state.d),
+        frozen=state.frozen & ~hit,
+        frozen_at=jnp.where(hit, -1, state.frozen_at),
+    )

@@ -1,0 +1,253 @@
+"""Bounded-active paged KV serving — the TPU-native ASR-KF-EGR layout for
+very long contexts (long_500k).
+
+Device holds at most P physical pages per sequence; the page table maps each
+physical slot to a global page id.  Freeze bookkeeping (c, d, frozen,
+frozen_at) runs at *page* granularity inside the jitted step, using the same
+sublinear schedule (Eq. 3) over page-level relevance (masked mean of the
+Eq. 2 token scores).  The host `PagedController` performs the actual
+swap-in/swap-out between steps: frozen pages are released to the host store,
+expired pages are re-pinned into free slots — batched, page-granular DMA,
+exactly the "batched transfers" the paper calls for in §6.
+
+Bounded-memory guarantee (beyond-paper): when the active pool is full and no
+page is naturally freezable, the lowest-relevance out-of-window page is
+force-frozen (with the schedule's d for its counter) so device memory never
+exceeds P pages.  The paper lets the active set float; the bound is what
+makes 500k-token decode lowerable on a fixed HBM budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FreezeConfig, ModelConfig
+from repro.core.freeze import FreezeState, schedule
+
+
+class PageFreezeState(NamedTuple):
+    """Freeze bookkeeping per *global* page id (host-managed, device-visible
+    slice passed per step). Arrays are (B, P) over physical slots."""
+    c: jnp.ndarray
+    d: jnp.ndarray
+    frozen: jnp.ndarray
+    frozen_at: jnp.ndarray
+
+
+def init_page_freeze_state(batch: int, pages: int) -> PageFreezeState:
+    return PageFreezeState(
+        c=jnp.zeros((batch, pages), jnp.int32),
+        d=jnp.zeros((batch, pages), jnp.int32),
+        frozen=jnp.zeros((batch, pages), bool),
+        frozen_at=jnp.full((batch, pages), -1, jnp.int32),
+    )
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,           # (B, H, hd)
+    k_pages: jnp.ndarray,     # (B, P, page, KVH, hd)
+    v_pages: jnp.ndarray,     # (B, P, page, KVH, hd)
+    slot_mask: jnp.ndarray,   # (B, P, page) bool
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode attention over the active page pool.
+
+    Returns (out (B, H, hd), page_relevance (B, P)) where page relevance is
+    the masked mean over the page's slots of the Eq. 2 token score.
+    """
+    B, H, hd = q.shape
+    _, P, page, KVH, _ = k_pages.shape
+    G = H // KVH
+    qf = q.reshape(B, KVH, G, hd).astype(jnp.float32)
+    kf = k_pages.astype(jnp.float32)
+    raw = jnp.einsum("bkgh,bpskh->bkgps", qf, kf)              # (B,KVH,G,P,page)
+    tok_rel = jnp.mean(jnp.abs(raw), axis=(1, 2))              # (B,P,page)
+    denom = jnp.maximum(jnp.sum(slot_mask, axis=-1), 1)
+    page_rel = jnp.sum(tok_rel * slot_mask, axis=-1) / denom   # (B,P)
+
+    s = raw / math.sqrt(hd)
+    s = jnp.where(slot_mask[:, None, None, :, :], s, -1e30)
+    s = s.reshape(B, KVH, G, P * page)
+    p = jax.nn.softmax(s, axis=-1)
+    any_active = jnp.any(slot_mask.reshape(B, 1, 1, -1), axis=-1, keepdims=True)
+    p = jnp.where(any_active, p, 0.0)
+    vf = v_pages.astype(jnp.float32).reshape(B, P * page, KVH, hd)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, vf)
+    return out.reshape(B, H, hd).astype(q.dtype), page_rel
+
+
+def write_tail(
+    k_pages: jnp.ndarray, v_pages: jnp.ndarray, slot_mask: jnp.ndarray,
+    new_k: jnp.ndarray, new_v: jnp.ndarray,
+    tail_slot: jnp.ndarray,   # () int32 physical page slot of the tail page
+    tail_off: jnp.ndarray,    # () int32 offset within the tail page
+):
+    """Append one token's (K, V) (B, KVH, hd) into the tail page."""
+    B = new_k.shape[0]
+    page = k_pages.shape[2]
+    onehot_p = jax.nn.one_hot(tail_slot, k_pages.shape[1], dtype=bool)
+    onehot_s = jax.nn.one_hot(tail_off, page, dtype=bool)
+    sel = (onehot_p[:, None] & onehot_s[None, :])[None, :, :, None, None]
+    k_pages = jnp.where(sel, new_k[:, None, None], k_pages)
+    v_pages = jnp.where(sel, new_v[:, None, None], v_pages)
+    slot_mask = slot_mask | sel[..., 0, 0]
+    return k_pages, v_pages, slot_mask
+
+
+def page_freeze_update(
+    state: PageFreezeState,
+    page_rel: jnp.ndarray,     # (B, P)
+    page_table: jnp.ndarray,   # (B, P) global ids, -1 = empty
+    current_page: jnp.ndarray, # () int32 — global id of the tail page
+    step: jnp.ndarray,
+    cfg: FreezeConfig,
+) -> Tuple[PageFreezeState, Dict[str, jnp.ndarray]]:
+    """Page-granular Alg. 1 with the sliding window expressed in pages and
+    the forced-freeze bound when the pool is saturated."""
+    window_pages = max(1, -(-cfg.window // cfg.page_size))
+    exists = page_table >= 0
+    in_window = page_table > (current_page - window_pages)
+    was_frozen = state.frozen
+
+    from repro.core.freeze import effective_tau
+    eligible = exists & ~in_window & ~was_frozen
+    flagged = eligible & (page_rel < effective_tau(page_rel, eligible, cfg))
+    c_new = state.c + flagged.astype(jnp.int32)
+    d_sched = schedule(c_new, cfg.k_soft)
+    just_frozen = flagged & (d_sched > 0)
+
+    # --- forced freeze when pool is (nearly) full: lowest-relevance page --- #
+    # headroom of 2: one slot for the next tail page, one so a long-lived
+    # (d >= page_size) forced-frozen page is always available for the host
+    # controller's swap-out at its page-cadence tick (organic freezes have
+    # short timers and can churn back between ticks)
+    durable_frozen = jnp.sum((was_frozen | just_frozen) &
+                             (jnp.where(just_frozen, d_sched, state.d) >=
+                              cfg.page_size), axis=-1)
+    free_after = jnp.sum(~exists, axis=-1) + durable_frozen
+    need_force = free_after < 2
+    cand = jnp.where(eligible & ~just_frozen, page_rel, jnp.inf)
+    forced_idx = jnp.argmin(cand, axis=-1)                      # (B,)
+    can_force = jnp.isfinite(jnp.min(cand, axis=-1))
+    force = (need_force & can_force)[:, None] & (
+        jax.nn.one_hot(forced_idx, page_rel.shape[1], dtype=bool))
+    c_new = c_new + force.astype(jnp.int32)
+    just_frozen = just_frozen | force
+    # forced evictions persist at least one page-fill interval so the host
+    # controller (which runs at page-allocation cadence) can offload them
+    # before the rolling decrement would restore them
+    d_forced = jnp.maximum(schedule(c_new, cfg.k_soft), cfg.page_size)
+    d_sched = jnp.where(force, d_forced, d_sched)
+
+    frozen_mid = was_frozen | just_frozen
+    d_mid = jnp.where(just_frozen, d_sched, state.d)
+    frozen_at = jnp.where(just_frozen, step, state.frozen_at)
+
+    d_dec = jnp.where(was_frozen, d_mid - 1, d_mid)
+    restored = was_frozen & (d_dec <= 0)
+    frozen_new = frozen_mid & ~restored
+    d_new = jnp.where(restored, 0, d_dec)
+    decay = (step % cfg.history) == (cfg.history - 1)
+    c_new = jnp.where(decay, jnp.maximum(c_new - 1, 0), c_new)
+
+    new = PageFreezeState(c=c_new, d=d_new, frozen=frozen_new, frozen_at=frozen_at)
+    info = {"just_frozen": just_frozen, "restored": restored,
+            "n_frozen": jnp.sum(frozen_new & exists, axis=-1)}
+    return new, info
+
+
+# ===================================================================== #
+# Host-side paging controller (runs between jitted steps)
+# ===================================================================== #
+@dataclasses.dataclass
+class PagedController:
+    """Source-of-truth host store of every completed page + the device pool
+    management: evict frozen pages, re-pin restored pages, allocate the tail.
+
+    Works on ONE attention layer's pool (engine keeps one per layer) or on
+    stacked (L, ...) arrays — all ops are numpy, page-batched.
+    """
+    cfg: ModelConfig
+    batch: int
+    max_active_pages: int
+    # host store: key (layer, b, global_page) -> (k, v) numpy (page, KVH, hd)
+    store: Dict[Tuple[int, int, int], Tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+    # freeze bookkeeping for *offloaded* pages: key -> dict(c, d, frozen_at)
+    frozen_meta: Dict[Tuple[int, int, int], Dict[str, int]] = \
+        dataclasses.field(default_factory=dict)
+    n_swap_out: int = 0
+    n_swap_in: int = 0
+
+    def tick(self, pool: dict, fstate: dict, step: int,
+             reserve_slots: int = 1) -> Tuple[dict, dict]:
+        """pool: dict of numpy arrays {k, v, page_table, slot_mask};
+        fstate: {c, d, frozen, frozen_at} (all (L, B, P) / page arrays).
+        Decrements offloaded pages' timers, swaps out frozen device pages,
+        swaps expired host pages back into free slots — keeping
+        `reserve_slots` free for the incoming tail page (restores retry
+        next step if the pool is contended)."""
+        k, v = pool["k"], pool["v"]
+        pt, sm = pool["page_table"], pool["slot_mask"]
+        L, B, P = pt.shape
+        frozen = fstate["frozen"]
+        for l in range(L):
+            for b in range(B):
+                # 1) swap out frozen device pages
+                for p in range(P):
+                    if pt[l, b, p] >= 0 and frozen[l, b, p]:
+                        key = (l, b, int(pt[l, b, p]))
+                        self.store[key] = (k[l, b, p].copy(), v[l, b, p].copy())
+                        self.frozen_meta[key] = {
+                            "c": int(fstate["c"][l, b, p]),
+                            "d": int(fstate["d"][l, b, p]),
+                            "frozen_at": int(fstate["frozen_at"][l, b, p]),
+                        }
+                        pt[l, b, p] = -1
+                        sm[l, b, p] = False
+                        for f in ("c", "d", "frozen", "frozen_at"):
+                            fstate[f][l, b, p] = 0
+                        self.n_swap_out += 1
+                # 2) decrement offloaded timers; swap expired pages back in
+                for key in sorted(self.frozen_meta):
+                    kl, kb, gp = key
+                    if kl != l or kb != b:
+                        continue
+                    meta = self.frozen_meta[key]
+                    meta["d"] -= 1
+                    if meta["d"] <= 0:
+                        free = np.nonzero(pt[l, b] < 0)[0]
+                        if len(free) <= reserve_slots:
+                            meta["d"] = 1          # retry next step
+                            continue
+                        p = int(free[0])
+                        kk, vv = self.store[key]
+                        k[l, b, p] = kk
+                        v[l, b, p] = vv
+                        pt[l, b, p] = gp
+                        sm[l, b, p] = True
+                        fstate["c"][l, b, p] = meta["c"]
+                        del self.frozen_meta[key]
+                        # keep host copy (pages are immutable once complete)
+                        self.n_swap_in += 1
+        return pool, fstate
+
+    def alloc_tail(self, pool: dict, global_page: int) -> Optional[np.ndarray]:
+        """Allocate a tail-page slot PER LAYER (layers' freeze patterns
+        diverge, so their free slots do too; the jitted step takes an
+        (L_attn,) tail_slot vector).  Slot must be free across the batch.
+        Returns (L,) int32 or None if any layer's pool is full."""
+        pt = pool["page_table"]
+        L = pt.shape[0]
+        slots = np.full((L,), -1, np.int32)
+        for l in range(L):
+            free = np.nonzero((pt[l] < 0).all(axis=0))[0]
+            if len(free) == 0:
+                return None
+            slots[l] = free[0]
+            pt[l, :, slots[l]] = global_page
+        return slots

@@ -1,0 +1,85 @@
+"""Entropy-Guided Recovery (paper §3.6 — proposed there as future work,
+implemented here as a first-class feature).
+
+A per-sequence escalation ladder SR -> WR -> FR -> RR is driven by output
+entropy: a *spike* (absolute threshold or relative to an EMA baseline)
+escalates one level and applies that level's intervention to the freeze
+state; sustained calm de-escalates.  RR (Rewalk Regeneration) cannot be done
+inside a jitted step — it rewinds generation — so the step only raises
+``rr_request`` and the serving engine performs the rewind (engine.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import FreezeState, full_reset, soft_reset, window_reset
+
+# ladder levels
+CALM, SR, WR, FR, RR = 0, 1, 2, 3, 4
+
+
+class RecoveryState(NamedTuple):
+    ema_entropy: jnp.ndarray   # (B,) f32 — EMA baseline of output entropy
+    level: jnp.ndarray         # (B,) int32 — current escalation level
+    calm_steps: jnp.ndarray    # (B,) int32 — consecutive non-spike steps
+    steps_seen: jnp.ndarray    # (B,) int32 — for EMA warmup
+
+
+def init_recovery_state(batch: int) -> RecoveryState:
+    return RecoveryState(
+        ema_entropy=jnp.zeros((batch,), jnp.float32),
+        level=jnp.zeros((batch,), jnp.int32),
+        calm_steps=jnp.zeros((batch,), jnp.int32),
+        steps_seen=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def token_entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    """Shannon entropy (nats) of the next-token distribution. logits: (B, V)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def recovery_update(
+    rec: RecoveryState,
+    freeze: FreezeState,            # stacked (L, B, S) or flat (B, S)
+    logits: jnp.ndarray,            # (B, V)
+    step: jnp.ndarray,
+    cfg: FreezeConfig,
+) -> Tuple[RecoveryState, FreezeState, dict]:
+    ent = token_entropy(logits)                                   # (B,)
+    warm = rec.steps_seen >= 8
+    spike = warm & (
+        (ent > cfg.entropy_abs_threshold)
+        | (ent > cfg.entropy_rel_factor * jnp.maximum(rec.ema_entropy, 1e-3))
+    )
+    if not cfg.recovery_enabled:
+        spike = jnp.zeros_like(spike)
+
+    level = jnp.where(spike, jnp.minimum(rec.level + 1, RR), rec.level)
+    calm = jnp.where(spike, 0, rec.calm_steps + 1)
+    deescalate = calm >= cfg.calm_steps_to_deescalate
+    level = jnp.where(deescalate & ~spike, jnp.maximum(level - 1, 0), level)
+    calm = jnp.where(deescalate, 0, calm)
+
+    # apply the ladder interventions for sequences spiking at each level
+    freeze = soft_reset(freeze, spike & (level == SR))
+    freeze = window_reset(freeze, spike & (level == WR), step, cfg.recovery_window)
+    freeze = full_reset(freeze, spike & (level >= FR))
+    rr_request = spike & (level == RR)
+    # RR is terminal for the ladder: after requesting a rewalk the escalation
+    # restarts from CALM (prevents a rewind livelock under sustained spikes)
+    level = jnp.where(rr_request, CALM, level)
+
+    # EMA update (only post-update so the spike itself doesn't pollute the
+    # baseline immediately)
+    a = cfg.entropy_ema_decay
+    ema = jnp.where(rec.steps_seen == 0, ent, a * rec.ema_entropy + (1 - a) * ent)
+    new = RecoveryState(ema_entropy=ema, level=level, calm_steps=calm,
+                        steps_seen=rec.steps_seen + 1)
+    info = {"entropy": ent, "spike": spike, "level": level, "rr_request": rr_request}
+    return new, freeze, info

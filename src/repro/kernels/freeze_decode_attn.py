@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: freeze-masked flash-decode attention with fused
+Eq. 2 relevance extraction.
+
+One decode step: q (B, H, hd) attends a contiguous KV cache (B, S, KVH, hd)
+under an active mask (B, S) — frozen / unwritten slots excluded.  The kernel
+is the TPU-native realization of ASR-KF-EGR's "excluded from active
+attention" (paper §3.3 step 2): the grid walks KV blocks; a block with no
+active slot skips all its MXU work (`pl.when`), and the |Q.K| head-mean is
+emitted per slot as the relevance output — the attention pass *is* the
+relevance pass (zero extra HBM traffic vs. the paper's separate scoring).
+
+Block sizes: KV is tiled (block_s, KVH*hd) with block_s a multiple of 128 to
+keep the MXU matmul dims hardware-aligned; q (H, hd) stays VMEM-resident
+across the whole row of KV blocks.  VMEM footprint per step ~=
+block_s*KVH*hd*2*2 (K+V) + H*hd*4*2 (acc) + block_s*4 bytes.
+
+Validated on CPU with interpret=True against repro.kernels.ref (pure jnp);
+compiled path is TPU-only (ops.py dispatches).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref,        # inputs
+            o_ref, rel_ref,                        # outputs
+            m_ref, l_ref, acc_ref,                 # scratch
+            *, kv_heads: int, scale: float):
+    """Grid: (B, S // block_s)."""
+    blk = pl.program_id(1)
+    nblk = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (H, hd)
+    mask = mask_ref[0] != 0                        # (block_s,)
+    H, hd = q.shape
+    G = H // kv_heads
+
+    any_active = jnp.any(mask)
+
+    @pl.when(any_active)
+    def _block():
+        k = k_ref[0].astype(jnp.float32)           # (block_s, KVH, hd)
+        v = v_ref[0].astype(jnp.float32)
+        qg = q.reshape(kv_heads, G, hd)
+        raw = jnp.einsum("kgh,skh->kgs", qg, k)    # (KVH, G, block_s)
+        # fused Eq.2 relevance: mean over all H query heads of |q.k|
+        rel_ref[0, :] = jnp.mean(
+            jnp.abs(raw), axis=(0, 1)).astype(rel_ref.dtype)
+        s = raw * scale
+        s = jnp.where(mask[None, None, :], s, NEG_INF)
+        m_prev = m_ref[...].reshape(kv_heads, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, :], p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[...].reshape(kv_heads, G) * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("kgs,skh->kgh", p, v)
+        acc_prev = acc_ref[...].reshape(kv_heads, G, hd)
+        acc_ref[...] = (acc_prev * corr[..., None] + pv).reshape(H, hd)
+        m_ref[...] = m_new.reshape(H)
+        l_ref[...] = l_new.reshape(H)
+
+    @pl.when(~any_active)
+    def _skipped():
+        # frozen/empty block: no MXU work; relevance of masked slots is 0
+        rel_ref[0, :] = jnp.zeros_like(rel_ref[0, :])
+
+    @pl.when(blk == nblk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l[:, None], 1e-30)
+        o = jnp.where(l[:, None] > 0, o, 0.0)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def freeze_decode_attention(
+    q: jnp.ndarray,           # (B, H, hd)
+    k: jnp.ndarray,           # (B, S, KVH, hd)
+    v: jnp.ndarray,
+    active_mask: jnp.ndarray, # (B, S) bool
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+):
+    """Returns (out (B, H, hd), relevance (B, S) f32)."""
+    B, H, hd = q.shape
+    _, S, KVH, _ = k.shape
+    assert S % block_s == 0, (S, block_s)
+    scale = 1.0 / math.sqrt(hd)
+    grid = (B, S // block_s)
+
+    out, rel = pl.pallas_call(
+        functools.partial(_kernel, kv_heads=KVH, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, KVH, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, block_s, KVH, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, block_s), lambda b, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, block_s), lambda b, s: (b, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, active_mask.astype(jnp.int8))
+    return out, rel

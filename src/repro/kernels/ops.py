@@ -1,0 +1,57 @@
+"""Platform-dispatching jit'd wrappers around the Pallas kernels.
+
+TPU -> compiled pl.pallas_call; CPU/GPU -> the pure-jnp reference path
+(identical semantics; the dry-run lowers the reference path).  Tests force
+the kernel body on CPU with interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import FreezeState
+from repro.kernels import ref
+from repro.kernels.freeze_decode_attn import freeze_decode_attention
+from repro.kernels.paged_decode_attn import paged_decode_attention_kernel
+from repro.kernels.relevance_freeze import relevance_freeze_update
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("force_kernel",))
+def masked_decode_attention(q, k, v, active_mask, force_kernel: bool = False):
+    """(out (B,H,hd), relevance (B,S)) — freeze-masked decode attention."""
+    if _on_tpu():
+        return freeze_decode_attention(q, k, v, active_mask)
+    if force_kernel:
+        return freeze_decode_attention(q, k, v, active_mask, interpret=True)
+    return ref.freeze_decode_attention_ref(q, k, v, active_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("force_kernel",))
+def paged_decode_attention(q, k_pages, v_pages, slot_mask,
+                           force_kernel: bool = False):
+    """(out (B,H,hd), page_relevance (B,P))."""
+    if _on_tpu():
+        return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask)
+    if force_kernel:
+        return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
+                                             interpret=True)
+    return ref.paged_decode_attention_ref(q, k_pages, v_pages, slot_mask)
+
+
+def freeze_state_update(state: FreezeState, relevance, pos, step,
+                        cfg: FreezeConfig, force_kernel: bool = False):
+    """(new FreezeState, active mask) — fused Algorithm 1 pass."""
+    if _on_tpu():
+        return relevance_freeze_update(state, relevance, pos, step, cfg)
+    if force_kernel:
+        return relevance_freeze_update(state, relevance, pos, step, cfg,
+                                       interpret=True)
+    new, info = ref.relevance_freeze_ref(state, relevance, pos, step, cfg)
+    return new, info["active"]

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: paged flash-decode attention over the bounded active
+page pool (the long_500k serving path).
+
+Grid walks (batch, physical page).  Each step loads one page (page_size,
+KVH, hd) of K and V; pages whose slot mask is empty (unallocated, or fully
+frozen awaiting host swap-out) skip their MXU work entirely.  Page-mean
+|Q.K| relevance is emitted fused, feeding the page-granular freeze schedule
+(core.paging.page_freeze_update).
+
+On real TPU the page pool lives in HBM while the frozen store is in host
+memory; the kernel only ever touches the device pool — the bounded-memory
+guarantee of DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref,
+            o_ref, rel_ref,
+            m_ref, l_ref, acc_ref,
+            *, kv_heads: int, scale: float):
+    blk = pl.program_id(1)
+    nblk = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (H, hd)
+    mask = mask_ref[0, 0] != 0                     # (page,)
+    H, hd = q.shape
+    G = H // kv_heads
+    n_act = jnp.sum(mask.astype(jnp.float32))
+
+    @pl.when(n_act > 0)
+    def _page():
+        k = k_ref[0, 0].astype(jnp.float32)        # (page, KVH, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        qg = q.reshape(kv_heads, G, hd)
+        raw = jnp.einsum("kgh,skh->kgs", qg, k)
+        tok_rel = jnp.mean(jnp.abs(raw), axis=(0, 1))          # (page,)
+        rel_ref[0, 0] = (jnp.sum(tok_rel * mask) / n_act).astype(rel_ref.dtype)
+        s = jnp.where(mask[None, None, :], raw * scale, NEG_INF)
+        m_prev = m_ref[...].reshape(kv_heads, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, :], p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[...].reshape(kv_heads, G) * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("kgs,skh->kgh", p, v)
+        acc_prev = acc_ref[...].reshape(kv_heads, G, hd)
+        acc_ref[...] = (acc_prev * corr[..., None] + pv).reshape(H, hd)
+        m_ref[...] = m_new.reshape(H)
+        l_ref[...] = l_new.reshape(H)
+
+    @pl.when(n_act == 0)
+    def _skip():
+        rel_ref[0, 0] = jnp.zeros((), rel_ref.dtype)
+
+    @pl.when(blk == nblk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l[:, None], 1e-30)
+        o = jnp.where(l[:, None] > 0, o, 0.0)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(
+    q: jnp.ndarray,           # (B, H, hd)
+    k_pages: jnp.ndarray,     # (B, P, page, KVH, hd)
+    v_pages: jnp.ndarray,
+    slot_mask: jnp.ndarray,   # (B, P, page) bool
+    *,
+    interpret: bool = False,
+):
+    """Returns (out (B, H, hd), page_relevance (B, P) f32)."""
+    B, H, hd = q.shape
+    _, P, page, KVH, _ = k_pages.shape
+    scale = 1.0 / math.sqrt(hd)
+    grid = (B, P)
+
+    out, rel = pl.pallas_call(
+        functools.partial(_kernel, kv_heads=KVH, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p: (b, 0, 0)),
+            pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p: (b, p, 0, 0, 0)),
+            pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p: (b, p, 0, 0, 0)),
+            pl.BlockSpec((1, 1, page), lambda b, p: (b, p, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, p: (b, p)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, P), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_pages, v_pages, slot_mask.astype(jnp.int8))
+    return out, rel

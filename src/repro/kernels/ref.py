@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth used by the
+shape/dtype sweep tests and by the CPU execution path)."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import FreezeState, freeze_update
+from repro.core.paging import paged_decode_attention as _paged_ref
+from repro.models.layers import decode_attention as _masked_ref
+
+
+def freeze_decode_attention_ref(q, k, v, active_mask):
+    """Oracle for kernels.freeze_decode_attn — (out, relevance (B,S) f32).
+    Matches the kernel's convention that masked slots report relevance 0
+    only when their whole block is inactive; the reference computes exact
+    per-slot |Q.K| means (the kernel sweep compares only active blocks'
+    scores — see tests)."""
+    out, rel = _masked_ref(q, k, v, active_mask)
+    return out, rel.astype(jnp.float32)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, slot_mask):
+    """Oracle for kernels.paged_decode_attn — (out, page_relevance)."""
+    return _paged_ref(q, k_pages, v_pages, slot_mask)
+
+
+def relevance_freeze_ref(state: FreezeState, relevance, pos, step,
+                         cfg: FreezeConfig):
+    """Oracle for kernels.relevance_freeze — vectorized Algorithm 1."""
+    return freeze_update(state, relevance, pos, step, cfg)

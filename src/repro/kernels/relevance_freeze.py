@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused ASR-KF-EGR state update (Algorithm 1 lines
+3–15) — one elementwise VPU pass over the freeze-state arrays.
+
+Used by the non-fused attention path (when relevance comes from a separate
+scoring pass): reads (c, d, frozen, frozen_at, relevance) tiles and writes
+the updated state in place, including the sublinear schedule
+d = floor(sqrt(c)/k), the rolling timer decrement, restoration, and the
+history-window counter decay.  pos/step arrive via scalar prefetch (SMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import FreezeState
+
+
+def _kernel(scalars_ref,                                 # SMEM: [pos, step]
+            c_ref, d_ref, fro_ref, fat_ref, rel_ref,     # inputs
+            c_o, d_o, fro_o, fat_o, act_o,               # outputs
+            *, window: int, tau: float, k_soft: float, history: int,
+            block_s: int):
+    pos = scalars_ref[0]
+    step = scalars_ref[1]
+    sblk = pl.program_id(1)
+    base = sblk * block_s
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+
+    c = c_ref[...]
+    d = d_ref[...]
+    was_frozen = fro_ref[...] != 0
+    fat = fat_ref[...]
+    rel = rel_ref[...]
+
+    exists = idx <= pos
+    in_window = idx > (pos - window)
+    eligible = exists & ~in_window & ~was_frozen
+    flagged = eligible & (rel < tau)
+    c_new = c + flagged.astype(jnp.int32)
+    d_sched = jnp.floor(jnp.sqrt(c_new.astype(jnp.float32)) / k_soft
+                        ).astype(jnp.int32)
+    just_frozen = flagged & (d_sched > 0)
+    frozen_mid = was_frozen | just_frozen
+    d_mid = jnp.where(just_frozen, d_sched, d)
+    fat_new = jnp.where(just_frozen, step, fat)
+
+    d_dec = jnp.where(was_frozen, d_mid - 1, d_mid)
+    restored = was_frozen & (d_dec <= 0)
+    frozen_new = frozen_mid & ~restored
+    d_new = jnp.where(restored, 0, d_dec)
+    decay = (step % history) == (history - 1)
+    c_new = jnp.where(decay, jnp.maximum(c_new - 1, 0), c_new)
+
+    c_o[...] = c_new
+    d_o[...] = d_new
+    fro_o[...] = frozen_new.astype(jnp.int8)
+    fat_o[...] = fat_new
+    act_o[...] = (exists & ~frozen_new).astype(jnp.int8)
+
+
+def relevance_freeze_update(
+    state: FreezeState,          # arrays (B, S)
+    relevance: jnp.ndarray,      # (B, S)
+    pos: jnp.ndarray,            # () int32
+    step: jnp.ndarray,           # () int32
+    cfg: FreezeConfig,
+    *,
+    block_s: int = 1024,
+    interpret: bool = False,
+):
+    """Returns (new FreezeState, active mask (B,S) bool)."""
+    B, S = relevance.shape
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    grid = (B, S // block_s)
+    # index maps receive the scalar-prefetch ref as a trailing argument
+    blk = lambda b, s, *_refs: (b, s)
+    spec_i32 = pl.BlockSpec((1, block_s), blk)
+
+    kernel = functools.partial(
+        _kernel, window=cfg.window, tau=cfg.tau, k_soft=cfg.k_soft,
+        history=cfg.history, block_s=block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[spec_i32] * 5,
+        out_specs=[spec_i32] * 5,
+    )
+    c, d, fro, fat, act = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S), jnp.int32),
+            jax.ShapeDtypeStruct((B, S), jnp.int32),
+            jax.ShapeDtypeStruct((B, S), jnp.int8),
+            jax.ShapeDtypeStruct((B, S), jnp.int32),
+            jax.ShapeDtypeStruct((B, S), jnp.int8),
+        ],
+        interpret=interpret,
+    )(jnp.stack([jnp.asarray(pos, jnp.int32), jnp.asarray(step, jnp.int32)]),
+      state.c, state.d, state.frozen.astype(jnp.int8), state.frozen_at,
+      relevance.astype(jnp.float32))
+    new = FreezeState(c=c, d=d, frozen=fro != 0, frozen_at=fat)
+    return new, act != 0

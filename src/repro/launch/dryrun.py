@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production mesh with 512 placeholder host devices, then extract the
+roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per combo a JSON record lands in experiments/dryrun/, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md §Dry-run/§Roofline.
+
+NOTE the XLA_FLAGS assignment above MUST precede any jax import (jax locks
+the device count at first init) — do not move it.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch import mesh as MESH
+from repro.launch import specs as SP
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims, in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum per-device bytes of collective ops from post-SPMD HLO text.
+
+    Methodology: for each collective we count the RESULT shape bytes (the
+    per-device tensor produced); for reduce-scatter we scale by the group
+    size to approximate the pre-scatter operand (result is 1/group of the
+    input).  '-start' async forms are counted, '-done' skipped (same op).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        if op == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                b *= int(g.group(2))
+            else:
+                gb = _GROUPS_BRACE_RE.search(line)
+                if gb:
+                    b *= len(gb.group(1).split(","))
+        out[op] += b
+        counts[op] += 1
+    out_total = sum(out.values())
+    return {"per_op": out, "counts": counts, "total": out_total}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for training;
+    2*N*D for a forward-only step (prefill) and 2*N_active per decoded
+    token for decode."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+            optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        "chips": n_chips, "multi_pod": multi_pod, "ok": False,
+        "optimized": optimized,
+    }
+    t0 = time.time()
+    try:
+        reason = SP.skip_reason(cfg, shape)
+        if reason:
+            rec["skipped"] = reason
+            rec["ok"] = True
+            return rec
+        bundle = SP.build_step(cfg, shape, mesh, optimized=optimized)
+        rec.update(bundle.static)
+        with mesh:
+            jitted = jax.jit(
+                bundle.fn,
+                in_shardings=bundle.in_shardings,
+                out_shardings=bundle.out_shardings,
+                donate_argnums=bundle.donate_argnums,
+            )
+            lowered = jitted.lower(*bundle.args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["hlo_flops"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+
+        # ---- roofline terms (per-chip program vs per-chip peaks) ---- #
+        coll = rec["collectives"]["total"]
+        rec["roofline"] = {
+            "compute_s": rec["hlo_flops"] / MESH.PEAK_FLOPS_BF16,
+            "memory_s": rec["hlo_bytes"] / MESH.HBM_BW,
+            "collective_s": coll / MESH.ICI_BW,
+        }
+        dom = max(rec["roofline"], key=rec["roofline"].get)
+        rec["bottleneck"] = dom.replace("_s", "")
+        mf = model_flops(cfg, shape)
+        rec["model_flops_total"] = mf
+        rec["model_flops_per_chip"] = mf / n_chips
+        rec["useful_flops_ratio"] = (
+            mf / n_chips / rec["hlo_flops"] if rec["hlo_flops"] else 0.0)
+        rec["ok"] = True
+    except ValueError as e:
+        if str(e).startswith("SKIP:"):
+            rec["skipped"] = str(e)[5:].strip()
+            rec["ok"] = True
+        else:
+            rec["error"] = traceback.format_exc(limit=25)
+    except Exception:
+        rec["error"] = traceback.format_exc(limit=25)
+    finally:
+        rec["total_s"] = round(time.time() - t0, 1)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        tag = ("mp" if multi_pod else "sp") + ("_opt" if optimized else "")
+        (out_dir / f"{arch}__{shape_name}__{tag}.json").write_text(
+            json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs() + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES) + ["all"],
+                    default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf variants (EXPERIMENTS.md)")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    out_dir = Path(args.out)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = ("mp" if mp else "sp") + ("_opt" if args.optimized else "")
+                f = out_dir / f"{arch}__{shape}__{tag}.json"
+                if args.skip_existing and f.exists():
+                    prev = json.loads(f.read_text())
+                    if prev.get("ok"):
+                        print(f"[skip] {arch} {shape} {tag}", flush=True)
+                        continue
+                rec = run_one(arch, shape, mp, out_dir, optimized=args.optimized)
+                status = ("SKIPPED " + rec["skipped"]) if "skipped" in rec \
+                    else ("OK" if rec["ok"] else "FAIL")
+                print(f"[{status:>4}] {arch:24s} {shape:12s} {tag} "
+                      f"{rec.get('total_s', 0):7.1f}s", flush=True)
+                if not rec["ok"]:
+                    n_fail += 1
+                    err = rec.get("error", "")
+                    print("        " + err.strip().splitlines()[-1][:160],
+                          flush=True)
+    print(f"done; failures={n_fail}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""ShapeDtypeStruct input specs + jit-able step builders for every
+(architecture x input-shape) combination — the dry-run's raw material.
+
+Nothing here allocates device memory: states come from jax.eval_shape over
+the real init functions, inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import model as MD
+from repro.models import transformer as T
+from repro.sharding import rules as RU
+from repro.training import optimizer as OPT
+from repro.training import train_step as TS
+
+SDS = jax.ShapeDtypeStruct
+
+# device-resident active-pool budget for the bounded long-context mode
+LONG_CONTEXT_ACTIVE_TOKENS = 65536
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """DESIGN.md §5 skip policy."""
+    if cfg.name.startswith("whisper") and shape.name == "long_500k":
+        return ("enc-dec ASR: no 500k-token decode use-case "
+                "(DESIGN.md §5 skip note)")
+    return None
+
+
+def batch_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        out["frames"] = SDS((b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.multimodal:
+        out["patch_embeds"] = SDS((b, cfg.num_patches, T.PATCH_STUB_DIM),
+                                  jnp.bfloat16)
+    return out
+
+
+def _sds_tree(f, *args, **kw):
+    return jax.eval_shape(f, *args, **kw)
+
+
+class StepBundle(NamedTuple):
+    """Everything needed to lower one (arch x shape) step."""
+    fn: Callable                 # jit-able step function
+    args: Tuple[Any, ...]        # ShapeDtypeStruct args
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    static: Dict[str, Any]       # metadata for reporting
+
+
+def _named(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def params_sds(cfg: ModelConfig):
+    return _sds_tree(lambda: MD.init_params(jax.random.PRNGKey(0), cfg))
+
+
+# HBM budget for keeping inference weights fully resident (tensor-parallel
+# only, no per-step FSDP all-gather); v5e has 16 GB — leave room for cache.
+INFER_RESIDENT_PARAM_BYTES = 10 * 2**30
+
+
+def param_mode(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> str:
+    if shape.kind == "train":
+        return "train"   # FSDP over data (+pod): required for optimizer state
+    sch = MD.schema(cfg)
+    if RU.param_bytes_per_chip(mesh, sch, "infer") <= INFER_RESIDENT_PARAM_BYTES:
+        return "infer"
+    return "train"       # too big: keep FSDP, pay the per-step all-gather
+
+
+# paper reports 55-67% compression -> a 50% bounded-active pool for 32k decode
+OPT_DECODE32K_ACTIVE_TOKENS = 16384
+
+
+def apply_optimizations(cfg: ModelConfig, shape: InputShape,
+                        mesh: Mesh) -> ModelConfig:
+    """§Perf beyond-baseline variants (EXPERIMENTS.md hillclimb log):
+    H1 chunked-remat mamba scan (train), H2 decode activation-gather for
+    models too big for resident tensor-only weights, H4 bounded-active paged
+    pool for decode_32k (the paper's compression applied to resident KV)."""
+    import dataclasses
+    if shape.kind == "train" and cfg.arch_type == "hybrid":
+        cfg = dataclasses.replace(cfg, mamba_scan_chunk=256)
+    if shape.kind == "decode" and param_mode(cfg, shape, mesh) == "train":
+        cfg = dataclasses.replace(cfg, decode_act_gather=True,
+                                  act_model_parts=int(mesh.shape["model"]))
+    if shape.kind in ("train", "prefill"):
+        # H5: pin activation shardings so SPMD never falls back to
+        # "involuntary full rematerialization" (batch replication) inside
+        # scanned mamba/attention bodies
+        cfg = dataclasses.replace(
+            cfg, act_batch_axes=tuple(RU.batch_axes(mesh)),
+            act_model_parts=int(mesh.shape["model"]))
+    return cfg
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               optimized: bool = False) -> StepBundle:
+    reason = skip_reason(cfg, shape)
+    if reason is not None:
+        raise ValueError(f"SKIP: {reason}")
+    if optimized:
+        cfg = apply_optimizations(cfg, shape, mesh)
+    schema = MD.schema(cfg)
+    mode = param_mode(cfg, shape, mesh)
+    p_specs = RU.param_pspecs(mesh, schema, mode)
+    p_sh = _named(mesh, p_specs)
+    params = params_sds(cfg)
+    bdim = RU.batch_dim(mesh, shape.global_batch)
+    vdim = RU.model_dim(mesh, cfg.padded_vocab)
+
+    if shape.kind == "train":
+        return _build_train(cfg, shape, mesh, params, p_sh, p_specs, bdim, vdim)
+    if shape.kind == "prefill":
+        return _build_prefill(cfg, shape, mesh, params, p_sh, bdim, vdim)
+    pageable = not cfg.is_encoder_decoder and T.attn_layer_count(cfg) > 0
+    if shape.name == "long_500k" and pageable:
+        return _build_decode_paged(cfg, shape, mesh, params, p_sh, bdim, vdim,
+                                   LONG_CONTEXT_ACTIVE_TOKENS)
+    if optimized and shape.name == "decode_32k" and pageable:
+        # H4: freeze-bounded active pool — resident KV (and its per-step
+        # traffic) scales with the paper's reported active fraction
+        return _build_decode_paged(cfg, shape, mesh, params, p_sh, bdim, vdim,
+                                   OPT_DECODE32K_ACTIVE_TOKENS)
+    return _build_decode(cfg, shape, mesh, params, p_sh, bdim, vdim)
+
+
+def _batch_shardings(cfg, shape, mesh, bdim):
+    sh = {"tokens": NamedSharding(mesh, P(bdim, None))}
+    if cfg.is_encoder_decoder:
+        sh["frames"] = NamedSharding(mesh, P(bdim, None, None))
+    if cfg.multimodal:
+        sh["patch_embeds"] = NamedSharding(mesh, P(bdim, None, None))
+    return sh
+
+
+def _build_train(cfg, shape, mesh, params, p_sh, p_specs, bdim, vdim):
+    batch = batch_inputs(cfg, shape)
+    logits_pspec = P(bdim, None, vdim)
+
+    def step(state, batch):
+        return TS.train_step(state, batch, cfg, logits_pspec=logits_pspec)
+
+    opt_sds = _sds_tree(lambda: OPT.init(params))
+    state = TS.TrainState(params=params, opt=opt_sds)
+    opt_sh = OPT.AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=p_sh, v=p_sh)
+    state_sh = TS.TrainState(params=p_sh, opt=opt_sh)
+    metrics_sh = None
+    return StepBundle(
+        fn=step,
+        args=(state, batch),
+        in_shardings=(state_sh, _batch_shardings(cfg, shape, mesh, bdim)),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+        static={"kind": "train"},
+    )
+
+
+def _build_prefill(cfg, shape, mesh, params, p_sh, bdim, vdim):
+    batch = batch_inputs(cfg, shape)
+    state = _sds_tree(lambda: MD.init_decode_state(
+        cfg, shape.global_batch, shape.seq_len))
+    st_specs = RU.decode_state_pspecs(cfg, mesh, state)
+    st_sh = _named(mesh, st_specs)
+
+    def step(params, batch, state):
+        return MD.prefill(params, cfg, batch, state)
+
+    return StepBundle(
+        fn=step,
+        args=(params, batch, state),
+        in_shardings=(p_sh, _batch_shardings(cfg, shape, mesh, bdim), st_sh),
+        out_shardings=(NamedSharding(mesh, P(bdim, vdim)), st_sh),
+        donate_argnums=(2,),
+        static={"kind": "prefill"},
+    )
+
+
+def _build_decode(cfg, shape, mesh, params, p_sh, bdim, vdim):
+    b = shape.global_batch
+    state = _sds_tree(lambda: MD.init_decode_state(cfg, b, shape.seq_len))
+    st_specs = RU.decode_state_pspecs(cfg, mesh, state)
+    st_sh = _named(mesh, st_specs)
+    token = SDS((b,), jnp.int32)
+    scalar = SDS((), jnp.int32)
+
+    def step(params, token, pos, stp, state):
+        return MD.decode_step(params, cfg, token, pos, stp, state)
+
+    rep = NamedSharding(mesh, P())
+    return StepBundle(
+        fn=step,
+        args=(params, token, scalar, scalar, state),
+        in_shardings=(p_sh, NamedSharding(mesh, P(bdim)), rep, rep, st_sh),
+        out_shardings=(NamedSharding(mesh, P(bdim, vdim)), st_sh, None),
+        donate_argnums=(4,),
+        static={"kind": "decode"},
+    )
+
+
+def _build_decode_paged(cfg, shape, mesh, params, p_sh, bdim, vdim,
+                        active_tokens: int = LONG_CONTEXT_ACTIVE_TOKENS):
+    b = shape.global_batch
+    pages = active_tokens // cfg.freeze.page_size
+    state = _sds_tree(lambda: MD.init_paged_decode_state(cfg, b, pages))
+    st_specs = RU.decode_state_pspecs(cfg, mesh, state)
+    st_sh = _named(mesh, st_specs)
+    token = SDS((b,), jnp.int32)
+    scalar = SDS((), jnp.int32)
+
+    def step(params, token, pos, stp, tail, state):
+        return MD.decode_step_paged(params, cfg, token, pos, stp, tail, state)
+
+    rep = NamedSharding(mesh, P())
+    return StepBundle(
+        fn=step,
+        args=(params, token, scalar, scalar, scalar, state),
+        in_shardings=(p_sh, NamedSharding(mesh, P(bdim)), rep, rep, rep, st_sh),
+        out_shardings=(NamedSharding(mesh, P(bdim, vdim)), st_sh, None),
+        donate_argnums=(5,),
+        static={"kind": "decode_paged",
+                "active_pages": pages,
+                "active_tokens": active_tokens},
+    )

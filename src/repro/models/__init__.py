@@ -1,0 +1,8 @@
+from repro.models import model
+from repro.models.model import (decode_step, decode_step_paged, init_decode_state,
+                                init_paged_decode_state, init_params, prefill,
+                                schema, train_logits)
+
+__all__ = ["model", "decode_step", "decode_step_paged", "init_decode_state",
+           "init_paged_decode_state", "init_params", "prefill", "schema",
+           "train_logits"]

@@ -1,0 +1,337 @@
+"""Shared model building blocks.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every module is
+described once by a *schema*: ``name -> ParamSpec(shape, logical_axes)``.
+Init and PartitionSpec derivation both walk the schema, so sharding can never
+drift from parameter structure.  Logical axes ("embed", "heads", "ff",
+"vocab", "expert", ...) are mapped to physical mesh axes in
+``repro.sharding.rules`` with divisibility fallbacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, one per dim
+    scale: float = 1.0                # stddev multiplier over 1/sqrt(fan_in)
+    dtype: Optional[str] = None       # override (e.g. f32 for norms / A_log)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_from_schema(key: jax.Array, schema: PyTree, dtype: jnp.dtype) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=is_param_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        d = jnp.dtype(spec.dtype) if spec.dtype else dtype
+        if len(spec.shape) == 0 or spec.scale == 0.0:
+            out.append(jnp.zeros(spec.shape, d))
+            continue
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        out.append((jax.random.normal(k, spec.shape, jnp.float32) * std).astype(d))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def ones_like_schema_entry(spec: ParamSpec, dtype) -> jnp.ndarray:
+    d = jnp.dtype(spec.dtype) if spec.dtype else dtype
+    return jnp.ones(spec.shape, d)
+
+
+def stack_schema(schema: PyTree, n: int) -> PyTree:
+    """Add a leading stacked-layer dim (unsharded) to every ParamSpec."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.axes, s.scale, s.dtype),
+        schema,
+        is_leaf=is_param_spec,
+    )
+
+
+# ===================================================================== #
+# Activation sharding constraints (§Perf H5)
+# ===================================================================== #
+def constrain(x: jnp.ndarray, cfg, dims: str) -> jnp.ndarray:
+    """Pin an activation's sharding: dims is one char per axis —
+    'b' batch (over cfg.act_batch_axes), 'm' model (if divisible), '.' none.
+    No-op when cfg.act_batch_axes is unset (baseline mode)."""
+    if not getattr(cfg, "act_batch_axes", ()):
+        return x
+    from jax.sharding import PartitionSpec as P
+    bax = cfg.act_batch_axes
+    b = bax if len(bax) > 1 else bax[0]
+    spec = []
+    for d, s in zip(dims, x.shape):
+        if d == "b":
+            spec.append(b)
+        elif d == "m" and cfg.act_model_parts and s % cfg.act_model_parts == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def dag(x: jnp.ndarray, cfg, dims: str) -> jnp.ndarray:
+    """Decode-act-gather (§Perf H2) constraint: batch replicated, 'm' dims
+    sharded over 'model', 'f' (feature/embed) dims sharded over the fsdp
+    axes — so 2-D-sharded weights contract against local activation shards
+    and never move.  No-op unless cfg.decode_act_gather."""
+    if not getattr(cfg, "decode_act_gather", False) \
+            or not getattr(cfg, "act_model_parts", 0):
+        return x
+    from jax.sharding import PartitionSpec as P
+    parts = cfg.act_model_parts
+    bax = getattr(cfg, "act_batch_axes", ()) or ("data",)
+    f_entry = bax if len(bax) > 1 else bax[0]
+    f_parts = parts * (2 if len(bax) > 1 else 1)   # pod axis size is 2
+    spec = []
+    for d, s in zip(dims, x.shape):
+        if d == "m" and s % parts == 0:
+            spec.append("model")
+        elif d == "f" and s % f_parts == 0:
+            spec.append(f_entry)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ===================================================================== #
+# Norms
+# ===================================================================== #
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+def group_norm_heads(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Per-head group norm for RWKV output. x: (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+# ===================================================================== #
+# RoPE
+# ===================================================================== #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    if angles.ndim == 2:                                       # (S, hd/2)
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ===================================================================== #
+# Chunked (flash-style) attention — pure JAX, used on CPU & in dry-runs.
+# The Pallas kernels in repro.kernels are the TPU-target equivalents.
+# ===================================================================== #
+def flash_attention(
+    q: jnp.ndarray,                 # (B, Sq, H, hd)
+    k: jnp.ndarray,                 # (B, Skv, KVH, hd)
+    v: jnp.ndarray,                 # (B, Skv, KVH, hd)
+    *,
+    causal: bool,
+    q_offset: int = 0,              # global position of q[0] (for causal masks)
+    kv_mask: Optional[jnp.ndarray] = None,   # (B, Skv) bool; False = masked out
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Numerically-stable chunked attention.  Never materializes the full
+    (Sq, Skv) score matrix: outer lax.map over q chunks, inner lax.scan over
+    kv chunks with running (max, denom, acc)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nkv = -(-Skv // kv_chunk)
+    # pad to multiples
+    Sq_p, Skv_p = nq * q_chunk, nkv * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    kvm = jnp.ones((B, Skv), dtype=bool) if kv_mask is None else kv_mask
+    kvm = jnp.pad(kvm, ((0, 0), (0, Skv_p - Skv)), constant_values=False)
+
+    # (B, nkv, ckv, KVH, hd)
+    kb = kp.reshape(B, nkv, kv_chunk, KVH, hd)
+    vb = vp.reshape(B, nkv, kv_chunk, KVH, hd)
+    mb = kvm.reshape(B, nkv, kv_chunk)
+
+    def one_q_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, axis=1)
+        qc = qc.reshape(B, q_chunk, KVH, G, hd)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m_run, l_run, acc = carry
+            kc, vc, mc, kv_start = inputs
+            kv_pos = kv_start + jnp.arange(kv_chunk)
+            # scores: (B, q_chunk, KVH, G, ckv)
+            s = jnp.einsum("bqkgh,bckh->bqkgc", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            mask = mc[:, None, None, None, :]
+            if causal:
+                mask = mask & (kv_pos[None, None, None, None, :]
+                               <= q_pos[None, :, None, None, None])
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckh->bqkgh", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, KVH, G), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, KVH, G), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, KVH, G, hd), jnp.float32)
+        kv_starts = jnp.arange(nkv) * kv_chunk
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), mb.swapaxes(0, 1), kv_starts))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(B, q_chunk, H, hd)
+
+    outs = jax.lax.map(one_q_chunk, jnp.arange(nq))            # (nq, B, qc, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq_p, H, hd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,                # (B, H, hd) — single new token
+    k_cache: jnp.ndarray,          # (B, S, KVH, hd)
+    v_cache: jnp.ndarray,          # (B, S, KVH, hd)
+    active_mask: jnp.ndarray,      # (B, S) bool — True = participates
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-step decode attention over a (possibly frozen-masked) cache.
+
+    Returns (out (B,H,hd), relevance (B,S)) where relevance is the paper's
+    Eq. 2 score  s_j = (1/H) sum_h |q_h . k_jh|  — fused with the attention
+    score computation (no second pass over K).
+    """
+    B, H, hd = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    qf = q.reshape(B, KVH, G, hd)
+    # accumulate in f32 WITHOUT materializing an f32 copy of the cache
+    # (preferred_element_type: bf16 reads, f32 MXU accumulation) — §Perf H3
+    raw = jnp.einsum("bkgh,bskh->bkgs", qf, k_cache,
+                     preferred_element_type=jnp.float32)       # (B,KVH,G,S)
+    relevance = jnp.mean(jnp.abs(raw), axis=(1, 2))            # Eq. 2, mean over H
+    s = raw / math.sqrt(hd)
+    s = jnp.where(active_mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (no active kv) -> zeros, not NaN
+    any_active = jnp.any(active_mask, axis=-1)[:, None, None, None]
+    p = jnp.where(any_active, p, 0.0)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype), relevance
+
+
+# ===================================================================== #
+# GQA attention module
+# ===================================================================== #
+def attention_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, kvh, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, kvh, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed")),
+    }
+
+
+def attention_qkv(p, x, positions, theta):
+    """x: (B,S,D) -> q (B,S,H,hd), k,v (B,S,KVH,hd) with RoPE applied
+    (theta=None skips RoPE, e.g. whisper's learned/sinusoidal positions)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if theta is not None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal position embeddings. positions: (...,) -> (..., d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def attention_out(p, o):
+    """o: (B,S,H,hd) or (B,H,hd) -> (..., D)."""
+    return jnp.einsum("...hk,hkd->...d", o, p["wo"])
+
+
+# ===================================================================== #
+# SwiGLU MLP
+# ===================================================================== #
+def mlp_schema(cfg: ModelConfig, act: str = "swiglu") -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    s = {
+        "w_up": ParamSpec((d, f), ("embed", "ff")),
+        "w_down": ParamSpec((f, d), ("ff", "embed")),
+    }
+    if act == "swiglu":
+        s["w_gate"] = ParamSpec((d, f), ("embed", "ff"))
+    return s
+
+
+def mlp_forward(p, x, cfg=None):
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if cfg is not None:
+        up = dag(up, cfg, "." * (up.ndim - 1) + "m")
+    if "w_gate" in p:
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        if cfg is not None:
+            gate = dag(gate, cfg, "." * (gate.ndim - 1) + "m")
+        up = up * jax.nn.silu(gate)
+    else:
+        up = jax.nn.gelu(up)
+    out = jnp.einsum("...f,fd->...d", up, p["w_down"])
+    return dag(out, cfg, "." * (out.ndim - 1) + "f") if cfg is not None else out

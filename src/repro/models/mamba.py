@@ -1,0 +1,143 @@
+"""Mamba (selective SSM) block — used by the Jamba hybrid architecture.
+
+Prefill/training runs the selective scan over time with lax.scan (the
+TPU-friendly formulation; no materialized (S, d_inner, d_state) tensor).
+Decode is a single recurrent update over (conv_state, ssm_state) — O(1)
+memory in sequence length, which is why hybrid archs run long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec
+
+
+def mamba_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    r = cfg.dt_rank
+    k = cfg.mamba_d_conv
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ff")),
+        "conv_w": ParamSpec((k, di), (None, "ff")),
+        "conv_b": ParamSpec((di,), ("ff",), scale=0.0),
+        "x_proj": ParamSpec((di, r + 2 * n), ("ff", None)),
+        "dt_proj": ParamSpec((r, di), (None, "ff")),
+        "dt_bias": ParamSpec((di,), ("ff",), scale=0.0, dtype="float32"),
+        "A_log": ParamSpec((di, n), ("ff", None), dtype="float32"),
+        "D": ParamSpec((di,), ("ff",), scale=0.0, dtype="float32"),
+        "out_proj": ParamSpec((di, d), ("ff", "embed")),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def _ssm_params(p, xc, cfg):
+    """xc: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    n, r = cfg.mamba_d_state, cfg.dt_rank
+    dbc = jnp.einsum("...i,ij->...j", xc, p["x_proj"])
+    dt, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jnp.einsum("...r,ri->...i", dt, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_forward_with_state(
+    p, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward. x: (B, S, D) -> ((B, S, D), final state)."""
+    from repro.models.layers import constrain
+    B, S, D = x.shape
+    k = cfg.mamba_d_conv
+    xz = constrain(jnp.einsum("bsd,de->bse", x, p["in_proj"]), cfg, "b.m")
+    xr, z = jnp.split(xz, 2, axis=-1)                           # (B,S,di)
+    # causal depthwise conv as sum of shifts (k is tiny)
+    xc = jnp.zeros_like(xr)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(xr, ((0, 0), (shift, 0), (0, 0)))[:, :S]
+        xc = xc + xi * p["conv_w"][i]
+    xc = constrain(jax.nn.silu(xc + p["conv_b"]), cfg, "b.m")
+    dt, Bm, Cm = _ssm_params(p, xc, cfg)                        # (B,S,di),(B,S,n)
+    dt = constrain(dt, cfg, "b.m")
+    Bm = constrain(Bm, cfg, "b..")
+    Cm = constrain(Cm, cfg, "b..")
+    A = -jnp.exp(p["A_log"])                                    # (di,n)
+
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp                              # (B,di),(B,di),(B,n)
+        dA = jnp.exp(dt_t[..., None] * A)                       # (B,di,n)
+        dBx = dt_t[..., None] * B_t[:, None, :] * xc_t.astype(jnp.float32)[..., None]
+        h = constrain(dA * h + dBx, cfg, "bm.")
+        y = jnp.einsum("bin,bn->bi", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, xr.shape[-1], cfg.mamba_d_state), jnp.float32)
+    xs = (constrain(xc.swapaxes(0, 1), cfg, ".bm"),
+          constrain(dt.swapaxes(0, 1), cfg, ".bm"),
+          constrain(Bm.swapaxes(0, 1), cfg, ".b."),
+          constrain(Cm.swapaxes(0, 1), cfg, ".b."))
+    chunk = cfg.mamba_scan_chunk
+    if chunk and S > chunk and S % chunk == 0:
+        # §Perf H1: remat the scan in time chunks — the backward pass only
+        # keeps carries at chunk boundaries (S/chunk of them) instead of all
+        # S per-step (B, di, d_state) carries, trading ~1 extra forward
+        # recompute of each chunk for an S/chunk-fold activation-memory cut.
+        n_chunks = S // chunk
+        xs_c = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_body(h, xs_chunk):
+            return jax.lax.scan(step, h, xs_chunk)
+
+        h_last, ys = jax.lax.scan(chunk_body, h0, xs_c)
+        ys = ys.reshape((S,) + ys.shape[2:])
+    else:
+        h_last, ys = jax.lax.scan(step, h0, xs)                 # (S,B,di)
+    y = constrain(ys.swapaxes(0, 1), cfg, "b.m").astype(x.dtype)
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = constrain(jnp.einsum("bsi,id->bsd", y, p["out_proj"]), cfg, "b..")
+    kc = cfg.mamba_d_conv
+    conv_state = xr[:, -(kc - 1):] if S >= kc - 1 else jnp.pad(
+        xr, ((0, 0), (kc - 1 - S, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssm": h_last}
+
+
+def mamba_forward(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return mamba_forward_with_state(p, x, cfg)[0]
+
+
+def mamba_decode(
+    p, x: jnp.ndarray, state: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode. x: (B, D) -> (y (B, D), new state)."""
+    from repro.models.layers import dag
+    k = cfg.mamba_d_conv
+    xz = dag(jnp.einsum("bd,de->be", x, p["in_proj"]), cfg, ".m")
+    xr, z = jnp.split(xz, 2, axis=-1)                           # (B,di)
+    window = jnp.concatenate([state["conv"], xr[:, None]], axis=1)  # (B,k,di)
+    xc = jnp.einsum("bki,ki->bi", window, p["conv_w"])
+    xc = jax.nn.silu(xc + p["conv_b"])
+    dt, Bm, Cm = _ssm_params(p, xc, cfg)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    dBx = dt[..., None] * Bm[:, None, :] * xc.astype(jnp.float32)[..., None]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bin,bn->bi", h, Cm).astype(x.dtype)
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = dag(jnp.einsum("bi,id->bd", y, p["out_proj"]), cfg, ".f")
+    return out, {"conv": window[:, 1:], "ssm": h}

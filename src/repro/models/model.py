@@ -1,0 +1,73 @@
+"""Unified model API over the zoo: build once from a ModelConfig, then call
+init / train_logits / prefill / decode_step / decode_step_paged regardless of
+family.  ``--arch <id>`` selects the config; this module selects the
+implementation (decoder-only transformer stack vs whisper enc-dec).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.is_encoder_decoder
+
+
+def schema(cfg: ModelConfig):
+    return W.schema(cfg) if is_encdec(cfg) else T.schema(cfg)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    return W.init_params(key, cfg) if is_encdec(cfg) else T.init_params(key, cfg)
+
+
+def train_logits(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                 remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """batch: tokens (B,S) [+ frames (B,F,D) | patch_embeds (B,P,E)].
+    Returns (logits (B,S,V), moe aux loss)."""
+    if is_encdec(cfg):
+        logits = W.train_forward(params, cfg, batch["frames"], batch["tokens"])
+        return logits, jnp.zeros((), jnp.float32)
+    return T.lm_forward(params, cfg, batch["tokens"],
+                        batch.get("patch_embeds"), remat=remat)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    if is_encdec(cfg):
+        return W.init_state(cfg, batch, max_seq)
+    return T.init_decode_state(cfg, batch, max_seq)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], state):
+    """Returns (last-token logits, filled state)."""
+    if is_encdec(cfg):
+        enc = W.encode(params, cfg, batch["frames"])
+        return W.decoder_prefill(params, cfg, batch["tokens"], enc, state)
+    return T.lm_prefill(params, cfg, batch["tokens"], state,
+                        batch.get("patch_embeds"))
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, step, state,
+                freeze_cfg=None, enable_freeze: bool = True):
+    if is_encdec(cfg):
+        return W.decode_step(params, cfg, token, pos, step, state,
+                             freeze_cfg, enable_freeze)
+    return T.lm_decode_step(params, cfg, token, pos, step, state,
+                            freeze_cfg, enable_freeze)
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, max_active_pages: int):
+    assert not is_encdec(cfg), "paged long-context mode is decoder-only"
+    return T.init_paged_decode_state(cfg, batch, max_active_pages)
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, pos, step, tail_slot,
+                      state, freeze_cfg=None):
+    return T.lm_decode_step_paged(params, cfg, token, pos, step, tail_slot,
+                                  state, freeze_cfg)

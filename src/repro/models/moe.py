@@ -1,0 +1,126 @@
+"""Capacity-based top-k Mixture-of-Experts FFN (GShard/Switch style).
+
+Expert weights carry the logical "expert" axis -> sharded over the tensor
+('model') mesh axis; the dispatch/combine einsums between batch-sharded
+activations and expert-sharded tensors lower to all-to-all under pjit.
+
+The sequence is processed in groups of ``group_size`` tokens via lax.scan so
+the one-hot dispatch tensor (B, g, E, C) of a single group is the peak
+routing footprint; per-token routing is identical to ungrouped GShard with
+per-group capacity.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec
+
+
+def moe_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "w_gate": ParamSpec((e, d, f), ("expert", "embed", None)),
+        "w_up": ParamSpec((e, d, f), ("expert", "embed", None)),
+        "w_down": ParamSpec((e, f, d), ("expert", None, "embed")),
+    }
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = tokens_per_group * cfg.experts_per_token * cfg.capacity_factor
+    return max(1, int(-(-c // cfg.num_experts)))
+
+
+def route(probs: jnp.ndarray, cfg: ModelConfig, C: int):
+    """Top-k routing with per-expert capacity.
+
+    probs: (B, g, E) router softmax.
+    Returns (dispatch (B,g,E,C) float {0,1}, combine (B,g,E,C) float,
+             aux load-balance loss scalar).
+    """
+    B, g, E = probs.shape
+    K = cfg.experts_per_token
+    combine = jnp.zeros((B, g, E, C), jnp.float32)
+    dispatch = jnp.zeros((B, g, E, C), jnp.float32)
+    remaining = probs
+    prev_count = jnp.zeros((B, 1, E), jnp.float32)
+    gates_sum = jnp.zeros((B, g), jnp.float32)
+    first_onehot = None
+    for _ in range(K):
+        idx = jnp.argmax(remaining, axis=-1)                    # (B,g)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # (B,g,E)
+        if first_onehot is None:
+            first_onehot = onehot
+        gate = jnp.sum(probs * onehot, axis=-1)                 # (B,g)
+        # position of each token within its expert's capacity buffer
+        pos_in_expert = (jnp.cumsum(onehot, axis=1) - onehot) + prev_count
+        prev_count = prev_count + jnp.sum(onehot, axis=1, keepdims=True)
+        pos = jnp.sum(pos_in_expert * onehot, axis=-1)          # (B,g)
+        keep = pos < C                                          # capacity drop
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        full = onehot[..., None] * pos_oh[..., None, :]         # (B,g,E,C)
+        full = full * keep[..., None, None]
+        dispatch = jnp.maximum(dispatch, full)
+        combine = combine + gate[..., None, None] * full
+        gates_sum = gates_sum + gate * keep
+        remaining = remaining * (1.0 - onehot)
+    combine = combine / jnp.maximum(gates_sum[..., None, None], 1e-9)
+    # Switch aux loss: E * sum_e mean(probs_e) * mean(top1 == e)
+    me = jnp.mean(probs, axis=(0, 1))
+    fe = jnp.mean(first_onehot, axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    return dispatch, combine, aux
+
+
+def _moe_group(p, xg: jnp.ndarray, cfg: ModelConfig, C: int):
+    """One token group. xg: (B, g, D) -> (y (B,g,D), aux)."""
+    from repro.models.layers import dag
+    logits = jnp.einsum("bsd,de->bse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    dispatch, combine, aux = route(probs, cfg, C)
+    dispatch = dispatch.astype(xg.dtype)
+    combine = combine.astype(xg.dtype)
+    # dispatch -> (E, B, C, D): expert axis model-sharded => all-to-all
+    xd = dag(jnp.einsum("bsec,bsd->ebcd", dispatch, xg), cfg, "m...")
+    up = dag(jnp.einsum("ebcd,edf->ebcf", xd, p["w_up"]), cfg, "m...")
+    gate = dag(jnp.einsum("ebcd,edf->ebcf", xd, p["w_gate"]), cfg, "m...")
+    h = up * jax.nn.silu(gate)
+    yd = dag(jnp.einsum("ebcf,efd->ebcd", h, p["w_down"]), cfg, "m...")
+    y = dag(jnp.einsum("bsec,ebcd->bsd", combine, yd), cfg, "..f")
+    return y, aux
+
+
+def moe_forward(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                     # (B, S, D)
+    cfg: ModelConfig,
+    group_size: int = 256,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,D), aux_loss scalar)."""
+    B, S, D = x.shape
+    g = min(group_size, S)
+    if S % g:                                # pad sequence to group multiple
+        pad = g - S % g
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    else:
+        pad, xp = 0, x
+    n_groups = xp.shape[1] // g
+    C = capacity(g, cfg)
+    if n_groups == 1:
+        y, aux = _moe_group(p, xp, cfg, C)
+        return y[:, :S], aux
+
+    xs = xp.reshape(B, n_groups, g, D).swapaxes(0, 1)           # (N,B,g,D)
+
+    def step(aux_acc, xg):
+        y, aux = _moe_group(p, xg, cfg, C)
+        return aux_acc + aux, y
+
+    aux_total, ys = jax.lax.scan(step, jnp.zeros((), jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(B, n_groups * g, D)[:, :S]
+    return y, aux_total / n_groups

@@ -1,0 +1,164 @@
+"""RWKV-6 "Finch" block — attention-free, data-dependent decay linear
+attention [arXiv:2404.05892].
+
+State per layer is O(1) in sequence length: two token-shift carries plus the
+per-head WKV matrix state S in R^{hd x hd}.  ASR-KF-EGR is inapplicable here
+(no KV cache) — see DESIGN.md §6; the arch is served without the technique.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, group_norm_heads
+
+_LORA = 64   # rank of the data-dependent decay LoRA
+
+
+def rwkv_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "tm": {  # time mixing
+            "ln": ParamSpec((d,), (None,), scale=0.0),
+            # token-shift interpolation factors (static part of ddlerp)
+            "mu_x": ParamSpec((d,), (None,), scale=0.0),
+            "mu_w": ParamSpec((d,), (None,), scale=0.0),
+            "mu_k": ParamSpec((d,), (None,), scale=0.0),
+            "mu_v": ParamSpec((d,), (None,), scale=0.0),
+            "mu_r": ParamSpec((d,), (None,), scale=0.0),
+            "mu_g": ParamSpec((d,), (None,), scale=0.0),
+            # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+            "w0": ParamSpec((d,), (None,), scale=0.0, dtype="float32"),
+            "wA": ParamSpec((d, _LORA), ("embed", None)),
+            "wB": ParamSpec((_LORA, d), (None, "embed")),
+            "Wr": ParamSpec((d, d), ("embed", "heads")),
+            "Wk": ParamSpec((d, d), ("embed", "heads")),
+            "Wv": ParamSpec((d, d), ("embed", "heads")),
+            "Wg": ParamSpec((d, d), ("embed", "heads")),
+            "Wo": ParamSpec((d, d), ("heads", "embed")),
+            "u": ParamSpec((h, hd), (None, None), scale=0.0, dtype="float32"),
+            "gn": ParamSpec((h, hd), (None, None), scale=0.0),
+        },
+        "cm": {  # channel mixing
+            "ln": ParamSpec((d,), (None,), scale=0.0),
+            "mu_k": ParamSpec((d,), (None,), scale=0.0),
+            "mu_r": ParamSpec((d,), (None,), scale=0.0),
+            "Wk": ParamSpec((d, f), ("embed", "ff")),
+            "Wv": ParamSpec((f, d), ("ff", "embed")),
+            "Wr": ParamSpec((d, d), ("embed", "heads")),
+        },
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "tm_x": jnp.zeros((batch, d), dtype),
+        "cm_x": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _tm_projections(p, x, x_prev, cfg):
+    """Shared between forward/decode. x, x_prev: (..., D)."""
+    hd = cfg.rwkv_head_dim
+    h = cfg.d_model // hd
+    r = jnp.einsum("...d,de->...e", _lerp(x, x_prev, p["mu_r"]), p["Wr"])
+    k = jnp.einsum("...d,de->...e", _lerp(x, x_prev, p["mu_k"]), p["Wk"])
+    v = jnp.einsum("...d,de->...e", _lerp(x, x_prev, p["mu_v"]), p["Wv"])
+    g = jnp.einsum("...d,de->...e", _lerp(x, x_prev, p["mu_g"]), p["Wg"])
+    xw = _lerp(x, x_prev, p["mu_w"]).astype(jnp.float32)
+    w = p["w0"] + jnp.einsum(
+        "...r,rd->...d", jnp.tanh(jnp.einsum("...d,dr->...r", xw, p["wA"].astype(jnp.float32))),
+        p["wB"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w))                                    # decay in (0,1)
+    split = lambda t: t.reshape(*t.shape[:-1], h, hd)
+    return split(r), split(k), split(v), g, split(w)
+
+
+def _wkv_step(S, r, k, v, w, u):
+    """S: (B,H,hd,hd); r,k,v,w: (B,H,hd); u: (H,hd) bonus.
+    Returns (S_new, y (B,H,hd))."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    kv = kf[..., :, None] * vf[..., None, :]                    # outer(k, v)
+    y = jnp.einsum("bhij,bhi->bhj", S + u[None, :, :, None] * kv, rf)
+    S_new = wf[..., :, None] * S + kv
+    return S_new, y
+
+
+def _tm_output(p, y, g, cfg, eps):
+    B = y.shape[0]
+    y = group_norm_heads(y, 1.0 + p["gn"], eps).astype(g.dtype)
+    y = y.reshape(*g.shape[:-1], cfg.d_model) * jax.nn.silu(g)
+    return jnp.einsum("...e,ed->...d", y, p["Wo"])
+
+
+def _cm(p, x, x_prev):
+    k = jnp.einsum("...d,df->...f", _lerp(x, x_prev, p["mu_k"]), p["Wk"])
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("...f,fd->...d", k, p["Wv"])
+    r = jnp.einsum("...d,de->...e", _lerp(x, x_prev, p["mu_r"]), p["Wr"])
+    return jax.nn.sigmoid(r) * v
+
+
+def _shift(x):
+    """Token shift: x_prev[t] = x[t-1], zeros at t=0. x: (B,S,D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv_forward_with_state(
+    p, x: jnp.ndarray, cfg: ModelConfig, eps: float
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence block forward (time-mix + channel-mix, residuals in).
+    Also returns the final recurrent state for decode continuation."""
+    from repro.models.layers import rms_norm  # RMS for uniformity
+    B, S, D = x.shape
+    tm, cm = p["tm"], p["cm"]
+    xn = rms_norm(x, 1.0 + tm["ln"], eps)
+    r, k, v, g, w = _tm_projections(tm, xn, _shift(xn), cfg)
+
+    def step(S_c, inp):
+        r_t, k_t, v_t, w_t = inp
+        return _wkv_step(S_c, r_t, k_t, v_t, w_t, tm["u"])
+
+    hd = cfg.rwkv_head_dim
+    h = D // hd
+    S0 = jnp.zeros((B, h, hd, hd), jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    S_last, ys = jax.lax.scan(step, S0, xs)                     # (S,B,H,hd)
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    x = x + _tm_output(tm, y, g, cfg, eps)
+    xn2 = rms_norm(x, 1.0 + cm["ln"], eps)
+    x = x + _cm(cm, xn2, _shift(xn2))
+    state = {"tm_x": xn[:, -1], "cm_x": xn2[:, -1], "wkv": S_last}
+    return x, state
+
+
+def rwkv_forward(p, x: jnp.ndarray, cfg: ModelConfig, eps: float) -> jnp.ndarray:
+    return rwkv_forward_with_state(p, x, cfg, eps)[0]
+
+
+def rwkv_decode(
+    p, x: jnp.ndarray, state: Dict[str, jnp.ndarray], cfg: ModelConfig, eps: float
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode. x: (B, D)."""
+    from repro.models.layers import rms_norm
+    tm, cm = p["tm"], p["cm"]
+    xn = rms_norm(x, 1.0 + tm["ln"], eps)
+    r, k, v, g, w = _tm_projections(tm, xn, state["tm_x"], cfg)
+    S_new, y = _wkv_step(state["wkv"], r, k, v, w, tm["u"])
+    x = x + _tm_output(tm, y.astype(x.dtype), g, cfg, eps)
+    xn2 = rms_norm(x, 1.0 + cm["ln"], eps)
+    x = x + _cm(cm, xn2, state["cm_x"])
+    return x, {"tm_x": xn, "cm_x": xn2, "wkv": S_new}

@@ -1,0 +1,637 @@
+"""Decoder-only LM assembly covering dense / GQA / MQA / MoE / VLM-backbone
+and the Jamba-style hybrid (Mamba+attention interleave, MoE every 2nd layer)
+and RWKV-6 families.
+
+Layers are grouped into homogeneous *units* scanned with lax.scan (stacked
+params => HLO size is O(one unit) even for 88-layer models).  A unit is one
+layer for uniform stacks, or `attn_every` layers for hybrids (jamba: 8 = one
+attention + seven mamba), preserving the published interleave exactly.
+
+Decode integrates ASR-KF-EGR per attention layer: the decode-attention
+|Q.K| products double as the Eq. 2 relevance scores (zero extra HBM passes),
+feeding the freeze state machine; entropy-guided recovery runs on the final
+logits over the stacked freeze state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FreezeConfig, ModelConfig
+from repro.core.freeze import FreezeState, freeze_update, init_freeze_state
+from repro.core.paging import (PageFreezeState, page_freeze_update,
+                               paged_decode_attention, write_tail)
+from repro.core.recovery import RecoveryState, recovery_update
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+from repro.models.layers import ParamSpec
+
+PATCH_STUB_DIM = 1024   # stub vision-frontend embedding width (DESIGN.md §3)
+
+
+# --------------------------------------------------------------------- #
+# Unit/role layout
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Role:
+    kind: str      # "attn" | "mamba" | "rwkv"
+    moe: bool
+
+
+def unit_roles(cfg: ModelConfig) -> List[Role]:
+    """Roles of the layers inside one scanned unit."""
+    if cfg.arch_type == "ssm":
+        return [Role("rwkv", False)]
+    unit = cfg.attn_every if cfg.attn_every > 1 else 1
+    roles = []
+    for p in range(unit):
+        kind = "attn" if cfg.is_attn_layer(p) else "mamba"
+        roles.append(Role(kind, cfg.is_moe_layer(p)))
+    return roles
+
+
+def num_units(cfg: ModelConfig) -> int:
+    unit = len(unit_roles(cfg))
+    assert cfg.num_layers % unit == 0, (cfg.num_layers, unit)
+    return cfg.num_layers // unit
+
+
+def attn_layer_count(cfg: ModelConfig) -> int:
+    return sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l))
+
+
+def mamba_layer_count(cfg: ModelConfig) -> int:
+    if cfg.arch_type != "hybrid":
+        return 0
+    return cfg.num_layers - attn_layer_count(cfg)
+
+
+# --------------------------------------------------------------------- #
+# Schema / init
+# --------------------------------------------------------------------- #
+def _layer_schema(cfg: ModelConfig, role: Role) -> Dict[str, Any]:
+    if role.kind == "rwkv":
+        return R.rwkv_schema(cfg)
+    s: Dict[str, Any] = {"norm1": ParamSpec((cfg.d_model,), (None,), scale=0.0)}
+    if role.kind == "attn":
+        s["attn"] = L.attention_schema(cfg)
+    else:
+        s["mamba"] = M.mamba_schema(cfg)
+    s["norm2"] = ParamSpec((cfg.d_model,), (None,), scale=0.0)
+    s["ffn"] = MOE.moe_schema(cfg) if role.moe else L.mlp_schema(cfg)
+    return s
+
+
+def schema(cfg: ModelConfig) -> Dict[str, Any]:
+    roles = unit_roles(cfg)
+    unit = {f"l{i}": _layer_schema(cfg, r) for i, r in enumerate(roles)}
+    vp, d = cfg.padded_vocab, cfg.d_model
+    s: Dict[str, Any] = {
+        "embed": ParamSpec((vp, d), ("vocab", "embed")),
+        "unembed": ParamSpec((d, vp), ("embed", "vocab")),
+        "final_norm": ParamSpec((d,), (None,), scale=0.0),
+        "blocks": L.stack_schema(unit, num_units(cfg)),
+    }
+    if cfg.multimodal:
+        s["patch_proj"] = ParamSpec((PATCH_STUB_DIM, d), (None, "embed"))
+    return s
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    return L.init_from_schema(key, schema(cfg), jnp.dtype(cfg.dtype))
+
+
+# --------------------------------------------------------------------- #
+# Embedding / unembedding
+# --------------------------------------------------------------------- #
+def embed(params, cfg: ModelConfig, tokens: jnp.ndarray,
+          patch_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.multimodal and patch_embeds is not None:
+        # early fusion stub: precomputed patch embeddings occupy the first
+        # num_patches positions (vision frontend is out of scope; DESIGN.md)
+        proj = jnp.einsum("bpe,ed->bpd", patch_embeds.astype(x.dtype),
+                          params["patch_proj"])
+        npatch = proj.shape[1]
+        if tokens.shape[1] >= npatch:
+            pos = jnp.arange(tokens.shape[1])[None, :, None]
+            pad = jnp.pad(proj, ((0, 0), (0, tokens.shape[1] - npatch), (0, 0)))
+            x = jnp.where(pos < npatch, pad, x)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("...d,dv->...v", x, params["unembed"])
+    vp = cfg.padded_vocab
+    if vp != cfg.vocab_size:   # mask padded vocab entries
+        bias = jnp.where(jnp.arange(vp) < cfg.vocab_size, 0.0, -1e30)
+        logits = logits + bias
+    return logits
+
+
+# --------------------------------------------------------------------- #
+# Full-sequence unit forward (training / prefill)
+# --------------------------------------------------------------------- #
+def _unit_forward(cfg: ModelConfig, roles, up, x, positions,
+                  collect_kv: bool):
+    """x: (B,S,D). Returns (x, aux, kv list [(k,v)] for attn layers,
+    mamba final states list, rwkv final states list)."""
+    aux = jnp.zeros((), jnp.float32)
+    kvs = []
+    for i, role in enumerate(roles):
+        lp = up[f"l{i}"]
+        if role.kind == "rwkv":
+            x = R.rwkv_forward(lp, x, cfg, cfg.norm_eps)
+            continue
+        xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+        if role.kind == "attn":
+            q, k, v = L.attention_qkv(lp["attn"], xn, positions, cfg.rope_theta)
+            q = L.constrain(q, cfg, "b.m.")
+            k = L.constrain(k, cfg, "b.m.")
+            v = L.constrain(v, cfg, "b.m.")
+            o = L.constrain(L.flash_attention(q, k, v, causal=True),
+                            cfg, "b.m.")
+            x = x + L.attention_out(lp["attn"], o)
+            if collect_kv:
+                kvs.append((k, v))
+        else:
+            x = x + M.mamba_forward(lp["mamba"], xn, cfg)
+        xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+        if role.moe:
+            y, a = MOE.moe_forward(lp["ffn"], xn2, cfg)
+            aux = aux + a
+        else:
+            y = L.mlp_forward(lp["ffn"], xn2, cfg)
+        x = x + y
+    return x, aux, kvs
+
+
+def lm_forward(params, cfg: ModelConfig, tokens: jnp.ndarray,
+               patch_embeds: Optional[jnp.ndarray] = None,
+               remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/eval forward over a full sequence -> (logits, aux_loss)."""
+    roles = unit_roles(cfg)
+    x = embed(params, cfg, tokens, patch_embeds)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, up):
+        x, aux = carry
+        x, a, _ = _unit_forward(cfg, roles, up, x, positions, collect_kv=False)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = L.rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    return unembed(params, cfg, x), aux
+
+
+# --------------------------------------------------------------------- #
+# Prefill: forward + KV cache & recurrent-state materialization
+# --------------------------------------------------------------------- #
+class DecodeState(NamedTuple):
+    """Everything the decode step carries between tokens (all stacked)."""
+    cache_k: jnp.ndarray      # (L_attn, B, S, KVH, hd)   (zeros if no attn)
+    cache_v: jnp.ndarray
+    freeze: FreezeState       # arrays (L_attn, B, S)
+    mamba: Dict[str, jnp.ndarray]   # conv (L_m,B,k-1,di), ssm (L_m,B,di,n)
+    rwkv: Dict[str, jnp.ndarray]    # tm_x/cm_x (L,B,D), wkv (L,B,H,hd,hd)
+    recovery: RecoveryState
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=None) -> DecodeState:
+    from repro.core.recovery import init_recovery_state
+    dt = jnp.dtype(dtype or cfg.dtype)
+    la = attn_layer_count(cfg)
+    lm = mamba_layer_count(cfg)
+    kvh, hd = max(cfg.num_kv_heads, 1), cfg.head_dim
+    di = cfg.mamba_expand * cfg.d_model
+    cache_shape = (la, batch, max_seq, kvh, hd)
+    fz = init_freeze_state(batch, max_seq)
+    fz = FreezeState(*(jnp.broadcast_to(a, (max(la, 1),) + a.shape)
+                       for a in fz))
+    mamba = {
+        "conv": jnp.zeros((lm, batch, cfg.mamba_d_conv - 1, di), dt),
+        "ssm": jnp.zeros((lm, batch, di, cfg.mamba_d_state), jnp.float32),
+    } if lm else {}
+    rwkv = {}
+    if cfg.arch_type == "ssm":
+        hdr = cfg.rwkv_head_dim
+        h = cfg.d_model // hdr
+        rwkv = {
+            "tm_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+            "cm_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+            "wkv": jnp.zeros((cfg.num_layers, batch, h, hdr, hdr), jnp.float32),
+        }
+    return DecodeState(
+        cache_k=jnp.zeros(cache_shape, dt),
+        cache_v=jnp.zeros(cache_shape, dt),
+        freeze=fz,
+        mamba=mamba,
+        rwkv=rwkv,
+        recovery=init_recovery_state(batch),
+    )
+
+
+def _split_xs(state: DecodeState, cfg: ModelConfig):
+    """Reshape stacked per-layer state into per-unit xs for lax.scan."""
+    roles = unit_roles(cfg)
+    n = num_units(cfg)
+    ia = sum(1 for r in roles if r.kind == "attn")
+    im = sum(1 for r in roles if r.kind == "mamba")
+    xs = {}
+    if ia:
+        xs["cache_k"] = state.cache_k.reshape((n, ia) + state.cache_k.shape[1:])
+        xs["cache_v"] = state.cache_v.reshape((n, ia) + state.cache_v.shape[1:])
+        xs["freeze"] = FreezeState(*(a.reshape((n, ia) + a.shape[1:])
+                                     for a in state.freeze))
+    if im:
+        xs["mamba"] = {k: v.reshape((n, im) + v.shape[1:])
+                       for k, v in state.mamba.items()}
+    if cfg.arch_type == "ssm":
+        xs["rwkv"] = {k: v.reshape((n, 1) + v.shape[1:])
+                      for k, v in state.rwkv.items()}
+    return xs
+
+
+def _merge_ys(state: DecodeState, ys, cfg: ModelConfig) -> DecodeState:
+    flat = lambda a: a.reshape((-1,) + a.shape[2:])
+    out = state
+    if "cache_k" in ys:
+        out = out._replace(
+            cache_k=flat(ys["cache_k"]), cache_v=flat(ys["cache_v"]),
+            freeze=FreezeState(*(flat(a) for a in ys["freeze"])))
+    if "mamba" in ys:
+        out = out._replace(mamba={k: flat(v) for k, v in ys["mamba"].items()})
+    if "rwkv" in ys:
+        out = out._replace(rwkv={k: flat(v) for k, v in ys["rwkv"].items()})
+    return out
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
+               state: DecodeState,
+               patch_embeds: Optional[jnp.ndarray] = None,
+               remat: bool = True) -> Tuple[jnp.ndarray, DecodeState]:
+    """Process the prompt, writing KV caches / recurrent states.
+    Returns (last-token logits (B, V), updated DecodeState)."""
+    roles = unit_roles(cfg)
+    B, S = tokens.shape
+    Smax = state.cache_k.shape[2] if state.cache_k.size else S
+    x = embed(params, cfg, tokens, patch_embeds)
+    positions = jnp.arange(S)
+    xs_state = _split_xs(state, cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        up = xs["params"]
+        ia = im = 0
+        kv_out, m_out, r_out = [], [], []
+        for i, role in enumerate(roles):
+            lp = up[f"l{i}"]
+            if role.kind == "rwkv":
+                x, st = R.rwkv_forward_with_state(lp, x, cfg, cfg.norm_eps)
+                r_out.append(st)
+                continue
+            xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+            if role.kind == "attn":
+                q, k, v = L.attention_qkv(lp["attn"], xn, positions, cfg.rope_theta)
+                o = L.flash_attention(q, k, v, causal=True)
+                x = x + L.attention_out(lp["attn"], o)
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    xs["cache_k"][ia], k.astype(xs["cache_k"].dtype), 0, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    xs["cache_v"][ia], v.astype(xs["cache_v"].dtype), 0, axis=1)
+                kv_out.append((ck, cv))
+                ia += 1
+            else:
+                y, st = M.mamba_forward_with_state(lp["mamba"], xn, cfg)
+                x = x + y
+                m_out.append(st)
+                im += 1
+            xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+            if role.moe:
+                y, a = MOE.moe_forward(lp["ffn"], xn2, cfg)
+                aux = aux + a
+            else:
+                y = L.mlp_forward(lp["ffn"], xn2, cfg)
+            x = x + y
+        ys = {}
+        if kv_out:
+            ys["cache_k"] = jnp.stack([k for k, _ in kv_out])
+            ys["cache_v"] = jnp.stack([v for _, v in kv_out])
+            ys["freeze"] = xs["freeze"]   # prefill tokens start unfrozen
+        if m_out:
+            ys["mamba"] = {k: jnp.stack([s[k] for s in m_out])
+                           for k in m_out[0]}
+        if r_out:
+            ys["rwkv"] = {k: jnp.stack([s[k] for s in r_out])
+                          for k in r_out[0]}
+        return (x, aux), ys
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs_all = dict(xs_state, params=params["blocks"])
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs_all)
+    new_state = _merge_ys(state, ys, cfg)
+    xl = L.rms_norm(x[:, -1], params["final_norm"] + 1.0, cfg.norm_eps)
+    return unembed(params, cfg, xl), new_state
+
+
+# --------------------------------------------------------------------- #
+# Decode step (contiguous cache + ASR-KF-EGR)
+# --------------------------------------------------------------------- #
+def lm_decode_step(
+    params, cfg: ModelConfig,
+    token: jnp.ndarray,            # (B,) int32
+    pos: jnp.ndarray,              # () int32 — slot for this token
+    step: jnp.ndarray,             # () int32 — decode step counter
+    state: DecodeState,
+    freeze_cfg: Optional[FreezeConfig] = None,
+    enable_freeze: bool = True,
+) -> Tuple[jnp.ndarray, DecodeState, Dict[str, jnp.ndarray]]:
+    """One ASR-KF-EGR decode step (Algorithm 1 + recovery).
+    Returns (logits (B, V), new state, info)."""
+    fcfg = freeze_cfg or cfg.freeze
+    roles = unit_roles(cfg)
+    B = token.shape[0]
+    Smax = state.cache_k.shape[2] if state.cache_k.size else 0
+    x = embed(params, cfg, token[:, None], None)[:, 0]          # (B, D)
+    if cfg.decode_act_gather:
+        # H2: batch-replicated, feature-sharded (over fsdp axes) decode
+        # activations — 2-D-sharded weights contract locally and never move
+        x = L.dag(x, cfg, ".f")
+    positions = jnp.full((B, 1), pos)
+    xs_state = _split_xs(state, cfg)
+
+    def body(carry, xs):
+        x, act_sum, act_cnt = carry
+        up = xs["params"]
+        ia = im = 0
+        ys: Dict[str, Any] = {}
+        kv_k, kv_v, fz_out, m_out, r_out = [], [], [], [], []
+        for i, role in enumerate(roles):
+            lp = up[f"l{i}"]
+            if role.kind == "rwkv":
+                st = {k: v[0] for k, v in xs["rwkv"].items()}
+                x, st = R.rwkv_decode(lp, x, st, cfg, cfg.norm_eps)
+                r_out.append(st)
+                continue
+            xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+            if role.kind == "attn":
+                q, k, v = L.attention_qkv(
+                    lp["attn"], xn[:, None], positions, cfg.rope_theta)
+                q, k, v = q[:, 0], k[:, 0], v[:, 0]             # (B,H/KVH,hd)
+                ck, cv = xs["cache_k"][ia], xs["cache_v"][ia]
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    ck, k.astype(ck.dtype)[:, None], pos, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cv, v.astype(cv.dtype)[:, None], pos, axis=1)
+                fz = FreezeState(*(a[ia] for a in xs["freeze"]))
+                idx = jnp.arange(Smax)[None, :]
+                amask = (idx <= pos) & ~fz.frozen
+                o, rel = L.decode_attention(q, ck, cv, amask)
+                if cfg.decode_act_gather:
+                    o = L.dag(o, cfg, ".m.")
+                x = x + L.dag(L.attention_out(lp["attn"], o), cfg, ".f") \
+                    if cfg.decode_act_gather else x + L.attention_out(lp["attn"], o)
+                if enable_freeze:
+                    fz, finfo = freeze_update(fz, rel, pos, step, fcfg)
+                    act_sum = act_sum + jnp.sum(finfo["n_active"])
+                    act_cnt = act_cnt + B
+                kv_k.append(ck); kv_v.append(cv); fz_out.append(fz)
+                ia += 1
+            else:
+                st = {k: v[im] for k, v in xs["mamba"].items()}
+                y, st = M.mamba_decode(lp["mamba"], xn, st, cfg)
+                x = x + y
+                m_out.append(st)
+                im += 1
+            xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+            if role.moe:
+                y, _ = MOE.moe_forward(lp["ffn"], xn2[:, None], cfg)
+                y = y[:, 0]
+            else:
+                y = L.mlp_forward(lp["ffn"], xn2, cfg)
+            x = x + y
+        if kv_k:
+            ys["cache_k"] = jnp.stack(kv_k)
+            ys["cache_v"] = jnp.stack(kv_v)
+            ys["freeze"] = FreezeState(
+                *(jnp.stack(parts) for parts in zip(*fz_out)))
+        if m_out:
+            ys["mamba"] = {k: jnp.stack([s[k] for s in m_out]) for k in m_out[0]}
+        if r_out:
+            ys["rwkv"] = {k: jnp.stack([s[k] for s in r_out]) for k in r_out[0]}
+        return (x, act_sum, act_cnt), ys
+
+    xs_all = dict(xs_state, params=params["blocks"])
+    (x, act_sum, act_cnt), ys = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        xs_all)
+    new_state = _merge_ys(state, ys, cfg)
+    x = L.rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+
+    info: Dict[str, jnp.ndarray] = {
+        "mean_active": act_sum / jnp.maximum(act_cnt, 1.0),
+    }
+    # ---- entropy-guided recovery over the stacked freeze state ---- #
+    if enable_freeze and attn_layer_count(cfg) and fcfg.recovery_enabled:
+        rec, fz, rinfo = recovery_update(
+            new_state.recovery, new_state.freeze, logits, step, fcfg)
+        new_state = new_state._replace(recovery=rec, freeze=fz)
+        info.update(rinfo)
+    if attn_layer_count(cfg):
+        exists = jnp.arange(Smax)[None, None, :] <= pos
+        info["n_frozen"] = jnp.sum(new_state.freeze.frozen & exists,
+                                   axis=(0, 2))   # (B,) summed over layers
+        info["n_active"] = jnp.sum(~new_state.freeze.frozen & exists,
+                                   axis=(0, 2))
+    return logits, new_state, info
+
+
+# --------------------------------------------------------------------- #
+# Paged decode step (bounded-active pool — long-context mode)
+# --------------------------------------------------------------------- #
+class PagedDecodeState(NamedTuple):
+    k: jnp.ndarray            # (L_attn, B, P, page, KVH, hd)
+    v: jnp.ndarray
+    page_table: jnp.ndarray   # (L_attn, B, P)
+    slot_mask: jnp.ndarray    # (L_attn, B, P, page)
+    freeze: PageFreezeState   # arrays (L_attn, B, P)
+    mamba: Dict[str, jnp.ndarray]
+    rwkv: Dict[str, jnp.ndarray]
+    recovery: RecoveryState
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int,
+                            max_active_pages: int) -> PagedDecodeState:
+    from repro.core.paging import init_page_freeze_state
+    from repro.core.recovery import init_recovery_state
+    dt = jnp.dtype(cfg.dtype)
+    la = max(attn_layer_count(cfg), 1)
+    lm = mamba_layer_count(cfg)
+    P, page = max_active_pages, cfg.freeze.page_size
+    kvh, hd = max(cfg.num_kv_heads, 1), cfg.head_dim
+    di = cfg.mamba_expand * cfg.d_model
+    fz = init_page_freeze_state(batch, P)
+    fz = PageFreezeState(*(jnp.broadcast_to(a, (la,) + a.shape) for a in fz))
+    mamba = {
+        "conv": jnp.zeros((lm, batch, cfg.mamba_d_conv - 1, di), dt),
+        "ssm": jnp.zeros((lm, batch, di, cfg.mamba_d_state), jnp.float32),
+    } if lm else {}
+    rwkv = {}
+    if cfg.arch_type == "ssm":
+        hdr = cfg.rwkv_head_dim
+        h = cfg.d_model // hdr
+        rwkv = {
+            "tm_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+            "cm_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model), dt),
+            "wkv": jnp.zeros((cfg.num_layers, batch, h, hdr, hdr), jnp.float32),
+        }
+    return PagedDecodeState(
+        k=jnp.zeros((la, batch, P, page, kvh, hd), dt),
+        v=jnp.zeros((la, batch, P, page, kvh, hd), dt),
+        page_table=jnp.full((la, batch, P), -1, jnp.int32),
+        slot_mask=jnp.zeros((la, batch, P, page), bool),
+        freeze=fz,
+        mamba=mamba,
+        rwkv=rwkv,
+        recovery=init_recovery_state(batch),
+    )
+
+
+def lm_decode_step_paged(
+    params, cfg: ModelConfig,
+    token: jnp.ndarray,           # (B,)
+    pos: jnp.ndarray,             # () global position of the new token
+    step: jnp.ndarray,
+    tail_slot: jnp.ndarray,       # () shared or (L_attn,) per-layer tail slot
+    state: PagedDecodeState,
+    freeze_cfg: Optional[FreezeConfig] = None,
+) -> Tuple[jnp.ndarray, PagedDecodeState, Dict[str, jnp.ndarray]]:
+    """Bounded-active decode: attention sees only the device-resident page
+    pool; page-granular freeze feeds the host PagedController."""
+    fcfg = freeze_cfg or cfg.freeze
+    roles = unit_roles(cfg)
+    B = token.shape[0]
+    page = fcfg.page_size
+    x = embed(params, cfg, token[:, None], None)[:, 0]
+    if cfg.decode_act_gather:
+        # H2: batch-replicated, feature-sharded decode activations
+        x = L.dag(x, cfg, ".f")
+    positions = jnp.full((B, 1), pos)
+    tail_off = pos % page
+    current_page = pos // page
+
+    n = num_units(cfg)
+    ia_n = sum(1 for r in roles if r.kind == "attn")
+    im_n = sum(1 for r in roles if r.kind == "mamba")
+    tail_slot = jnp.broadcast_to(jnp.asarray(tail_slot, jnp.int32),
+                                 (max(n * ia_n, 1),))
+    xs = {"params": params["blocks"]}
+    if ia_n:
+        rs = lambda a: a.reshape((n, ia_n) + a.shape[1:])
+        xs.update(k=rs(state.k), v=rs(state.v),
+                  page_table=rs(state.page_table),
+                  slot_mask=rs(state.slot_mask),
+                  tail_slot=tail_slot.reshape(n, ia_n),
+                  freeze=PageFreezeState(*(rs(a) for a in state.freeze)))
+    if im_n:
+        xs["mamba"] = {kk: vv.reshape((n, im_n) + vv.shape[1:])
+                       for kk, vv in state.mamba.items()}
+    if cfg.arch_type == "ssm":
+        xs["rwkv"] = {kk: vv.reshape((n, 1) + vv.shape[1:])
+                      for kk, vv in state.rwkv.items()}
+
+    def body(carry, xs_u):
+        x, nfro = carry
+        up = xs_u["params"]
+        ia = im = 0
+        ys: Dict[str, Any] = {}
+        outs = {kk: [] for kk in ("k", "v", "slot_mask")}
+        fz_out, m_out, r_out = [], [], []
+        for i, role in enumerate(roles):
+            lp = up[f"l{i}"]
+            if role.kind == "rwkv":
+                st = {kk: vv[0] for kk, vv in xs_u["rwkv"].items()}
+                x, st = R.rwkv_decode(lp, x, st, cfg, cfg.norm_eps)
+                r_out.append(st)
+                continue
+            xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+            if role.kind == "attn":
+                q, k, v = L.attention_qkv(
+                    lp["attn"], xn[:, None], positions, cfg.rope_theta)
+                q, k, v = q[:, 0], k[:, 0], v[:, 0]
+                kp, vp = xs_u["k"][ia], xs_u["v"][ia]
+                sm = xs_u["slot_mask"][ia]
+                kp, vp, sm = write_tail(kp, vp, sm, k.astype(kp.dtype),
+                                        v.astype(vp.dtype),
+                                        xs_u["tail_slot"][ia], tail_off)
+                fz = PageFreezeState(*(a[ia] for a in xs_u["freeze"]))
+                att_mask = sm & ~fz.frozen[..., None]
+                o, prel = paged_decode_attention(q, kp, vp, att_mask)
+                if cfg.decode_act_gather:
+                    o = L.dag(o, cfg, ".m.")
+                x = x + L.dag(L.attention_out(lp["attn"], o), cfg, ".f") \
+                    if cfg.decode_act_gather else x + L.attention_out(lp["attn"], o)
+                fz, finfo = page_freeze_update(
+                    fz, prel, xs_u["page_table"][ia], current_page, step, fcfg)
+                nfro = nfro + jnp.sum(finfo["n_frozen"])
+                outs["k"].append(kp); outs["v"].append(vp)
+                outs["slot_mask"].append(sm); fz_out.append(fz)
+                ia += 1
+            else:
+                st = {kk: vv[im] for kk, vv in xs_u["mamba"].items()}
+                y, st = M.mamba_decode(lp["mamba"], xn, st, cfg)
+                x = x + y
+                m_out.append(st)
+                im += 1
+            xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+            if role.moe:
+                y, _ = MOE.moe_forward(lp["ffn"], xn2[:, None], cfg)
+                y = y[:, 0]
+            else:
+                y = L.mlp_forward(lp["ffn"], xn2, cfg)
+            x = x + y
+        if fz_out:
+            for kk in ("k", "v", "slot_mask"):
+                ys[kk] = jnp.stack(outs[kk])
+            ys["page_table"] = xs_u["page_table"]
+            ys["freeze"] = PageFreezeState(
+                *(jnp.stack(parts) for parts in zip(*fz_out)))
+        if m_out:
+            ys["mamba"] = {kk: jnp.stack([s[kk] for s in m_out])
+                           for kk in m_out[0]}
+        if r_out:
+            ys["rwkv"] = {kk: jnp.stack([s[kk] for s in r_out])
+                          for kk in r_out[0]}
+        return (x, nfro), ys
+
+    (x, nfro), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32))
+, xs)
+    flat = lambda a: a.reshape((-1,) + a.shape[2:])
+    new_state = state
+    if "k" in ys:
+        new_state = new_state._replace(
+            k=flat(ys["k"]), v=flat(ys["v"]), slot_mask=flat(ys["slot_mask"]),
+            freeze=PageFreezeState(*(flat(a) for a in ys["freeze"])))
+    if "mamba" in ys:
+        new_state = new_state._replace(
+            mamba={kk: flat(vv) for kk, vv in ys["mamba"].items()})
+    if "rwkv" in ys:
+        new_state = new_state._replace(
+            rwkv={kk: flat(vv) for kk, vv in ys["rwkv"].items()})
+    x = L.rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    info = {"n_frozen_pages": nfro}
+    return logits, new_state, info

@@ -1,0 +1,242 @@
+"""Whisper-style encoder-decoder (audio).  The mel-spectrogram + conv
+feature extractor is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, frames, d_model) straight into the encoder.
+
+ASR-KF-EGR applies to the decoder **self-attention** KV cache; the
+cross-attention KV (encoder output projections) is static and never frozen
+(DESIGN.md §6).  Norms are RMS for uniformity with the rest of the zoo.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FreezeConfig, ModelConfig
+from repro.core.freeze import FreezeState, freeze_update, init_freeze_state
+from repro.core.recovery import RecoveryState, init_recovery_state, recovery_update
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+
+
+def _enc_layer_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "norm1": ParamSpec((cfg.d_model,), (None,), scale=0.0),
+        "attn": L.attention_schema(cfg),
+        "norm2": ParamSpec((cfg.d_model,), (None,), scale=0.0),
+        "ffn": L.mlp_schema(cfg, act="gelu"),
+    }
+
+
+def _dec_layer_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "norm1": ParamSpec((cfg.d_model,), (None,), scale=0.0),
+        "self_attn": L.attention_schema(cfg),
+        "norm_x": ParamSpec((cfg.d_model,), (None,), scale=0.0),
+        "cross_attn": L.attention_schema(cfg),
+        "norm2": ParamSpec((cfg.d_model,), (None,), scale=0.0),
+        "ffn": L.mlp_schema(cfg, act="gelu"),
+    }
+
+
+def schema(cfg: ModelConfig) -> Dict[str, Any]:
+    vp, d = cfg.padded_vocab, cfg.d_model
+    return {
+        "embed": ParamSpec((vp, d), ("vocab", "embed")),
+        "unembed": ParamSpec((d, vp), ("embed", "vocab")),
+        "enc_pos": ParamSpec((cfg.encoder_frames, d), (None, "embed"), scale=0.02),
+        "encoder": L.stack_schema(_enc_layer_schema(cfg), cfg.encoder_layers),
+        "enc_norm": ParamSpec((d,), (None,), scale=0.0),
+        "decoder": L.stack_schema(_dec_layer_schema(cfg), cfg.num_layers),
+        "final_norm": ParamSpec((d,), (None,), scale=0.0),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    return L.init_from_schema(key, schema(cfg), jnp.dtype(cfg.dtype))
+
+
+# --------------------------------------------------------------------- #
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, F, D) stub conv-frontend output -> encoder states."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None]
+
+    def body(x, lp):
+        xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], xn, None, None)
+        o = L.flash_attention(q, k, v, causal=False)
+        x = x + L.attention_out(lp["attn"], o)
+        xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+        return x + L.mlp_forward(lp["ffn"], xn2), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"] + 1.0, cfg.norm_eps)
+
+
+class WhisperState(NamedTuple):
+    cache_k: jnp.ndarray     # (L, B, S, KVH, hd) decoder self-attn
+    cache_v: jnp.ndarray
+    cross_k: jnp.ndarray     # (L, B, F, KVH, hd) static
+    cross_v: jnp.ndarray
+    freeze: FreezeState      # (L, B, S)
+    recovery: RecoveryState
+
+
+def init_state(cfg: ModelConfig, batch: int, max_seq: int) -> WhisperState:
+    dt = jnp.dtype(cfg.dtype)
+    Ld = cfg.num_layers
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    fz = init_freeze_state(batch, max_seq)
+    fz = FreezeState(*(jnp.broadcast_to(a, (Ld,) + a.shape) for a in fz))
+    return WhisperState(
+        cache_k=jnp.zeros((Ld, batch, max_seq, kvh, hd), dt),
+        cache_v=jnp.zeros((Ld, batch, max_seq, kvh, hd), dt),
+        cross_k=jnp.zeros((Ld, batch, cfg.encoder_frames, kvh, hd), dt),
+        cross_v=jnp.zeros((Ld, batch, cfg.encoder_frames, kvh, hd), dt),
+        freeze=fz,
+        recovery=init_recovery_state(batch),
+    )
+
+
+def _dec_positions(tokens_or_pos, d):
+    return L.sinusoidal_positions(tokens_or_pos, d)
+
+
+def decoder_prefill(
+    params, cfg: ModelConfig, tokens: jnp.ndarray, enc_out: jnp.ndarray,
+    state: WhisperState,
+) -> Tuple[jnp.ndarray, WhisperState]:
+    """Returns (last-token logits, state with self+cross caches filled)."""
+    B, S = tokens.shape
+    d = cfg.d_model
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + _dec_positions(jnp.arange(S), d)[None].astype(x.dtype)
+
+    def body(x, xs):
+        lp, ck0, cv0 = xs["p"], xs["ck"], xs["cv"]
+        xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["self_attn"], xn, None, None)
+        o = L.flash_attention(q, k, v, causal=True)
+        x = x + L.attention_out(lp["self_attn"], o)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck0, k.astype(ck0.dtype), 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv0, v.astype(cv0.dtype), 0, axis=1)
+        # cross attention (compute + cache encoder K/V)
+        xn = L.rms_norm(x, lp["norm_x"] + 1.0, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", xn, lp["cross_attn"]["wq"])
+        kx = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wk"])
+        vx = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wv"])
+        ox = L.flash_attention(qx, kx, vx, causal=False)
+        x = x + L.attention_out(lp["cross_attn"], ox)
+        xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+        x = x + L.mlp_forward(lp["ffn"], xn2)
+        return x, {"ck": ck, "cv": cv,
+                   "xk": kx.astype(ck0.dtype), "xv": vx.astype(cv0.dtype)}
+
+    xs = {"p": params["decoder"], "ck": state.cache_k, "cv": state.cache_v}
+    x, ys = jax.lax.scan(body, x, xs)
+    state = state._replace(cache_k=ys["ck"], cache_v=ys["cv"],
+                           cross_k=ys["xk"], cross_v=ys["xv"])
+    xl = L.rms_norm(x[:, -1], params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", xl, params["unembed"])
+    vp = cfg.padded_vocab
+    if vp != cfg.vocab_size:
+        logits = logits + jnp.where(jnp.arange(vp) < cfg.vocab_size, 0.0, -1e30)
+    return logits, state
+
+
+def decode_step(
+    params, cfg: ModelConfig,
+    token: jnp.ndarray, pos: jnp.ndarray, step: jnp.ndarray,
+    state: WhisperState,
+    freeze_cfg: Optional[FreezeConfig] = None,
+    enable_freeze: bool = True,
+) -> Tuple[jnp.ndarray, WhisperState, Dict[str, jnp.ndarray]]:
+    fcfg = freeze_cfg or cfg.freeze
+    B = token.shape[0]
+    Smax = state.cache_k.shape[2]
+    d = cfg.d_model
+    x = jnp.take(params["embed"], token, axis=0)
+    x = x + _dec_positions(pos[None], d).astype(x.dtype)
+
+    def body(carry, xs):
+        x, act = carry
+        lp = xs["p"]
+        xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["self_attn"], xn[:, None], None, None)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            xs["ck"], k.astype(xs["ck"].dtype)[:, None], pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            xs["cv"], v.astype(xs["cv"].dtype)[:, None], pos, axis=1)
+        fz = FreezeState(*xs["freeze"])
+        idx = jnp.arange(Smax)[None, :]
+        amask = (idx <= pos) & ~fz.frozen
+        o, rel = L.decode_attention(q, ck, cv, amask)
+        x = x + L.attention_out(lp["self_attn"], o)
+        if enable_freeze:
+            fz, finfo = freeze_update(fz, rel, pos, step, fcfg)
+            act = act + jnp.sum(finfo["n_active"])
+        # cross attention over static encoder KV (never frozen)
+        xn = L.rms_norm(x, lp["norm_x"] + 1.0, cfg.norm_eps)
+        qx = jnp.einsum("bd,dhk->bhk", xn, lp["cross_attn"]["wq"])
+        full = jnp.ones(xs["xk"].shape[:2], bool)
+        ox, _ = L.decode_attention(qx, xs["xk"], xs["xv"], full)
+        x = x + L.attention_out(lp["cross_attn"], ox)
+        xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+        x = x + L.mlp_forward(lp["ffn"], xn2)
+        return (x, act), {"ck": ck, "cv": cv, "freeze": tuple(fz)}
+
+    xs = {"p": params["decoder"], "ck": state.cache_k, "cv": state.cache_v,
+          "xk": state.cross_k, "xv": state.cross_v,
+          "freeze": tuple(state.freeze)}
+    (x, act), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    state = state._replace(cache_k=ys["ck"], cache_v=ys["cv"],
+                           freeze=FreezeState(*ys["freeze"]))
+    x = L.rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"])
+    vp = cfg.padded_vocab
+    if vp != cfg.vocab_size:
+        logits = logits + jnp.where(jnp.arange(vp) < cfg.vocab_size, 0.0, -1e30)
+    info: Dict[str, jnp.ndarray] = {"mean_active": act / (cfg.num_layers * B)}
+    if enable_freeze and fcfg.recovery_enabled:
+        rec, fz, rinfo = recovery_update(state.recovery, state.freeze,
+                                         logits, step, fcfg)
+        state = state._replace(recovery=rec, freeze=fz)
+        info.update(rinfo)
+    exists = jnp.arange(Smax)[None, None, :] <= pos
+    info["n_frozen"] = jnp.sum(state.freeze.frozen & exists, axis=(0, 2))
+    info["n_active"] = jnp.sum(~state.freeze.frozen & exists, axis=(0, 2))
+    return logits, state, info
+
+
+def train_forward(params, cfg: ModelConfig, frames: jnp.ndarray,
+                  tokens: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced enc-dec forward -> decoder logits (B, S, V)."""
+    enc = encode(params, cfg, frames)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + _dec_positions(jnp.arange(S), cfg.d_model)[None].astype(x.dtype)
+
+    def body(x, lp):
+        xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["self_attn"], xn, None, None)
+        o = L.flash_attention(q, k, v, causal=True)
+        x = x + L.attention_out(lp["self_attn"], o)
+        xn = L.rms_norm(x, lp["norm_x"] + 1.0, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", xn, lp["cross_attn"]["wq"])
+        kx = jnp.einsum("bfd,dhk->bfhk", enc, lp["cross_attn"]["wk"])
+        vx = jnp.einsum("bfd,dhk->bfhk", enc, lp["cross_attn"]["wv"])
+        ox = L.flash_attention(qx, kx, vx, causal=False)
+        x = x + L.attention_out(lp["cross_attn"], ox)
+        xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+        return x + L.mlp_forward(lp["ffn"], xn2), None
+
+    body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = L.rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    vp = cfg.padded_vocab
+    if vp != cfg.vocab_size:
+        logits = logits + jnp.where(jnp.arange(vp) < cfg.vocab_size, 0.0, -1e30)
+    return logits

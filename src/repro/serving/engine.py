@@ -1,0 +1,145 @@
+"""ASR-KF-EGR serving engine: the host-side generation loop wrapping the
+jitted prefill / decode steps.
+
+Responsibilities beyond the jitted step:
+  * page-batched host offload of fully-frozen KV pages (the paper's
+    "frozen storage F" — cache.HostOffloadController)
+  * Rewalk Regeneration (recovery level 4): rewind `rewalk_tokens`, clear
+    freeze state (FR already applied in-step), re-decode
+  * telemetry: active/frozen KV trajectory (paper Fig. 1), compression
+    ratio (Table 1), entropy/recovery events
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FreezeConfig, ModelConfig
+from repro.core.cache import HostOffloadController
+from repro.models import model as MD
+from repro.serving.sampling import SamplingParams, sample
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray                 # (B, n_generated)
+    # per-step telemetry (paper Fig. 1 / Table 1)
+    active_kv: List[float]             # mean active slots per layer/seq
+    frozen_kv: List[float]
+    total_kv: List[int]
+    entropy: List[float]
+    recovery_events: List[Dict[str, Any]]
+    offloaded_tokens: List[int]
+    rewinds: int = 0
+
+    @property
+    def compression(self) -> float:
+        """Paper Table 1: 1 - active/total at the final step."""
+        if not self.active_kv:
+            return 0.0
+        return 1.0 - self.active_kv[-1] / max(self.total_kv[-1], 1)
+
+
+class Engine:
+    """Batched generation with ASR-KF-EGR freeze management."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 freeze_cfg: Optional[FreezeConfig] = None,
+                 enable_freeze: bool = True,
+                 offload: bool = True,
+                 max_rewinds: int = 4,
+                 rewind_cooldown: int = 32):
+        self.max_rewinds = max_rewinds
+        self.rewind_cooldown = rewind_cooldown
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.fcfg = freeze_cfg or cfg.freeze
+        self.enable_freeze = enable_freeze
+        self.offload = offload and enable_freeze
+        self._prefill = jax.jit(
+            functools.partial(MD.prefill, cfg=cfg))
+        self._step = jax.jit(functools.partial(
+            MD.decode_step, cfg=cfg, freeze_cfg=self.fcfg,
+            enable_freeze=enable_freeze))
+
+    def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int,
+                 sampling: SamplingParams = SamplingParams(),
+                 seed: int = 0) -> GenerationResult:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S0 = tokens.shape
+        assert S0 + n_tokens <= self.max_seq
+        state = MD.init_decode_state(cfg, B, self.max_seq)
+        logits, state = self._prefill(self.params, batch=batch, state=state)
+        key = jax.random.PRNGKey(seed)
+        res = GenerationResult([], [], [], [], [], [], [])
+        offloader = HostOffloadController(self.fcfg.page_size) \
+            if self.offload else None
+
+        out_tokens = []
+        history: List[jnp.ndarray] = []   # (token, pos) for rewind
+        pos, step = S0, 0
+        last_rewind_step = -10**9
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub, sampling)
+        out_tokens.append(np.asarray(tok))
+        while len(out_tokens) < n_tokens:
+            logits, state, info = self._step(
+                self.params, token=tok, pos=jnp.int32(pos),
+                step=jnp.int32(step), state=state)
+            # ---- telemetry ----
+            n_layers_attn = max(state.freeze.frozen.shape[0], 1) \
+                if hasattr(state, "freeze") else 1
+            if "n_active" in info:
+                denom = n_layers_attn * B
+                res.active_kv.append(float(jnp.sum(info["n_active"])) / denom)
+                res.frozen_kv.append(float(jnp.sum(info["n_frozen"])) / denom)
+            else:
+                res.active_kv.append(float(pos + 1))
+                res.frozen_kv.append(0.0)
+            res.total_kv.append(pos + 1)
+            if "entropy" in info:
+                res.entropy.append(float(jnp.mean(info["entropy"])))
+                if bool(jnp.any(info["spike"])):
+                    res.recovery_events.append({
+                        "step": step,
+                        "level": int(jnp.max(info["level"])),
+                        "entropy": float(jnp.max(info["entropy"])),
+                    })
+            # ---- Rewalk Regeneration (recovery level 4) ----
+            if "rr_request" in info and bool(jnp.any(info["rr_request"])) \
+                    and len(history) >= self.fcfg.rewalk_tokens \
+                    and res.rewinds < self.max_rewinds \
+                    and step - last_rewind_step >= self.rewind_cooldown:
+                nback = self.fcfg.rewalk_tokens
+                del history[-nback:]
+                del out_tokens[-nback:]
+                pos -= nback
+                res.rewinds += 1
+                last_rewind_step = step
+                tok = history[-1][0] if history else tok
+                step += 1
+                continue
+            # ---- host offload of fully-frozen pages ----
+            if offloader is not None and step % 8 == 7:
+                from repro.core.cache import KVCache
+                cache = KVCache(k=state.cache_k, v=state.cache_v)
+                cache = offloader.sync(cache, np.asarray(state.freeze.frozen))
+                state = state._replace(cache_k=cache.k, cache_v=cache.v)
+            res.offloaded_tokens.append(
+                offloader.offloaded_tokens if offloader else 0)
+
+            key, sub = jax.random.split(key)
+            tok = sample(logits, sub, sampling)
+            history.append((tok, pos))
+            out_tokens.append(np.asarray(tok))
+            pos += 1
+            step += 1
+        res.tokens = np.stack(out_tokens, axis=1)
+        return res

@@ -1,0 +1,39 @@
+"""Token sampling: temperature / top-k / top-p (paper §4.1: T=0.7,
+top-k=40, top-p=0.9; greedy T=0 for the passkey retrieval test)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.7
+    top_k: int = 40
+    top_p: float = 0.9
+
+    @classmethod
+    def greedy(cls) -> "SamplingParams":
+        return cls(temperature=0.0, top_k=0, top_p=1.0)
+
+
+def sample(logits: jnp.ndarray, key: jax.Array,
+           params: SamplingParams) -> jnp.ndarray:
+    """logits: (B, V) -> token ids (B,) int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k and params.top_k > 0:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

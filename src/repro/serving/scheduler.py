@@ -1,0 +1,65 @@
+"""Request scheduler: groups incoming generation requests into fixed-size
+padded batches for the Engine (static batching with FIFO admission —
+the jitted step has a fixed batch dim, so the scheduler pads partial
+batches with dummy lanes and masks their outputs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Engine, GenerationResult
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    n_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    result: Optional[np.ndarray] = None
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, batch_size: int, pad_id: int = 0):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.pad_id = pad_id
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._uid = 0
+
+    def submit(self, prompt: np.ndarray, n_tokens: int,
+               sampling: SamplingParams = SamplingParams()) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  n_tokens, sampling))
+        return self._uid
+
+    def run_once(self) -> List[int]:
+        """Serve one batch from the queue; returns completed uids."""
+        if not self.queue:
+            return []
+        batch = self.queue[: self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        n_lanes = self.batch_size
+        max_prompt = max(len(r.prompt) for r in batch)
+        n_gen = max(r.n_tokens for r in batch)
+        toks = np.full((n_lanes, max_prompt), self.pad_id, np.int32)
+        for i, r in enumerate(batch):
+            toks[i, max_prompt - len(r.prompt):] = r.prompt  # left-pad
+        res = self.engine.generate({"tokens": jnp.asarray(toks)}, n_gen,
+                                   sampling=batch[0].sampling)
+        out = []
+        for i, r in enumerate(batch):
+            r.result = res.tokens[i, : r.n_tokens]
+            self.done[r.uid] = r
+            out.append(r.uid)
+        return out
+
+    def run(self) -> None:
+        while self.queue:
+            self.run_once()

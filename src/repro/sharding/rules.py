@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis mapping with divisibility fallbacks.
+
+Param schemas label dims with logical names; this module maps them onto the
+production mesh:
+
+  embed   -> FSDP axes ('data',) or ('pod','data')   [param storage sharding]
+  heads / kv_heads / ff / vocab / expert -> ('model',) [tensor parallelism]
+
+A dim is sharded only when its size divides the mesh-axis product, else it
+falls back to replication (DESIGN.md §4: llama4 40 heads, whisper 8 heads,
+granite kv=1 all replicate over model=16 while their FFN/vocab still shard).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, is_param_spec
+
+TENSOR_AXES = ("model",)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+LOGICAL = {
+    "embed": "fsdp",
+    "heads": "tensor",
+    "kv_heads": "tensor",
+    "ff": "tensor",
+    "vocab": "tensor",
+    "expert": "tensor",
+}
+
+
+def _axis_prod(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def dim_spec(mesh: Mesh, size: int, logical: Optional[str]):
+    """Resolve one dim: logical name -> mesh axes (or None on indivisible)."""
+    if logical is None:
+        return None
+    kind = LOGICAL[logical]
+    axes = fsdp_axes(mesh) if kind == "fsdp" else TENSOR_AXES
+    if size % _axis_prod(mesh, axes) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_of(mesh: Mesh, ps: ParamSpec, mode: str = "train") -> P:
+    axes = ps.axes
+    if mode == "infer":
+        # tensor-parallel only: keep weights resident (no per-step FSDP
+        # all-gather); used when params fit HBM without the fsdp axis
+        axes = tuple(None if a == "embed" else a for a in axes)
+    return P(*(dim_spec(mesh, s, a) for s, a in zip(ps.shape, axes)))
+
+
+def param_pspecs(mesh: Mesh, schema: Any, mode: str = "train"):
+    """Walk a schema pytree -> matching PartitionSpec pytree."""
+    return jax.tree_util.tree_map(lambda ps: spec_of(mesh, ps, mode), schema,
+                                  is_leaf=is_param_spec)
+
+
+def param_bytes_per_chip(mesh: Mesh, schema: Any, mode: str) -> int:
+    """Storage bytes/chip under the given sharding mode (bf16 assumed for
+    un-flagged dtypes)."""
+    total = 0
+    for ps in jax.tree_util.tree_leaves(schema, is_leaf=is_param_spec):
+        n = int(np.prod(ps.shape)) if ps.shape else 1
+        itemsize = np.dtype(ps.dtype).itemsize if ps.dtype else 2
+        spec = spec_of(mesh, ps, mode)
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            shards *= _axis_prod(mesh, tuple(axes))
+        total += n * itemsize // shards
+    return total
+
+
+def shardings(mesh: Mesh, pspecs: Any):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------- #
+# Activation / state specs
+# --------------------------------------------------------------------- #
+def batch_dim(mesh: Mesh, b: int):
+    axes = batch_axes(mesh)
+    if b % _axis_prod(mesh, axes) == 0:
+        return axes if len(axes) > 1 else axes[0]
+    # long_500k: batch=1 -> replicate
+    if "data" in mesh.axis_names and b % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def model_dim(mesh: Mesh, size: int):
+    return "model" if size % mesh.shape["model"] == 0 else None
+
+
+def tokens_spec(mesh: Mesh, b: int) -> P:
+    return P(batch_dim(mesh, b), None)
+
+
+def decode_state_pspecs(cfg: ModelConfig, mesh: Mesh, state) -> Any:
+    """PartitionSpecs for DecodeState / WhisperState / PagedDecodeState,
+    driven by the concrete array shapes in `state` (works for
+    ShapeDtypeStructs too)."""
+    def leaf_spec(path, x) -> P:
+        names = [getattr(p, "name", getattr(p, "key", None)) for p in path]
+        shape = x.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        # recovery fields: (B,)
+        if nd == 1:
+            return P(batch_dim(mesh, shape[0]))
+        # freeze / page_table / slot_mask / positions: (L, B, ...)
+        field = names[0] if names else ""
+        b = shape[1] if nd >= 2 else shape[0]
+        if field in ("cache_k", "cache_v", "k", "v"):
+            # (L,B,S,KVH,hd) or (L,B,P,page,KVH,hd).  Prefer sharding the
+            # sequence/page dim over 'model' (flash-decoding style: softmax
+            # over a sharded KV dim lowers to cheap psums) — it always
+            # divides, unlike kv_heads (GQA kv<=16, MQA kv=1).
+            seq_d = model_dim(mesh, shape[2])
+            kvh_d = model_dim(mesh, shape[-2]) if seq_d is None else None
+            mid = (None,) * (nd - 5)
+            return P(None, batch_dim(mesh, b), seq_d, *mid, kvh_d, None)
+        if field in ("cross_k", "cross_v"):
+            seq_d = model_dim(mesh, shape[2])
+            kvh_d = model_dim(mesh, shape[-2]) if seq_d is None else None
+            return P(None, batch_dim(mesh, b), seq_d, kvh_d, None)
+        if field == "mamba":
+            # conv (L,B,kc,di) / ssm (L,B,di,n)
+            if names[-1] == "conv":
+                return P(None, batch_dim(mesh, b), None, model_dim(mesh, shape[-1]))
+            return P(None, batch_dim(mesh, b), model_dim(mesh, shape[2]), None)
+        if field == "rwkv":
+            if names[-1] == "wkv":   # (L,B,H,hd,hd)
+                return P(None, batch_dim(mesh, b), model_dim(mesh, shape[2]),
+                         None, None)
+            return P(None, batch_dim(mesh, b), None)
+        # freeze state arrays, page tables, masks: (L,B,S,...) — keep the
+        # slot dim co-sharded with the KV cache sequence/page dim so the
+        # relevance -> freeze-update dataflow never reshards
+        if nd >= 3:
+            return P(None, batch_dim(mesh, b), model_dim(mesh, shape[2]),
+                     *((None,) * (nd - 3)))
+        return P(None, batch_dim(mesh, b))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, state)

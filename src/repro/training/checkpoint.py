@@ -1,0 +1,50 @@
+"""Minimal msgpack checkpointing for params/optimizer pytrees (offline
+container: no orbax).  Arrays are stored as (dtype, shape, bytes) triples
+keyed by flattened tree paths; restore validates structure."""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _key(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "name", getattr(p, "key", getattr(p, "idx", p)))))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any) -> None:
+    flat = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        flat[_key(p)] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    pathlib.Path(path).parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(flat))
+
+
+def restore(path: str, like: Any) -> Any:
+    with open(path, "rb") as f:
+        flat = msgpack.unpackb(f.read())
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        k = _key(p)
+        if k not in flat:
+            raise KeyError(f"checkpoint missing {k}")
+        rec = flat[k]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {k}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

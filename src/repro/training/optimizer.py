@@ -1,0 +1,57 @@
+"""AdamW in pure JAX (pytree-based, sharding-transparent).
+
+Moments are f32 and inherit the parameter PartitionSpecs, so optimizer state
+is FSDP-sharded exactly like the params (no replicated optimizer memory).
+Params stay in their storage dtype (bf16); updates are computed in f32 and
+cast back — the standard memory/quality trade recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def apply(params, grads, state: AdamWState, *, lr: float = 3e-4,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          ) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mh = m_new / c1
+        vh = v_new / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return params, AdamWState(step=step, m=m, v=v)

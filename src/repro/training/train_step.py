@@ -1,0 +1,58 @@
+"""Training step: causal-LM cross-entropy (+ MoE aux loss) with AdamW.
+
+The logits keep their vocab dim tensor-sharded (with_sharding_constraint) so
+the (B, S, 200k-vocab) tensor never materializes replicated; the label
+log-prob is extracted with take_along_axis on the sharded dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MD
+from repro.training import optimizer as OPT
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OPT.AdamWState
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    params = MD.init_params(key, cfg)
+    return TrainState(params=params, opt=OPT.init(params))
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            logits_pspec: Optional[P] = None):
+    logits, aux = MD.train_logits(params, cfg, batch)
+    if logits_pspec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_pspec)
+    logits = logits.astype(jnp.float32)
+    targets = batch["tokens"][:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    ll = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    return loss + AUX_LOSS_WEIGHT * aux, (loss, aux)
+
+
+def train_step(state: TrainState, batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig, lr: float = 3e-4,
+               logits_pspec: Optional[P] = None
+               ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+    (total, (xent, aux)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(state.params, cfg, batch, logits_pspec)
+    params, opt = OPT.apply(state.params, grads, state.opt, lr=lr)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree_util.tree_leaves(grads)))
+    metrics = {"loss": xent, "aux_loss": aux, "total_loss": total,
+               "grad_norm": gnorm}
+    return TrainState(params=params, opt=opt), metrics

@@ -1,0 +1,119 @@
+"""Cache structures, host offload controller, and paged-pool machinery."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FreezeConfig
+from repro.core.cache import HostOffloadController, KVCache
+from repro.core.paging import (PagedController, PageFreezeState,
+                               init_page_freeze_state, page_freeze_update,
+                               paged_decode_attention, write_tail)
+from repro.models.layers import decode_attention
+
+
+class TestHostOffload:
+    def _cache(self, L=2, B=1, S=64):
+        key = jax.random.PRNGKey(0)
+        k, v = jax.random.normal(key, (2, L, B, S, 2, 8))
+        return KVCache(k=k, v=v)
+
+    def test_offload_and_restore_roundtrip(self):
+        cache = self._cache()
+        orig_k = np.asarray(cache.k).copy()
+        ctl = HostOffloadController(page_size=16)
+        frozen = np.zeros((2, 1, 64), bool)
+        frozen[:, :, 16:32] = True                      # page 1 fully frozen
+        cache2 = ctl.sync(cache, frozen)
+        assert ctl.offloaded_tokens == 2 * 1 * 16       # L*B*page tokens
+        # device slots released (zeroed)
+        assert np.asarray(cache2.k)[0, 0, 16:32].max() == 0
+        # restore: unfreeze one token of the page
+        frozen[:, :, 20] = False
+        cache3 = ctl.sync(cache2, frozen)
+        assert ctl.offloaded_tokens == 0
+        np.testing.assert_array_equal(np.asarray(cache3.k), orig_k)
+
+    def test_partial_page_not_offloaded(self):
+        cache = self._cache()
+        ctl = HostOffloadController(page_size=16)
+        frozen = np.zeros((2, 1, 64), bool)
+        frozen[:, :, 16:31] = True                      # 15/16 frozen
+        ctl.sync(cache, frozen)
+        assert ctl.offloaded_tokens == 0
+
+
+class TestPagedPool:
+    def test_write_tail_and_attention_equivalence(self):
+        """Paged attention over a filled pool == flat masked attention."""
+        key = jax.random.PRNGKey(1)
+        B, P, page, H, hd = 2, 4, 16, 4, 32
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, H, hd))
+        kp = jax.random.normal(ks[1], (B, P, page, H, hd))
+        vp = jax.random.normal(ks[2], (B, P, page, H, hd))
+        sm = jnp.ones((B, P, page), bool)
+        out_p, _ = paged_decode_attention(q, kp, vp, sm)
+        out_f, _ = decode_attention(
+            q, kp.reshape(B, P * page, H, hd), vp.reshape(B, P * page, H, hd),
+            jnp.ones((B, P * page), bool))
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_f),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_write_tail_places_token(self):
+        B, P, page, KVH, hd = 1, 2, 4, 2, 8
+        kp = jnp.zeros((B, P, page, KVH, hd))
+        vp = jnp.zeros((B, P, page, KVH, hd))
+        sm = jnp.zeros((B, P, page), bool)
+        nk = jnp.ones((B, KVH, hd))
+        kp, vp, sm = write_tail(kp, vp, sm, nk, nk * 2, jnp.int32(1),
+                                jnp.int32(2))
+        assert bool(sm[0, 1, 2]) and int(sm.sum()) == 1
+        np.testing.assert_array_equal(np.asarray(kp[0, 1, 2]), 1.0)
+        np.testing.assert_array_equal(np.asarray(vp[0, 1, 2]), 2.0)
+        assert float(kp.sum()) == KVH * hd
+
+    def test_forced_freeze_bounds_pool(self):
+        """When the pool saturates, the lowest-relevance page is frozen even
+        above tau — device memory stays bounded."""
+        cfg = FreezeConfig(window=4, tau=0.0, page_size=4)  # tau=0: nothing flags
+        B, P = 1, 4
+        st = init_page_freeze_state(B, P)
+        page_table = jnp.array([[10, 11, 12, 13]], jnp.int32)  # pool full
+        rel = jnp.array([[5.0, 1.0, 7.0, 9.0]])
+        new, info = page_freeze_update(st, rel, page_table, jnp.int32(13),
+                                       jnp.int32(0), cfg)
+        assert bool(info["just_frozen"][0, 1])     # lowest relevance, oldest ok
+        assert int(new.d[0, 1]) >= 1
+
+    def test_paged_controller_swap_cycle(self):
+        cfg = get_config("llama3-8b-tiny")
+        B, P, page = 1, 4, cfg.freeze.page_size
+        L = 1
+        kvh, hd = 2, 8
+        rng = np.random.RandomState(0)
+        pool = {
+            "k": rng.rand(L, B, P, page, kvh, hd).astype(np.float32),
+            "v": rng.rand(L, B, P, page, kvh, hd).astype(np.float32),
+            "page_table": np.array([[[0, 1, 2, 3]]], np.int32).reshape(L, B, P),
+            "slot_mask": np.ones((L, B, P, page), bool),
+        }
+        orig_page1 = pool["k"][0, 0, 1].copy()
+        fstate = {
+            "c": np.zeros((L, B, P), np.int32),
+            "d": np.array([[[0, 2, 0, 0]]], np.int32).reshape(L, B, P),
+            "frozen": np.array([[[False, True, False, False]]]).reshape(L, B, P),
+            "frozen_at": np.zeros((L, B, P), np.int32),
+        }
+        ctl = PagedController(cfg=cfg, batch=B, max_active_pages=P)
+        pool, fstate = ctl.tick(pool, fstate, step=0)
+        assert ctl.n_swap_out == 1
+        assert pool["page_table"][0, 0, 1] == -1          # slot freed
+        # d=2 -> decremented to 1 at first tick; second tick restores
+        pool, fstate = ctl.tick(pool, fstate, step=1, reserve_slots=0)
+        assert ctl.n_swap_in == 1
+        slot = list(pool["page_table"][0, 0]).index(1)
+        np.testing.assert_array_equal(pool["k"][0, 0, slot], orig_page1)

@@ -1,0 +1,202 @@
+"""Unit + property tests for the ASR-KF-EGR freeze state machine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import (FreezeState, effective_tau, freeze_update,
+                               full_reset, init_freeze_state, schedule,
+                               soft_reset, window_reset)
+
+
+def mk_cfg(**kw):
+    base = dict(window=4, tau=0.5, k_soft=2.0, history=10**6,
+                recovery_enabled=False)
+    base.update(kw)
+    return FreezeConfig(**base)
+
+
+class TestSchedule:
+    def test_paper_examples(self):
+        """§3.4: c=4 -> d=1, c=9 -> d=1, c=16 -> d=2 (k=2)."""
+        c = jnp.array([0, 1, 2, 3, 4, 9, 16, 25, 36])
+        d = schedule(c, 2.0)
+        np.testing.assert_array_equal(d, [0, 0, 0, 0, 1, 1, 2, 2, 3])
+
+    def test_gentle_early(self):
+        """First detections yield d=0 (no freeze)."""
+        assert int(schedule(jnp.array(1), 2.0)) == 0
+        assert int(schedule(jnp.array(3), 2.0)) == 0
+
+    def test_sublinear_growth(self):
+        c = jnp.arange(1, 1000)
+        d = schedule(c, 2.0)
+        # d grows strictly slower than linear: d <= sqrt(c)/2
+        assert bool(jnp.all(d <= jnp.sqrt(c.astype(jnp.float32)) / 2))
+
+
+class TestFreezeUpdate:
+    def test_window_never_frozen(self):
+        cfg = mk_cfg(window=4)
+        state = init_freeze_state(1, 16)
+        state = state._replace(c=jnp.full((1, 16), 100, jnp.int32))
+        rel = jnp.zeros((1, 16))  # everything low-importance
+        new, info = freeze_update(state, rel, jnp.int32(9), jnp.int32(0), cfg)
+        frozen = np.asarray(new.frozen[0])
+        # slots 6..9 are the K=4 most recent -> never frozen
+        assert not frozen[6:10].any()
+        # slots beyond pos don't exist -> never frozen
+        assert not frozen[10:].any()
+        # old low-importance slots with high counters freeze
+        assert frozen[0:6].all()
+
+    def test_counter_accumulates_then_freezes(self):
+        """A token must be flagged repeatedly before it freezes (c=4 @ k=2)."""
+        cfg = mk_cfg(window=2)
+        state = init_freeze_state(1, 8)
+        rel = jnp.zeros((1, 8))
+        for step in range(3):
+            state, info = freeze_update(state, rel, jnp.int32(7),
+                                        jnp.int32(step), cfg)
+            assert not bool(info["just_frozen"].any()), step
+        state, info = freeze_update(state, rel, jnp.int32(7), jnp.int32(3), cfg)
+        assert bool(info["just_frozen"][0, :6].all())
+
+    def test_rolling_restore(self):
+        """d=1 freeze lasts exactly one step, then the slot is restored."""
+        cfg = mk_cfg(window=2)
+        state = init_freeze_state(1, 8)
+        state = state._replace(c=jnp.full((1, 8), 3, jnp.int32))
+        rel = jnp.zeros((1, 8))
+        state, info = freeze_update(state, rel, jnp.int32(7), jnp.int32(0), cfg)
+        assert bool(state.frozen[0, 0])           # c=4 -> d=1 -> frozen
+        high = jnp.full((1, 8), 10.0)
+        state, info = freeze_update(state, high, jnp.int32(7), jnp.int32(1), cfg)
+        assert bool(info["restored"][0, 0])
+        assert not bool(state.frozen[0, 0])       # reversibility
+
+    def test_frozen_excluded_from_flagging(self):
+        cfg = mk_cfg(window=2)
+        state = init_freeze_state(1, 8)
+        state = state._replace(
+            frozen=jnp.ones((1, 8), bool), d=jnp.full((1, 8), 5, jnp.int32))
+        rel = jnp.zeros((1, 8))
+        new, info = freeze_update(state, rel, jnp.int32(7), jnp.int32(0), cfg)
+        assert not bool(info["just_frozen"].any())
+        np.testing.assert_array_equal(np.asarray(new.c), 0)  # no new counts
+
+    def test_history_decay(self):
+        cfg = mk_cfg(window=2, history=4)
+        state = init_freeze_state(1, 8)
+        state = state._replace(c=jnp.full((1, 8), 2, jnp.int32))
+        rel = jnp.full((1, 8), 10.0)  # nothing flagged
+        new, _ = freeze_update(state, rel, jnp.int32(7), jnp.int32(3), cfg)
+        np.testing.assert_array_equal(np.asarray(new.c), 1)  # decayed at step 3
+
+    def test_quantile_tau_flags_fraction(self):
+        cfg = mk_cfg(window=0, tau_mode="quantile", quantile=0.5)
+        rel = jnp.arange(32, dtype=jnp.float32)[None, :]
+        eligible = jnp.ones((1, 32), bool)
+        tau = effective_tau(rel, eligible, cfg)
+        frac = float(jnp.mean(rel < tau))
+        assert 0.4 <= frac <= 0.6
+
+
+class TestRecoveryActions:
+    def _frozen_state(self):
+        s = init_freeze_state(2, 8)
+        return s._replace(
+            frozen=jnp.ones((2, 8), bool),
+            d=jnp.array([[1, 2, 3, 1, 2, 3, 1, 2]] * 2, jnp.int32),
+            frozen_at=jnp.full((2, 8), 100, jnp.int32))
+
+    def test_soft_reset_unfreezes_long_timers(self):
+        s = self._frozen_state()
+        sel = jnp.array([True, False])
+        new = soft_reset(s, sel)
+        f = np.asarray(new.frozen)
+        assert not f[0][np.asarray(s.d[0]) > 1].any()
+        assert f[0][np.asarray(s.d[0]) == 1].all()   # d=1 untouched by SR
+        assert f[1].all()                             # unselected seq untouched
+
+    def test_window_reset_only_recent(self):
+        s = self._frozen_state()
+        s = s._replace(frozen_at=jnp.array(
+            [[0, 0, 0, 0, 100, 100, 100, 100]] * 2, jnp.int32))
+        new = window_reset(s, jnp.array([True, True]), jnp.int32(110), 20)
+        f = np.asarray(new.frozen)
+        assert f[:, :4].all() and not f[:, 4:].any()
+
+    def test_full_reset_clears_everything(self):
+        s = self._frozen_state()
+        s = s._replace(c=jnp.full((2, 8), 9, jnp.int32))
+        new = full_reset(s, jnp.array([True, True]))
+        assert not np.asarray(new.frozen).any()
+        np.testing.assert_array_equal(np.asarray(new.c), 0)
+        np.testing.assert_array_equal(np.asarray(new.d), 0)
+
+
+# ------------------------------------------------------------------ #
+# Property tests (hypothesis)
+# ------------------------------------------------------------------ #
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    seq=st.integers(8, 64),
+    window=st.integers(0, 8),
+    steps=st.integers(1, 10),
+    ksoft=st.floats(0.5, 4.0),
+)
+def test_freeze_invariants(seed, seq, window, steps, ksoft):
+    """System invariants hold for arbitrary relevance streams."""
+    cfg = mk_cfg(window=window, k_soft=ksoft, tau=0.5)
+    rng = np.random.RandomState(seed)
+    state = init_freeze_state(2, seq)
+    pos = seq - 1
+    for step in range(steps):
+        rel = jnp.asarray(rng.rand(2, seq).astype(np.float32))
+        prev = state
+        state, info = freeze_update(state, rel, jnp.int32(pos),
+                                    jnp.int32(step), cfg)
+        frozen = np.asarray(state.frozen)
+        d = np.asarray(state.d)
+        c = np.asarray(state.c)
+        idx = np.arange(seq)[None, :]
+        exists = np.broadcast_to(idx <= pos, frozen.shape)
+        # 1. never freeze inside the sliding window or beyond pos
+        assert not frozen[~exists].any()
+        assert not frozen[:, max(0, pos - window + 1):].any()
+        # 2. timers non-negative; frozen slots carry positive-or-zero timers
+        assert (d >= 0).all()
+        # 3. counters never decrease except via history decay (disabled here)
+        assert (c >= np.asarray(prev.c) - 0).all()
+        # 4. a slot cannot be both just_frozen and restored
+        jf = np.asarray(info["just_frozen"])
+        rs = np.asarray(info["restored"])
+        assert not (jf & rs).any()
+        # 5. active = exists & ~frozen
+        np.testing.assert_array_equal(
+            np.asarray(info["active"]), exists & ~frozen)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_reversibility_no_permanent_loss(seed):
+    """Paper's core claim: freezing is reversible — any frozen token returns
+    to the active set within a bounded number of steps once it stops being
+    flagged (relevance above tau)."""
+    cfg = mk_cfg(window=2, k_soft=1.0)
+    rng = np.random.RandomState(seed)
+    state = init_freeze_state(1, 16)
+    # aggressively freeze for a while
+    for step in range(20):
+        state, _ = freeze_update(state, jnp.zeros((1, 16)), jnp.int32(15),
+                                 jnp.int32(step), cfg)
+    max_d = int(np.asarray(state.d).max())
+    # now everything is relevant: all slots must unfreeze within max_d+1 steps
+    for step in range(20, 21 + max_d):
+        state, _ = freeze_update(state, jnp.full((1, 16), 10.0),
+                                 jnp.int32(15), jnp.int32(step), cfg)
+    assert not np.asarray(state.frozen).any()

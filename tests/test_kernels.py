@@ -1,0 +1,102 @@
+"""Pallas kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True
+executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import init_freeze_state
+from repro.kernels import ref
+from repro.kernels.freeze_decode_attn import freeze_decode_attention
+from repro.kernels.paged_decode_attn import paged_decode_attention_kernel
+from repro.kernels.relevance_freeze import relevance_freeze_update
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd,blk", [
+    (1, 512, 8, 8, 64, 128),
+    (2, 1024, 8, 4, 64, 256),     # GQA
+    (2, 512, 4, 1, 128, 128),     # MQA
+    (3, 768, 16, 8, 128, 256),    # non-pow2 batch
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_freeze_decode_attn_sweep(B, S, H, KVH, hd, blk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), dtype)
+    mask = jax.random.bernoulli(ks[3], 0.5, (B, S)).at[:, 0].set(True)
+    out_k, rel_k = freeze_decode_attention(q, k, v, mask, block_s=blk,
+                                           interpret=True)
+    out_r, rel_r = ref.freeze_decode_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), **TOLS[dtype])
+    # relevance compared on blocks that have >=1 active slot (skipped blocks
+    # legitimately report 0)
+    mb = np.asarray(mask).reshape(B, S // blk, blk).any(-1)
+    mb = np.repeat(mb, blk, axis=-1)
+    np.testing.assert_allclose(np.asarray(rel_k) * mb,
+                               np.asarray(rel_r) * mb, **TOLS[dtype])
+
+
+def test_freeze_decode_attn_skips_frozen_blocks():
+    """A fully-frozen block must not contribute — result equals attention
+    over only the active blocks."""
+    B, S, H, hd, blk = 1, 512, 4, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    mask = jnp.ones((B, S), bool).at[:, blk:2 * blk].set(False)
+    out_k, rel_k = freeze_decode_attention(q, k, v, mask, block_s=blk,
+                                           interpret=True)
+    out_r, _ = ref.freeze_decode_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(rel_k[:, blk:2 * blk]), 0.0)
+
+
+@pytest.mark.parametrize("B,P,page,H,KVH,hd", [
+    (1, 4, 128, 8, 8, 64),
+    (2, 8, 64, 8, 2, 64),
+    (2, 6, 128, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attn_sweep(B, P, page, H, KVH, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (B, P, page, KVH, hd), dtype)
+    vp = jax.random.normal(ks[2], (B, P, page, KVH, hd), dtype)
+    sm = jax.random.bernoulli(ks[3], 0.5, (B, P, page))
+    sm = sm.at[:, 0, 0].set(True)
+    sm = sm.at[:, -1].set(False)      # one dead page
+    out_k, rel_k = paged_decode_attention_kernel(q, kp, vp, sm, interpret=True)
+    out_r, rel_r = ref.paged_decode_attention_ref(q, kp, vp, sm)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), **TOLS[dtype])
+    act = np.asarray(sm).any(-1)
+    np.testing.assert_allclose(np.asarray(rel_k) * act,
+                               np.asarray(rel_r) * act, **TOLS[dtype])
+
+
+@pytest.mark.parametrize("B,S,blk", [(1, 256, 64), (2, 1024, 256), (4, 512, 512)])
+@pytest.mark.parametrize("window,ksoft,history", [(8, 2.0, 10**6), (4, 1.0, 64)])
+def test_relevance_freeze_sweep(B, S, blk, window, ksoft, history):
+    cfg = FreezeConfig(window=window, tau=0.5, k_soft=ksoft, history=history)
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    st = init_freeze_state(B, S)._replace(
+        c=jax.random.randint(ks[0], (B, S), 0, 20),
+        d=jax.random.randint(ks[1], (B, S), 0, 5),
+        frozen=jax.random.bernoulli(ks[2], 0.3, (B, S)))
+    rel = jax.random.uniform(ks[3], (B, S))
+    pos, step = jnp.int32(S - 5), jnp.int32(history - 1)
+    new_k, act_k = relevance_freeze_update(st, rel, pos, step, cfg,
+                                           block_s=blk, interpret=True)
+    new_r, info = ref.relevance_freeze_ref(st, rel, pos, step, cfg)
+    for f in ("c", "d", "frozen", "frozen_at"):
+        np.testing.assert_array_equal(np.asarray(getattr(new_k, f)),
+                                      np.asarray(getattr(new_r, f)), err_msg=f)
+    np.testing.assert_array_equal(np.asarray(act_k), np.asarray(info["active"]))

@@ -1,0 +1,114 @@
+"""Entropy-guided recovery ladder tests (paper §3.6, implemented)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import init_freeze_state
+from repro.core.recovery import (CALM, FR, RR, SR, WR, init_recovery_state,
+                                 recovery_update, token_entropy)
+
+
+def mk_cfg(**kw):
+    base = dict(recovery_enabled=True, entropy_abs_threshold=2.0,
+                entropy_rel_factor=100.0, calm_steps_to_deescalate=4)
+    base.update(kw)
+    return FreezeConfig(**base)
+
+
+def flat_logits(v=64):
+    return jnp.zeros((1, v))          # max entropy = log(v) ~ 4.16
+
+
+def peaked_logits(v=64):
+    z = jnp.full((1, v), -30.0)
+    return z.at[0, 0].set(30.0)       # ~zero entropy
+
+
+def warm(rec, fz, cfg, n=10):
+    for s in range(n):
+        rec, fz, _ = recovery_update(rec, fz, peaked_logits(), jnp.int32(s), cfg)
+    return rec, fz
+
+
+def test_entropy_values():
+    assert float(token_entropy(flat_logits())[0]) > 4.0
+    assert float(token_entropy(peaked_logits())[0]) < 0.01
+
+
+def test_escalation_ladder():
+    cfg = mk_cfg()
+    fz = init_freeze_state(1, 8)
+    rec = init_recovery_state(1)
+    rec, fz = warm(rec, fz, cfg)
+    levels = []
+    for s in range(10, 15):
+        rec, fz, info = recovery_update(rec, fz, flat_logits(), jnp.int32(s), cfg)
+        levels.append(int(rec.level[0]))
+    # SR -> WR -> FR -> RR -> (reset to CALM after RR)
+    assert levels[:4] == [SR, WR, FR, RR - RR]  # RR resets to CALM
+    # rr_request fired exactly on the 4th spike
+    assert levels[3] == CALM
+
+
+def test_rr_request_and_reset():
+    cfg = mk_cfg()
+    fz = init_freeze_state(1, 8)
+    rec = init_recovery_state(1)
+    rec, fz = warm(rec, fz, cfg)
+    fired = []
+    for s in range(10, 16):
+        rec, fz, info = recovery_update(rec, fz, flat_logits(), jnp.int32(s), cfg)
+        fired.append(bool(info["rr_request"][0]))
+    assert fired[3]                     # 4th consecutive spike triggers RR
+    assert sum(fired) >= 1
+
+
+def test_fr_clears_freeze_state():
+    cfg = mk_cfg()
+    fz = init_freeze_state(1, 8)._replace(
+        frozen=jnp.ones((1, 8), bool), d=jnp.full((1, 8), 3, jnp.int32))
+    rec = init_recovery_state(1)
+    rec, _ = warm(rec, init_freeze_state(1, 8), cfg)
+    rec = rec._replace(level=jnp.array([WR], jnp.int32))  # next spike -> FR
+    rec, fz, info = recovery_update(rec, fz, flat_logits(), jnp.int32(20), cfg)
+    assert int(rec.level[0]) == FR
+    assert not np.asarray(fz.frozen).any()
+
+
+def test_deescalation_on_calm():
+    cfg = mk_cfg(calm_steps_to_deescalate=3)
+    fz = init_freeze_state(1, 8)
+    rec = init_recovery_state(1)
+    rec, fz = warm(rec, fz, cfg)
+    rec, fz, _ = recovery_update(rec, fz, flat_logits(), jnp.int32(10), cfg)
+    assert int(rec.level[0]) == SR
+    for s in range(11, 20):
+        rec, fz, _ = recovery_update(rec, fz, peaked_logits(), jnp.int32(s), cfg)
+    assert int(rec.level[0]) == CALM
+
+
+def test_disabled_recovery_never_spikes():
+    cfg = mk_cfg(recovery_enabled=False)
+    fz = init_freeze_state(1, 8)
+    rec = init_recovery_state(1)
+    for s in range(20):
+        rec, fz, info = recovery_update(rec, fz, flat_logits(), jnp.int32(s), cfg)
+        assert not bool(info["spike"].any())
+    assert int(rec.level[0]) == CALM
+
+
+def test_per_sequence_independence():
+    """Only the spiking sequence in the batch is intervened."""
+    cfg = mk_cfg()
+    fz = init_freeze_state(2, 8)._replace(
+        frozen=jnp.ones((2, 8), bool), d=jnp.full((2, 8), 9, jnp.int32))
+    rec = init_recovery_state(2)
+    for s in range(10):
+        both = jnp.concatenate([peaked_logits(), peaked_logits()])
+        rec, _, _ = recovery_update(rec, init_freeze_state(2, 8), both,
+                                    jnp.int32(s), cfg)
+    mixed = jnp.concatenate([flat_logits(), peaked_logits()])
+    rec, fz, info = recovery_update(rec, fz, mixed, jnp.int32(10), cfg)
+    f = np.asarray(fz.frozen)
+    assert not f[0].any()     # seq 0 spiked at SR -> d>1 slots unfrozen
+    assert f[1].all()         # seq 1 calm -> untouched
