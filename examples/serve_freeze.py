@@ -1,7 +1,9 @@
 """End-to-end serving driver (the paper is an inference paper, so this is
-the primary E2E example): serve a small model with batched requests through
-the Scheduler with ASR-KF-EGR freeze management, and compare against the
-full-KV baseline — the paper's Table 1 protocol at example scale.
+the primary E2E example): serve a mixed-length request trace through the
+continuous-batching Scheduler with ASR-KF-EGR freeze management, comparing
+three arms — full-KV static baseline, ASR-KF-EGR static, and ASR-KF-EGR
+continuous — the paper's Table 1 protocol at example scale plus the serving
+upgrade on top.
 
     PYTHONPATH=src python examples/serve_freeze.py
 """
@@ -13,9 +15,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as MD
-from repro.serving.engine import Engine
+from repro.serving.engine import ContinuousEngine, Engine
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import Scheduler, StaticScheduler
 
 
 def main():
@@ -26,29 +28,49 @@ def main():
     cfg = dataclasses.replace(cfg, freeze=fc)
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.RandomState(0)
+    # mixed-length trace: short requests co-batched with long ones is
+    # exactly where continuous batching wins
+    trace = [(rng.randint(0, cfg.vocab_size, size=rng.randint(16, 48)), n)
+             for n in (160, 40, 40, 40, 80, 60, 40, 40)]
 
-    for label, freeze in (("full-KV baseline", False), ("ASR-KF-EGR", True)):
-        eng = Engine(cfg, params, max_seq=512, enable_freeze=freeze)
-        sched = Scheduler(eng, batch_size=4)
-        for _ in range(8):                      # 8 requests, 2 batches
-            prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(16, 48))
-            sched.submit(prompt, n_tokens=160,
+    def submit_all(sched):
+        for prompt, n in trace:
+            sched.submit(prompt, n_tokens=n,
                          sampling=SamplingParams(temperature=0.7))
+
+    arms = (
+        ("full-KV static", lambda: StaticScheduler(
+            Engine(cfg, params, max_seq=512, enable_freeze=False),
+            batch_size=4)),
+        ("ASR-KF-EGR static", lambda: StaticScheduler(
+            Engine(cfg, params, max_seq=512), batch_size=4)),
+        ("ASR-KF-EGR continuous", lambda: Scheduler(
+            ContinuousEngine(cfg, params, max_seq=512, n_lanes=4))),
+    )
+    for label, mk in arms:
+        sched = mk()
+        submit_all(sched)
         t0 = time.time()
         sched.run()
         dt = time.time() - t0
         total = sum(len(r.result) for r in sched.done.values())
-        # last engine result telemetry
-        print(f"{label:18s}: {len(sched.done)} requests, {total} tokens, "
-              f"{dt:.1f}s ({1e3 * dt / total:.1f} ms/token)")
-        if freeze:
-            res = None
-    # detailed freeze stats from one fresh batched run
-    eng = Engine(cfg, params, max_seq=512)
-    toks = rng.randint(0, cfg.vocab_size, size=(4, 32)).astype(np.int32)
-    import jax.numpy as jnp
-    res = eng.generate({"tokens": jnp.asarray(toks)}, 200)
-    print(f"\nASR-KF-EGR telemetry (batch=4, 200 tokens):")
+        extra = ""
+        if isinstance(sched, Scheduler):
+            eng = sched.engine
+            # first tokens come from prefill, not decode lane-steps
+            util = 100 * (total - len(sched.done)) \
+                / (eng.wall_step * eng.n_lanes)
+            extra = f", {eng.wall_step} steps, {util:.0f}% lane utilization"
+        print(f"{label:22s}: {len(sched.done)} requests, {total} tokens, "
+              f"{dt:.1f}s ({1e3 * dt / total:.1f} ms/token){extra}")
+
+    # detailed per-request freeze telemetry from the continuous engine
+    eng = ContinuousEngine(cfg, params, max_seq=512, n_lanes=4)
+    sched = Scheduler(eng)
+    submit_all(sched)
+    sched.run()
+    res = sched.done[1].telemetry          # the longest request
+    print(f"\nASR-KF-EGR telemetry (request 1, {len(res.tokens[0])} tokens):")
     print(f"  compression        : {100 * res.compression:.1f}%")
     print(f"  mean active KV     : {np.mean(res.active_kv):.0f}")
     print(f"  host-offloaded     : {max(res.offloaded_tokens)} tokens peak")

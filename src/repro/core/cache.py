@@ -40,6 +40,15 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
 
+def reset_lane(cache: KVCache, lane) -> KVCache:
+    """Lane-granular reset: zero one batch lane's K/V slots so a retired
+    request's cache cannot leak into the lane's next occupant."""
+    sel = (jnp.arange(cache.k.shape[1]) == jnp.asarray(lane)
+           ).reshape(1, -1, 1, 1, 1)
+    return KVCache(k=jnp.where(sel, 0, cache.k),
+                   v=jnp.where(sel, 0, cache.v))
+
+
 def cache_write(k_layer: jnp.ndarray, v_layer: jnp.ndarray,
                 new_k: jnp.ndarray, new_v: jnp.ndarray,
                 pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -149,3 +158,22 @@ class HostOffloadController:
     @property
     def offloaded_tokens(self) -> int:
         return len(self.offloaded) * self.page_size
+
+    # ---- per-lane bookkeeping (continuous batching) ------------------- #
+    def offloaded_tokens_lane(self, lane: int) -> int:
+        """Offloaded token count for one batch lane (store keys are
+        (layer, batch, page), so lane membership is exact)."""
+        return sum(self.page_size for key in self.offloaded if key[1] == lane)
+
+    def drop_lane(self, lane: int) -> int:
+        """Forget every offloaded page belonging to one batch lane.
+
+        Called when the lane is reassigned to a new request: the admission
+        prefill overwrites the lane's device slots wholesale, so restoring
+        the retired request's pages would corrupt the new occupant's cache.
+        Returns the number of pages dropped."""
+        stale = [key for key in self.offloaded if key[1] == lane]
+        for key in stale:
+            self.store.pop(key, None)
+            self.offloaded.discard(key)
+        return len(stale)

@@ -71,10 +71,13 @@ def freeze_update(
     state: FreezeState,
     relevance: jnp.ndarray,      # (B, S) Eq. 2 scores for the current step
     pos: jnp.ndarray,            # () or (B,) index of the newest token
-    step: jnp.ndarray,           # () global decode step (for frozen_at / decay)
+    step: jnp.ndarray,           # () or (B,) decode step (frozen_at / decay)
     cfg: FreezeConfig,
 ) -> Tuple[FreezeState, Dict[str, jnp.ndarray]]:
     """One rolling ASR-KF-EGR update (Alg. 1 lines 2–15).
+
+    `pos` and `step` may be per-lane (B,) vectors: continuous batching runs
+    every lane at its own position / decode-step counter.
 
     Returns (new_state, info) with info masks for the host-offload
     controller and telemetry:
@@ -85,6 +88,8 @@ def freeze_update(
     B, S = relevance.shape
     pos = jnp.asarray(pos)
     pos_b = pos[:, None] if pos.ndim else pos[None, None]
+    step = jnp.asarray(step)
+    step_b = step[:, None] if step.ndim else step
     idx = jnp.arange(S)[None, :]
     exists = idx <= pos_b
     in_window = idx > (pos_b - cfg.window)          # K most-recent tokens
@@ -99,7 +104,7 @@ def freeze_update(
     just_frozen = flagged & (d_sched > 0)
     frozen_mid = was_frozen | just_frozen
     d_mid = jnp.where(just_frozen, d_sched, state.d)
-    frozen_at = jnp.where(just_frozen, step, state.frozen_at)
+    frozen_at = jnp.where(just_frozen, step_b, state.frozen_at)
 
     # -- lines 10–14: rolling decrement + restore (previously-frozen only) #
     d_dec = jnp.where(was_frozen, d_mid - 1, d_mid)
@@ -108,7 +113,7 @@ def freeze_update(
     d_new = jnp.where(restored, 0, d_dec)
 
     # -- history window W: age out stale detections (periodic decay) ------ #
-    decay = (step % cfg.history) == (cfg.history - 1)
+    decay = (step_b % cfg.history) == (cfg.history - 1)
     c_new = jnp.where(decay, jnp.maximum(c_new - 1, 0), c_new)
 
     new_state = FreezeState(c=c_new, d=d_new, frozen=frozen_new, frozen_at=frozen_at)
@@ -143,7 +148,11 @@ def soft_reset(state: FreezeState, sel: jnp.ndarray) -> FreezeState:
 
 def window_reset(state: FreezeState, sel: jnp.ndarray, step: jnp.ndarray,
                  window: int) -> FreezeState:
-    """WR: unfreeze everything frozen within the last `window` steps."""
+    """WR: unfreeze everything frozen within the last `window` steps.
+    `step` may be per-lane (B,), aligned with the batch axis of the state."""
+    step = jnp.asarray(step)
+    if step.ndim:
+        step = _bmask(step, state.frozen_at)
     recent = state.frozen_at > (step - window)
     hit = _bmask(sel, state.d) & recent
     return state._replace(frozen=state.frozen & ~hit,
@@ -159,3 +168,11 @@ def full_reset(state: FreezeState, sel: jnp.ndarray) -> FreezeState:
         frozen=state.frozen & ~hit,
         frozen_at=jnp.where(hit, -1, state.frozen_at),
     )
+
+
+def reset_lane(state: FreezeState, lane) -> FreezeState:
+    """Lane-granular reset: clear every freeze bookkeeping array for one
+    batch lane.  Continuous batching reuses lanes across requests, so the
+    retiring request's counters/masks must not leak into its successor."""
+    sel = jnp.arange(state.c.shape[-2]) == jnp.asarray(lane)
+    return full_reset(state, sel)

@@ -38,6 +38,18 @@ def init_recovery_state(batch: int) -> RecoveryState:
     )
 
 
+def reset_lane(rec: RecoveryState, lane) -> RecoveryState:
+    """Lane-granular reset: a retiring request's entropy baseline and
+    escalation level must not carry over to the lane's next occupant."""
+    sel = jnp.arange(rec.level.shape[0]) == jnp.asarray(lane)
+    return RecoveryState(
+        ema_entropy=jnp.where(sel, 0.0, rec.ema_entropy),
+        level=jnp.where(sel, 0, rec.level),
+        calm_steps=jnp.where(sel, 0, rec.calm_steps),
+        steps_seen=jnp.where(sel, 0, rec.steps_seen),
+    )
+
+
 def token_entropy(logits: jnp.ndarray) -> jnp.ndarray:
     """Shannon entropy (nats) of the next-token distribution. logits: (B, V)."""
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)

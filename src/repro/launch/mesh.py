@@ -14,6 +14,20 @@ from __future__ import annotations
 import jax
 
 
+def abstract_mesh(shape, axes):
+    """Version-compatible ``jax.sharding.AbstractMesh`` factory.
+
+    JAX 0.4.35+ takes a tuple of (axis_name, size) pairs; earlier releases
+    took ``(shape, axis_names)`` positionally.  Spec-building tests and
+    dry-runs construct device-free meshes through this helper so they run
+    on either signature."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -1,4 +1,5 @@
-"""Serving launcher: run the ASR-KF-EGR engine for any --arch config.
+"""Serving launcher: run the ASR-KF-EGR continuous-batching engine for any
+--arch config.
 
 CPU/demo scale runs the tiny variant end-to-end; on a TPU slice the same
 driver binds the production mesh (launch/mesh.py) and the jitted steps carry
@@ -6,6 +7,10 @@ the in/out shardings from launch/specs.py.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --tiny \
         --requests 8 --tokens 128
+
+``--static`` serves the same trace through the original fixed-batch FIFO
+path for comparison (head-of-line blocking: every lane runs for the
+batch max n_tokens).
 """
 from __future__ import annotations
 
@@ -18,9 +23,9 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import model as MD
-from repro.serving.engine import Engine
+from repro.serving.engine import ContinuousEngine, Engine
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import Scheduler, StaticScheduler
 
 
 def main():
@@ -29,10 +34,14 @@ def main():
     ap.add_argument("--tiny", action="store_true",
                     help="reduced config (CPU scale)")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of engine lanes")
     ap.add_argument("--tokens", type=int, default=128)
     ap.add_argument("--max-seq", type=int, default=512)
     ap.add_argument("--no-freeze", action="store_true")
+    ap.add_argument("--static", action="store_true",
+                    help="static FIFO batching baseline instead of "
+                         "continuous batching")
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
@@ -45,11 +54,19 @@ def main():
             window=16, k_soft=1.0, entropy_abs_threshold=1e9))
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    print(f"arch={cfg.name} params={n/1e6:.1f}M freeze={not args.no_freeze}")
+    mode = "static" if args.static else "continuous"
+    print(f"arch={cfg.name} params={n/1e6:.1f}M "
+          f"freeze={not args.no_freeze} batching={mode}")
 
-    eng = Engine(cfg, params, max_seq=args.max_seq,
-                 enable_freeze=not args.no_freeze)
-    sched = Scheduler(eng, batch_size=args.batch)
+    if args.static:
+        eng = Engine(cfg, params, max_seq=args.max_seq,
+                     enable_freeze=not args.no_freeze)
+        sched = StaticScheduler(eng, batch_size=args.batch)
+    else:
+        eng = ContinuousEngine(cfg, params, max_seq=args.max_seq,
+                               n_lanes=args.batch,
+                               enable_freeze=not args.no_freeze)
+        sched = Scheduler(eng)
     rng = np.random.RandomState(0)
     for _ in range(args.requests):
         sched.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(16, 64)),
@@ -61,6 +78,12 @@ def main():
     total = sum(len(r.result) for r in sched.done.values())
     print(f"served {len(sched.done)} requests / {total} tokens in {dt:.1f}s "
           f"({1e3*dt/max(total,1):.1f} ms/token)")
+    if not args.static:
+        # first token of each request comes from its prefill, not a decode
+        # step, so decode-step utilization excludes it
+        decode_tokens = total - len(sched.done)
+        util = 100 * decode_tokens / max(eng.wall_step * args.batch, 1)
+        print(f"jitted steps: {eng.wall_step}  lane utilization: {util:.0f}%")
 
 
 if __name__ == "__main__":

@@ -62,6 +62,14 @@ def decode_step(params, cfg: ModelConfig, token, pos, step, state,
                             freeze_cfg, enable_freeze)
 
 
+def write_lane_state(cfg: ModelConfig, state, lane_state, lane):
+    """Scatter a single-lane (B=1) decode state into batch lane `lane` —
+    continuous-batching admission (decoder-only; enc-dec lanes would also
+    need their encoder outputs swapped, which static batching handles)."""
+    assert not is_encdec(cfg), "continuous batching is decoder-only"
+    return T.write_lane_state(state, lane_state, lane)
+
+
 def init_paged_decode_state(cfg: ModelConfig, batch: int, max_active_pages: int):
     assert not is_encdec(cfg), "paged long-context mode is decoder-only"
     return T.init_paged_decode_state(cfg, batch, max_active_pages)

@@ -242,6 +242,34 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
     )
 
 
+def write_lane_state(state: DecodeState, lane_state: DecodeState,
+                     lane: jnp.ndarray) -> DecodeState:
+    """Scatter a single-lane (B=1) DecodeState into batch lane `lane` of a
+    multi-lane state — the continuous-batching admission path.
+
+    The scatter overwrites the lane's KV cache, freeze masks, recurrent
+    states and recovery ladder wholesale, so admitting a freshly-prefilled
+    lane state doubles as the lane-granular reset (no stale freeze counters
+    or entropy baselines survive from the lane's previous occupant)."""
+    lane = jnp.asarray(lane, jnp.int32)
+    w1 = lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+        big, small.astype(big.dtype), lane, axis=1)
+    w0 = lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+        big, small.astype(big.dtype), lane, axis=0)
+    return DecodeState(
+        cache_k=w1(state.cache_k, lane_state.cache_k),
+        cache_v=w1(state.cache_v, lane_state.cache_v),
+        freeze=FreezeState(*(w1(a, b) for a, b
+                             in zip(state.freeze, lane_state.freeze))),
+        mamba={k: w1(state.mamba[k], lane_state.mamba[k])
+               for k in state.mamba},
+        rwkv={k: w1(state.rwkv[k], lane_state.rwkv[k])
+              for k in state.rwkv},
+        recovery=RecoveryState(*(w0(a, b) for a, b
+                                 in zip(state.recovery, lane_state.recovery))),
+    )
+
+
 def _split_xs(state: DecodeState, cfg: ModelConfig):
     """Reshape stacked per-layer state into per-unit xs for lax.scan."""
     roles = unit_roles(cfg)
@@ -352,24 +380,33 @@ def lm_prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
 def lm_decode_step(
     params, cfg: ModelConfig,
     token: jnp.ndarray,            # (B,) int32
-    pos: jnp.ndarray,              # () int32 — slot for this token
-    step: jnp.ndarray,             # () int32 — decode step counter
+    pos: jnp.ndarray,              # () or (B,) int32 — slot for this token
+    step: jnp.ndarray,             # () or (B,) int32 — decode step counter
     state: DecodeState,
     freeze_cfg: Optional[FreezeConfig] = None,
     enable_freeze: bool = True,
 ) -> Tuple[jnp.ndarray, DecodeState, Dict[str, jnp.ndarray]]:
     """One ASR-KF-EGR decode step (Algorithm 1 + recovery).
+
+    `pos`/`step` may be per-lane (B,) vectors — continuous batching runs
+    every lane at its own position and decode-step counter; scalar values
+    keep the single-request lockstep path (and its slice-write fast path).
+
     Returns (logits (B, V), new state, info)."""
     fcfg = freeze_cfg or cfg.freeze
     roles = unit_roles(cfg)
     B = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    step = jnp.asarray(step, jnp.int32)
+    per_lane = pos.ndim == 1
     Smax = state.cache_k.shape[2] if state.cache_k.size else 0
     x = embed(params, cfg, token[:, None], None)[:, 0]          # (B, D)
     if cfg.decode_act_gather:
         # H2: batch-replicated, feature-sharded (over fsdp axes) decode
         # activations — 2-D-sharded weights contract locally and never move
         x = L.dag(x, cfg, ".f")
-    positions = jnp.full((B, 1), pos)
+    positions = pos[:, None] if per_lane else jnp.full((B, 1), pos)
+    pos_col = pos[:, None] if per_lane else pos
     xs_state = _split_xs(state, cfg)
 
     def body(carry, xs):
@@ -391,13 +428,18 @@ def lm_decode_step(
                     lp["attn"], xn[:, None], positions, cfg.rope_theta)
                 q, k, v = q[:, 0], k[:, 0], v[:, 0]             # (B,H/KVH,hd)
                 ck, cv = xs["cache_k"][ia], xs["cache_v"][ia]
-                ck = jax.lax.dynamic_update_slice_in_dim(
-                    ck, k.astype(ck.dtype)[:, None], pos, axis=1)
-                cv = jax.lax.dynamic_update_slice_in_dim(
-                    cv, v.astype(cv.dtype)[:, None], pos, axis=1)
+                if per_lane:
+                    lanes = jnp.arange(B)
+                    ck = ck.at[lanes, pos].set(k.astype(ck.dtype))
+                    cv = cv.at[lanes, pos].set(v.astype(cv.dtype))
+                else:
+                    ck = jax.lax.dynamic_update_slice_in_dim(
+                        ck, k.astype(ck.dtype)[:, None], pos, axis=1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(
+                        cv, v.astype(cv.dtype)[:, None], pos, axis=1)
                 fz = FreezeState(*(a[ia] for a in xs["freeze"]))
                 idx = jnp.arange(Smax)[None, :]
-                amask = (idx <= pos) & ~fz.frozen
+                amask = (idx <= pos_col) & ~fz.frozen
                 o, rel = L.decode_attention(q, ck, cv, amask)
                 if cfg.decode_act_gather:
                     o = L.dag(o, cfg, ".m.")
@@ -451,7 +493,8 @@ def lm_decode_step(
         new_state = new_state._replace(recovery=rec, freeze=fz)
         info.update(rinfo)
     if attn_layer_count(cfg):
-        exists = jnp.arange(Smax)[None, None, :] <= pos
+        exists = jnp.arange(Smax)[None, None, :] <= \
+            (pos[None, :, None] if per_lane else pos)
         info["n_frozen"] = jnp.sum(new_state.freeze.frozen & exists,
                                    axis=(0, 2))   # (B,) summed over layers
         info["n_active"] = jnp.sum(~new_state.freeze.frozen & exists,

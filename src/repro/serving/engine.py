@@ -1,28 +1,44 @@
-"""ASR-KF-EGR serving engine: the host-side generation loop wrapping the
-jitted prefill / decode steps.
+"""ASR-KF-EGR serving engines.
 
-Responsibilities beyond the jitted step:
+Two generation drivers share the jitted prefill / decode-step cores:
+
+* ``Engine`` — static one-shot batched generation: every lane starts
+  together and runs for the same number of steps (benchmark arms, examples,
+  the paper's Table 1 protocol).
+
+* ``ContinuousEngine`` — the production path: a jitted per-step core with
+  **per-lane** ``pos`` / ``step`` vectors plus a host-side lane manager.
+  Lanes admit a new request the moment their current one retires —
+  mid-generation, without draining the batch — via a per-lane
+  prefill-into-slot (``model.write_lane_state``).  Admission overwrites the
+  lane's KV / freeze / recovery state wholesale, so no freeze counters or
+  entropy baselines leak between requests sharing a lane.
+
+Host-side responsibilities beyond the jitted step (both drivers):
   * page-batched host offload of fully-frozen KV pages (the paper's
-    "frozen storage F" — cache.HostOffloadController)
-  * Rewalk Regeneration (recovery level 4): rewind `rewalk_tokens`, clear
-    freeze state (FR already applied in-step), re-decode
+    "frozen storage F" — cache.HostOffloadController, bookkeeping keyed
+    per (layer, lane, page) so lane reuse can drop exactly its own pages)
+  * Rewalk Regeneration (recovery level 4): rewind ``rewalk_tokens``,
+    clear freeze state (FR already applied in-step), re-decode — history,
+    rewind budget and cooldown are tracked per lane
   * telemetry: active/frozen KV trajectory (paper Fig. 1), compression
-    ratio (Table 1), entropy/recovery events
+    ratio (Table 1), entropy/recovery events — one append per lane-step
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FreezeConfig, ModelConfig
-from repro.core.cache import HostOffloadController
+from repro.core.cache import HostOffloadController, KVCache
 from repro.models import model as MD
-from repro.serving.sampling import SamplingParams, sample
+from repro.serving.sampling import (SamplingParams, params_arrays, sample,
+                                    sample_batched)
 
 
 @dataclasses.dataclass
@@ -45,8 +61,19 @@ class GenerationResult:
         return 1.0 - self.active_kv[-1] / max(self.total_kv[-1], 1)
 
 
+@dataclasses.dataclass
+class Request:
+    """One generation request, as seen by the scheduler and lane manager."""
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    n_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    result: Optional[np.ndarray] = None
+    telemetry: Optional[GenerationResult] = None
+
+
 class Engine:
-    """Batched generation with ASR-KF-EGR freeze management."""
+    """Static batched generation with ASR-KF-EGR freeze management."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int,
                  freeze_cfg: Optional[FreezeConfig] = None,
@@ -93,7 +120,7 @@ class Engine:
             logits, state, info = self._step(
                 self.params, token=tok, pos=jnp.int32(pos),
                 step=jnp.int32(step), state=state)
-            # ---- telemetry ----
+            # ---- telemetry (every list appends exactly once per step) ----
             n_layers_attn = max(state.freeze.frozen.shape[0], 1) \
                 if hasattr(state, "freeze") else 1
             if "n_active" in info:
@@ -125,10 +152,11 @@ class Engine:
                 last_rewind_step = step
                 tok = history[-1][0] if history else tok
                 step += 1
+                res.offloaded_tokens.append(
+                    offloader.offloaded_tokens if offloader else 0)
                 continue
             # ---- host offload of fully-frozen pages ----
             if offloader is not None and step % 8 == 7:
-                from repro.core.cache import KVCache
                 cache = KVCache(k=state.cache_k, v=state.cache_v)
                 cache = offloader.sync(cache, np.asarray(state.freeze.frozen))
                 state = state._replace(cache_k=cache.k, cache_v=cache.v)
@@ -143,3 +171,290 @@ class Engine:
             step += 1
         res.tokens = np.stack(out_tokens, axis=1)
         return res
+
+
+# ===================================================================== #
+# Continuous batching
+# ===================================================================== #
+@dataclasses.dataclass
+class _Lane:
+    """Host-side bookkeeping for one batch slot of the jitted step."""
+    request: Optional[Request] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    history: List[Tuple[int, int]] = \
+        dataclasses.field(default_factory=list)      # (token, pos) for rewind
+    rewinds: int = 0
+    last_rewind_step: int = -10**9
+
+
+class ContinuousEngine:
+    """Continuous-batching generation: per-lane admission and retirement.
+
+    The jitted step always runs the full ``n_lanes``-wide batch (fixed
+    shapes, one compile); idle lanes decode garbage that the host ignores.
+    Prompt lengths are padded to power-of-two buckets so the per-lane
+    prefill compiles O(log max_seq) times, not once per prompt length.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
+                 freeze_cfg: Optional[FreezeConfig] = None,
+                 enable_freeze: bool = True,
+                 offload: bool = True,
+                 max_rewinds: int = 4,
+                 rewind_cooldown: int = 32,
+                 pad_id: int = 0,
+                 offload_every: int = 8,
+                 seed: int = 0,
+                 min_prompt_bucket: int = 8,
+                 debug_lane_checks: bool = False):
+        assert not cfg.is_encoder_decoder, \
+            "continuous batching is decoder-only (enc-dec uses Engine)"
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.n_lanes = n_lanes
+        self.fcfg = freeze_cfg or cfg.freeze
+        self.enable_freeze = enable_freeze
+        self.max_rewinds = max_rewinds
+        self.rewind_cooldown = rewind_cooldown
+        self.pad_id = pad_id
+        self.offload_every = offload_every
+        self.min_prompt_bucket = min_prompt_bucket
+        self.debug_lane_checks = debug_lane_checks
+        self._prefill = jax.jit(functools.partial(MD.prefill, cfg=cfg))
+        self._step = jax.jit(functools.partial(
+            MD.decode_step, cfg=cfg, freeze_cfg=self.fcfg,
+            enable_freeze=enable_freeze))
+        self._write_lane = jax.jit(functools.partial(MD.write_lane_state, cfg))
+        self._sample = jax.jit(sample_batched)
+        self.state = MD.init_decode_state(cfg, n_lanes, max_seq)
+        self.lanes = [_Lane() for _ in range(n_lanes)]
+        self.pos = np.zeros(n_lanes, np.int32)
+        self.step = np.zeros(n_lanes, np.int32)
+        self.tok = np.full(n_lanes, pad_id, np.int32)
+        greedy = SamplingParams.greedy()
+        self._temp, self._topk, self._topp = (
+            np.array(a) for a in params_arrays([greedy] * n_lanes))
+        self._lane_params_dev = None     # device mirror, refreshed on admit
+        self.key = jax.random.PRNGKey(seed)
+        self.offloader = HostOffloadController(self.fcfg.page_size) \
+            if (offload and enable_freeze) else None
+        self.wall_step = 0          # number of jitted decode steps issued
+        self.events: List[Dict[str, Any]] = []   # admit / finish log
+
+    @classmethod
+    def from_engine(cls, engine: Engine, n_lanes: int,
+                    **kw) -> "ContinuousEngine":
+        """Build a continuous engine sharing a static Engine's model and
+        freeze settings (the Scheduler's compatibility path)."""
+        return cls(engine.cfg, engine.params, engine.max_seq, n_lanes,
+                   freeze_cfg=engine.fcfg,
+                   enable_freeze=engine.enable_freeze,
+                   offload=engine.offload,
+                   max_rewinds=engine.max_rewinds,
+                   rewind_cooldown=engine.rewind_cooldown, **kw)
+
+    # ---------------- lane accounting ---------------- #
+    @property
+    def n_active_lanes(self) -> int:
+        return sum(1 for l in self.lanes if l.request is not None)
+
+    @property
+    def has_free_lane(self) -> bool:
+        return any(l.request is None for l in self.lanes)
+
+    def _free_lane(self) -> int:
+        for i, l in enumerate(self.lanes):
+            if l.request is None:
+                return i
+        raise RuntimeError("no free lane")
+
+    def _bucket(self, prompt_len: int, n_tokens: int) -> int:
+        """Pad the prompt to a power-of-two bucket (bounded prefill
+        recompiles), falling back to the exact length when the bucket
+        would not leave room for generation."""
+        b = self.min_prompt_bucket
+        while b < prompt_len:
+            b *= 2
+        if b + n_tokens > self.max_seq:
+            b = prompt_len
+        if b + n_tokens > self.max_seq:
+            raise ValueError(
+                f"request needs {prompt_len} prompt + {n_tokens} generated "
+                f"slots but the engine was built with max_seq={self.max_seq}")
+        return b
+
+    # ---------------- admission ---------------- #
+    def admit(self, req: Request, lane: Optional[int] = None) -> int:
+        """Prefill `req` into a free lane mid-stream.  The single-lane
+        prefill state is scattered over the lane's slice of the batched
+        decode state, which wholesale-resets its KV cache, freeze masks and
+        recovery ladder; host-side page-offload bookkeeping for the lane's
+        previous occupant is dropped."""
+        if lane is None:
+            lane = self._free_lane()
+        l = self.lanes[lane]
+        assert l.request is None, f"lane {lane} is busy"
+        prompt = np.asarray(req.prompt, np.int32)
+        sp = self._bucket(len(prompt), req.n_tokens)
+        toks = np.full((1, sp), self.pad_id, np.int32)
+        toks[0, sp - len(prompt):] = prompt           # left-pad, as in prefill
+        event = {"event": "admit", "uid": req.uid, "lane": lane,
+                 "wall_step": self.wall_step}
+        if self.debug_lane_checks:
+            event["frozen_before"] = int(
+                np.asarray(self.state.freeze.frozen[:, lane]).sum())
+            event["recovery_steps_before"] = int(
+                np.asarray(self.state.recovery.steps_seen)[lane])
+        lane_state = MD.init_decode_state(self.cfg, 1, self.max_seq)
+        logits, lane_state = self._prefill(
+            self.params, batch={"tokens": jnp.asarray(toks)}, state=lane_state)
+        self.state = self._write_lane(self.state, lane_state, jnp.int32(lane))
+        if self.offloader is not None:
+            self.offloader.drop_lane(lane)
+        if self.debug_lane_checks:
+            event["frozen_after"] = int(
+                np.asarray(self.state.freeze.frozen[:, lane]).sum())
+            event["recovery_steps_after"] = int(
+                np.asarray(self.state.recovery.steps_seen)[lane])
+        self.pos[lane] = sp
+        self.step[lane] = 0
+        self.key, sub = jax.random.split(self.key)
+        first = int(np.asarray(sample(logits, sub, req.sampling))[0])
+        self.tok[lane] = first
+        self._temp[lane] = req.sampling.temperature
+        self._topk[lane] = req.sampling.top_k
+        self._topp[lane] = req.sampling.top_p
+        self._lane_params_dev = None
+        l.request = req
+        l.generated = [first]
+        l.history = []
+        l.rewinds = 0
+        l.last_rewind_step = -10**9
+        req.telemetry = GenerationResult([], [], [], [], [], [], [])
+        self.events.append(event)
+        return lane
+
+    # ---------------- stepping ---------------- #
+    def step_once(self) -> List[Request]:
+        """Run one jitted decode step over all lanes; returns the requests
+        that retired this step (their lanes are immediately free)."""
+        active = [i for i, l in enumerate(self.lanes) if l.request is not None]
+        if not active:
+            return []
+        logits, self.state, info = self._step(
+            self.params, token=jnp.asarray(self.tok),
+            pos=jnp.asarray(self.pos), step=jnp.asarray(self.step),
+            state=self.state)
+        self.wall_step += 1
+        # enqueue per-lane sampling right behind the step, then pull it and
+        # the telemetry in ONE device->host transfer (rewound lanes simply
+        # discard their draw)
+        self.key, sub = jax.random.split(self.key)
+        if self._lane_params_dev is None:
+            self._lane_params_dev = (jnp.asarray(self._temp),
+                                     jnp.asarray(self._topk),
+                                     jnp.asarray(self._topp))
+        keys = ("n_active", "n_frozen", "entropy", "spike", "level",
+                "rr_request")
+        host = jax.device_get(dict(
+            {k: info[k] for k in keys if k in info},
+            toks=self._sample(logits, sub, *self._lane_params_dev)))
+        get = host.get
+        n_active, n_frozen = get("n_active"), get("n_frozen")
+        entropy, spike, level = get("entropy"), get("spike"), get("level")
+        rr = get("rr_request")
+        toks = host["toks"]
+        n_layers_attn = max(self.state.freeze.frozen.shape[0], 1)
+
+        # ---- per-lane telemetry: one append per lane-step ----
+        for i in active:
+            res = self.lanes[i].request.telemetry
+            if n_active is not None:
+                res.active_kv.append(float(n_active[i]) / n_layers_attn)
+                res.frozen_kv.append(float(n_frozen[i]) / n_layers_attn)
+            else:
+                res.active_kv.append(float(self.pos[i] + 1))
+                res.frozen_kv.append(0.0)
+            res.total_kv.append(int(self.pos[i]) + 1)
+            if entropy is not None:
+                res.entropy.append(float(entropy[i]))
+                if spike is not None and bool(spike[i]):
+                    res.recovery_events.append({
+                        "step": int(self.step[i]),
+                        "level": int(level[i]),
+                        "entropy": float(entropy[i]),
+                    })
+
+        # ---- per-lane Rewalk Regeneration ----
+        rewound = set()
+        if rr is not None:
+            for i in active:
+                l = self.lanes[i]
+                if bool(rr[i]) and len(l.history) >= self.fcfg.rewalk_tokens \
+                        and l.rewinds < self.max_rewinds \
+                        and int(self.step[i]) - l.last_rewind_step \
+                            >= self.rewind_cooldown:
+                    nback = self.fcfg.rewalk_tokens
+                    del l.history[-nback:]
+                    del l.generated[-nback:]
+                    self.pos[i] -= nback
+                    l.rewinds += 1
+                    l.last_rewind_step = int(self.step[i])
+                    l.request.telemetry.rewinds += 1
+                    if l.history:
+                        self.tok[i] = l.history[-1][0]
+                    self.step[i] += 1
+                    rewound.add(i)
+
+        # ---- page-batched host offload ----
+        if self.offloader is not None \
+                and self.wall_step % self.offload_every == 0:
+            frozen = np.asarray(self.state.freeze.frozen)
+            idle = [i for i, l in enumerate(self.lanes) if l.request is None]
+            if idle:   # idle lanes decode garbage; never offload it
+                frozen = frozen.copy()
+                frozen[:, idle, :] = False
+            cache = KVCache(k=self.state.cache_k, v=self.state.cache_v)
+            cache = self.offloader.sync(cache, frozen)
+            self.state = self.state._replace(cache_k=cache.k, cache_v=cache.v)
+        for i in active:
+            self.lanes[i].request.telemetry.offloaded_tokens.append(
+                self.offloader.offloaded_tokens_lane(i)
+                if self.offloader else 0)
+
+        # ---- commit sampled tokens, retire finished lanes ----
+        finished = []
+        for i in active:
+            if i in rewound:
+                continue
+            l = self.lanes[i]
+            t = int(toks[i])
+            l.history.append((t, int(self.pos[i])))
+            l.generated.append(t)
+            self.tok[i] = t
+            self.pos[i] += 1
+            self.step[i] += 1
+            if len(l.generated) >= l.request.n_tokens:
+                finished.append(self._retire(i))
+        return finished
+
+    def _retire(self, lane: int) -> Request:
+        l = self.lanes[lane]
+        req = l.request
+        req.result = np.asarray(l.generated[: req.n_tokens], np.int32)
+        req.telemetry.tokens = req.result[None, :]
+        self.events.append({"event": "finish", "uid": req.uid, "lane": lane,
+                            "wall_step": self.wall_step})
+        l.request = None
+        l.generated = []
+        l.history = []
+        # park the idle lane: greedy sampling, position clamped in-bounds,
+        # and the retired request's offloaded pages released right away
+        # (offload sync also masks idle lanes, so no churn until re-admit)
+        self._temp[lane] = 0.0
+        self._lane_params_dev = None
+        self.pos[lane] = min(int(self.pos[lane]), self.max_seq - 1)
+        if self.offloader is not None:
+            self.offloader.drop_lane(lane)
+        return req

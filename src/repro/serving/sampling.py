@@ -1,9 +1,14 @@
 """Token sampling: temperature / top-k / top-p (paper §4.1: T=0.7,
-top-k=40, top-p=0.9; greedy T=0 for the passkey retrieval test)."""
+top-k=40, top-p=0.9; greedy T=0 for the passkey retrieval test).
+
+Two entry points: `sample` applies one SamplingParams to the whole batch
+(static batching / single request); `sample_batched` takes per-lane
+temperature / top-k / top-p vectors so one jitted call serves a continuous
+batch of heterogeneous requests."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,3 +42,45 @@ def sample(logits: jnp.ndarray, key: jax.Array,
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def params_arrays(params: Sequence[SamplingParams]):
+    """Pack per-lane SamplingParams into the (temperature, top_k, top_p)
+    vectors consumed by `sample_batched`."""
+    return (jnp.asarray([p.temperature for p in params], jnp.float32),
+            jnp.asarray([p.top_k for p in params], jnp.int32),
+            jnp.asarray([p.top_p for p in params], jnp.float32))
+
+
+def sample_batched(logits: jnp.ndarray, key: jax.Array,
+                   temperature: jnp.ndarray,   # (B,) f32; <=0 -> greedy
+                   top_k: jnp.ndarray,         # (B,) i32; <=0 -> disabled
+                   top_p: jnp.ndarray,         # (B,) f32; >=1 -> disabled
+                   ) -> jnp.ndarray:
+    """Per-lane sampling: each row of `logits` (B, V) gets its own
+    temperature / top-k / top-p.  One fixed-shape jitted computation covers
+    every lane mix, so continuous batching never recompiles on admission.
+
+    Row-wise equivalent of `sample`: greedy rows take the argmax; top-k is
+    a rank mask (rank < k); top-p keeps everything above the nucleus
+    cutoff of the sorted distribution."""
+    B, V = logits.shape
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k as a rank mask (k is traced, so lax.top_k's static k won't do)
+    ranks = jnp.argsort(jnp.argsort(-scaled, axis=-1), axis=-1)   # 0 = max
+    k_eff = jnp.where(top_k > 0, top_k, V)[:, None]
+    masked = jnp.where(ranks < k_eff, scaled, -jnp.inf)
+    # top-p nucleus over the top-k-renormalized distribution (matching
+    # `sample`, which applies top-k before top-p); p>=1 rows keep
+    # everything (cutoff clamps to the min row value)
+    sorted_desc = jnp.sort(masked, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
+    p_eff = jnp.where(top_p >= 1.0, 2.0, top_p)[:, None]
+    cutoff_idx = jnp.minimum(jnp.sum(cum < p_eff, axis=-1, keepdims=True),
+                             V - 1)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
+    masked = jnp.where(masked >= cutoff, masked, -jnp.inf)
+    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)

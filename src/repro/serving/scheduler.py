@@ -1,29 +1,77 @@
-"""Request scheduler: groups incoming generation requests into fixed-size
-padded batches for the Engine (static batching with FIFO admission —
-the jitted step has a fixed batch dim, so the scheduler pads partial
-batches with dummy lanes and masks their outputs)."""
+"""Request scheduling over the serving engines.
+
+``Scheduler`` is a thin admission queue over ``ContinuousEngine``: it holds
+pending requests and feeds one into a lane the moment that lane retires —
+mid-generation — so short requests never wait for a long co-batched one
+(no head-of-line blocking).  All batching mechanics (per-lane prefill,
+freeze-state reset, retirement) live in the engine.
+
+``StaticScheduler`` keeps the original fixed-batch FIFO behaviour — pad a
+batch, run everyone for max(n_tokens) steps, only then admit more — as the
+comparison baseline for ``benchmarks/continuous_batching.py``.
+"""
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import Engine, GenerationResult
+from repro.serving.engine import ContinuousEngine, Engine, Request
 from repro.serving.sampling import SamplingParams
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) int32
-    n_tokens: int
-    sampling: SamplingParams = SamplingParams()
-    result: Optional[np.ndarray] = None
-
-
 class Scheduler:
+    """FIFO admission queue over the continuous-batching engine."""
+
+    def __init__(self, engine: Union[Engine, ContinuousEngine],
+                 batch_size: Optional[int] = None, pad_id: int = 0, **kw):
+        if isinstance(engine, ContinuousEngine):
+            self.engine = engine
+        else:
+            self.engine = ContinuousEngine.from_engine(
+                engine, n_lanes=batch_size or 1, pad_id=pad_id, **kw)
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._uid = 0
+
+    def submit(self, prompt: np.ndarray, n_tokens: int,
+               sampling: SamplingParams = SamplingParams()) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  n_tokens, sampling))
+        return self._uid
+
+    def _admit_free(self) -> None:
+        while self.queue and self.engine.has_free_lane:
+            self.engine.admit(self.queue.pop(0))
+
+    def run_once(self) -> List[int]:
+        """Serve until at least one request completes (lanes refill from the
+        queue as they free); returns the completed uids."""
+        out: List[int] = []
+        while not out:
+            self._admit_free()
+            if not self.engine.n_active_lanes:
+                break
+            for req in self.engine.step_once():
+                self.done[req.uid] = req
+                out.append(req.uid)
+        return out
+
+    def run(self) -> None:
+        while self.queue or self.engine.n_active_lanes:
+            if not self.run_once():
+                break
+
+
+class StaticScheduler:
+    """Original static FIFO batcher (head-of-line blocking by design): pads
+    a fixed batch, runs every lane for max(n_tokens) steps, then admits the
+    next batch.  Kept as the benchmark baseline; note it applies one
+    request's SamplingParams to the whole batch — the limitation that
+    motivated per-lane sampling in the continuous engine."""
+
     def __init__(self, engine: Engine, batch_size: int, pad_id: int = 0):
         self.engine = engine
         self.batch_size = batch_size
@@ -40,7 +88,7 @@ class Scheduler:
         return self._uid
 
     def run_once(self) -> List[int]:
-        """Serve one batch from the queue; returns completed uids."""
+        """Serve one padded batch from the queue; returns completed uids."""
         if not self.queue:
             return []
         batch = self.queue[: self.batch_size]

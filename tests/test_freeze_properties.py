@@ -1,0 +1,97 @@
+"""Hypothesis property tests for the freeze state machine — split from
+test_freeze.py so the unit tests stay collectable without hypothesis; this
+module degrades to a skip (pip install -r requirements-dev.txt)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FreezeConfig
+from repro.core.freeze import freeze_update, init_freeze_state
+
+
+def mk_cfg(**kw):
+    base = dict(window=4, tau=0.5, k_soft=2.0, history=10**6,
+                recovery_enabled=False)
+    base.update(kw)
+    return FreezeConfig(**base)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    seq=st.integers(8, 64),
+    window=st.integers(0, 8),
+    steps=st.integers(1, 10),
+    ksoft=st.floats(0.5, 4.0),
+)
+def test_freeze_invariants(seed, seq, window, steps, ksoft):
+    """System invariants hold for arbitrary relevance streams."""
+    cfg = mk_cfg(window=window, k_soft=ksoft, tau=0.5)
+    rng = np.random.RandomState(seed)
+    state = init_freeze_state(2, seq)
+    pos = seq - 1
+    for step in range(steps):
+        rel = jnp.asarray(rng.rand(2, seq).astype(np.float32))
+        prev = state
+        state, info = freeze_update(state, rel, jnp.int32(pos),
+                                    jnp.int32(step), cfg)
+        frozen = np.asarray(state.frozen)
+        d = np.asarray(state.d)
+        c = np.asarray(state.c)
+        idx = np.arange(seq)[None, :]
+        exists = np.broadcast_to(idx <= pos, frozen.shape)
+        # 1. never freeze inside the sliding window or beyond pos
+        assert not frozen[~exists].any()
+        assert not frozen[:, max(0, pos - window + 1):].any()
+        # 2. timers non-negative; frozen slots carry positive-or-zero timers
+        assert (d >= 0).all()
+        # 3. counters never decrease except via history decay (disabled here)
+        assert (c >= np.asarray(prev.c) - 0).all()
+        # 4. a slot cannot be both just_frozen and restored
+        jf = np.asarray(info["just_frozen"])
+        rs = np.asarray(info["restored"])
+        assert not (jf & rs).any()
+        # 5. active = exists & ~frozen
+        np.testing.assert_array_equal(
+            np.asarray(info["active"]), exists & ~frozen)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_reversibility_no_permanent_loss(seed):
+    """Paper's core claim: freezing is reversible — any frozen token returns
+    to the active set within a bounded number of steps once it stops being
+    flagged (relevance above tau)."""
+    cfg = mk_cfg(window=2, k_soft=1.0)
+    rng = np.random.RandomState(seed)
+    state = init_freeze_state(1, 16)
+    # aggressively freeze for a while
+    for step in range(20):
+        state, _ = freeze_update(state, jnp.zeros((1, 16)), jnp.int32(15),
+                                 jnp.int32(step), cfg)
+    max_d = int(np.asarray(state.d).max())
+    # now everything is relevant: all slots must unfreeze within max_d+1 steps
+    for step in range(20, 21 + max_d):
+        state, _ = freeze_update(state, jnp.full((1, 16), 10.0),
+                                 jnp.int32(15), jnp.int32(step), cfg)
+    assert not np.asarray(state.frozen).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 8))
+def test_per_lane_equals_scalar(seed, steps):
+    """The per-lane (B,) pos/step path is trajectory-identical to the
+    scalar path when all lanes share one clock."""
+    cfg = mk_cfg(window=3, k_soft=1.0, history=5)
+    rng = np.random.RandomState(seed)
+    s1 = s2 = init_freeze_state(2, 12)
+    for step in range(steps):
+        rel = jnp.asarray(rng.rand(2, 12).astype(np.float32))
+        s1, _ = freeze_update(s1, rel, jnp.int32(11), jnp.int32(step), cfg)
+        s2, _ = freeze_update(s2, rel, jnp.full((2,), 11, jnp.int32),
+                              jnp.full((2,), step, jnp.int32), cfg)
+    for a, b in zip(s1, s2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -44,6 +44,24 @@ class TestSampling:
             t = int(sample(logits, jax.random.PRNGKey(seed), p)[0])
             assert t in (0, 1)
 
+    def test_batched_per_lane_support(self):
+        """sample_batched applies each row's own params: greedy row, top-k
+        row and top-p row restricted exactly as the single-request sampler
+        restricts them."""
+        from repro.serving.sampling import sample_batched
+        logits = jnp.array([[0.0, 5.0, 1.0, -1.0],
+                            [0.0, 10.0, 9.0, -50.0],
+                            [10.0, 9.5, -10.0, -10.0]])
+        temp = jnp.array([0.0, 1.0, 1.0])
+        topk = jnp.array([0, 2, 0])
+        topp = jnp.array([1.0, 1.0, 0.8])
+        for seed in range(20):
+            t = np.asarray(sample_batched(logits, jax.random.PRNGKey(seed),
+                                          temp, topk, topp))
+            assert t[0] == 1                  # greedy = argmax
+            assert t[1] in (1, 2)             # top-k=2
+            assert t[2] in (0, 1)             # top-p=0.8
+
 
 class TestEngine:
     def test_generation_with_compression(self, tiny):
@@ -77,6 +95,23 @@ class TestEngine:
         r1 = eng.generate(batch, 40, SamplingParams.greedy())
         r2 = eng.generate(batch, 40, SamplingParams.greedy())
         np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+    def test_rewind_telemetry_stays_aligned(self, tiny):
+        """Regression: the Rewalk-Regeneration continue path used to skip
+        the offloaded_tokens append, so after any rewind the telemetry
+        lists drifted out of alignment."""
+        cfg, params = tiny
+        fc = dataclasses.replace(cfg.freeze, recovery_enabled=True,
+                                 entropy_abs_threshold=0.0)
+        eng = Engine(dataclasses.replace(cfg, freeze=fc), params, max_seq=160)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (1, 16),
+                                              0, cfg.vocab_size)}
+        res = eng.generate(batch, 48, SamplingParams(temperature=0.7))
+        assert res.rewinds >= 1
+        n = len(res.active_kv)
+        assert n > 47     # rewind steps add loop iterations beyond n_tokens-1
+        assert len(res.frozen_kv) == len(res.total_kv) \
+            == len(res.offloaded_tokens) == len(res.entropy) == n
 
 
 class TestScheduler:
