@@ -1,18 +1,29 @@
-"""Continuous vs static batching on a mixed-length request trace.
+"""Serving benchmarks over mixed request traces.
 
-The static FIFO batcher runs every batch for max(n_tokens) steps, so short
-requests pay for the longest co-batched one (head-of-line blocking); the
-continuous engine retires a lane and admits the next request mid-stream.
-This benchmark serves the same trace through both paths and reports
-throughput (generated tokens / s), per-request latency (p50 / p99 from
-trace start to completion) and jitted-step counts — the deterministic
-utilization measure that doesn't depend on host speed.
+Two comparisons, both reported per run:
 
-    PYTHONPATH=src python -m benchmarks.continuous_batching
+1. **static vs continuous** (PR 1): the static FIFO batcher runs every batch
+   for max(n_tokens) steps (head-of-line blocking); the continuous engine
+   retires a lane and admits the next request mid-stream.  Deterministic
+   mixed trace, throughput + latency + jitted-step counts.
+
+2. **contiguous vs paged continuous** (PR 2): a long-prompt mixed trace
+   with Poisson arrivals served by both continuous engines.  The contiguous
+   engine carries a dense (n_lanes, max_seq) cache and prefills each prompt
+   in one blocking call; the paged engine decodes over a bounded
+   O(P * page) active pool per lane with chunked prefill interleaved into
+   resident decode steps.  Reported: throughput, arrival-to-completion
+   latency p50/p99, peak live device KV bytes (incl. prefill scratch), and
+   page swap counts — the acceptance check is paged winning p99 at strictly
+   lower peak KV.
+
+    PYTHONPATH=src python -m benchmarks.continuous_batching           # full
+    PYTHONPATH=src python -m benchmarks.continuous_batching --smoke   # CI
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import time
@@ -21,8 +32,8 @@ import numpy as np
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
-# mixed-length trace from the acceptance criteria: 8 requests, n_tokens
-# spanning 8..64, served on 4 lanes
+# mixed-length trace from the PR-1 acceptance criteria: 8 requests,
+# n_tokens spanning 8..64, served on 4 lanes
 TRACE = [64, 8, 8, 8, 32, 16, 8, 8]
 N_LANES = 4
 MAX_SEQ = 160
@@ -91,10 +102,121 @@ def _stats(wall_s, latencies, steps):
     }
 
 
+# ===================================================================== #
+# Long-prompt mixed trace, Poisson arrivals: contiguous vs paged engine
+# ===================================================================== #
+def long_trace(cfg, smoke: bool, seed=0):
+    """(prompt_len, n_tokens) mix dominated by a few very long prompts —
+    the head-of-line-blocking case chunked prefill is built for."""
+    if smoke:
+        lens = [(192, 12), (24, 12), (16, 12), (192, 12), (24, 12), (16, 12)]
+        mean_gap = 0.05
+    else:
+        lens = [(768, 24), (48, 24), (32, 24), (640, 24), (48, 16),
+                (768, 24), (32, 16), (48, 24), (640, 16), (32, 24),
+                (48, 16), (768, 24), (32, 16), (48, 24)]
+        mean_gap = 0.08
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(mean_gap, size=len(lens)))
+    from repro.serving.sampling import SamplingParams
+    reqs = [(rng.randint(0, cfg.vocab_size, size=pl), n,
+             SamplingParams(temperature=0.7)) for pl, n in lens]
+    return reqs, arrivals
+
+
+def serve_poisson(engine, reqs, arrivals):
+    """Drive a continuous engine (contiguous or paged — same lane API)
+    against timed arrivals; latency is arrival -> completion.  Step and
+    swap counts are deltas, so the same engine can serve a warmup pass
+    first — jit caches live on the engine's wrappers, so warming a
+    throwaway engine would warm nothing."""
+    from repro.serving.engine import Request
+
+    step0 = engine.wall_step
+    pending = list(zip(range(1, len(reqs) + 1), reqs, arrivals))
+    arr_of = {i + 1: a for i, a in enumerate(arrivals)}
+    queue, lat, done = [], [], 0
+    t0 = time.time()
+    while done < len(reqs):
+        now = time.time() - t0
+        if not queue and engine.n_active_lanes == 0 and pending \
+                and pending[0][2] > now:
+            t0 -= pending[0][2] - now     # fast-forward idle gaps
+            now = pending[0][2]
+        while pending and pending[0][2] <= now:
+            uid, (prompt, n, sp), _ = pending.pop(0)
+            queue.append(Request(uid, np.asarray(prompt, np.int32), n, sp))
+        while queue and engine.has_free_lane:
+            engine.admit(queue.pop(0))
+        if engine.n_active_lanes == 0:
+            continue
+        for req in engine.step_once():
+            lat.append((time.time() - t0) - arr_of[req.uid])
+            done += 1
+    wall = time.time() - t0
+    total_tokens = sum(n for _, n, _ in reqs)
+    return {
+        "wall_s": round(wall, 2),
+        "tokens_per_s": round(total_tokens / max(wall, 1e-9), 1),
+        "latency_p50_s": round(float(np.percentile(lat, 50)), 3),
+        "latency_p99_s": round(float(np.percentile(lat, 99)), 3),
+        "jitted_steps": engine.wall_step - step0,
+        "peak_kv_bytes": int(engine.peak_kv_bytes),
+    }
+
+
+def paged_config(cfg):
+    """Freeze settings shared by both arms of the paged comparison:
+    page-granular quantile freeze, recovery off (the paged path restores
+    via timer expiry only — keep the arms symmetric)."""
+    fc = dataclasses.replace(cfg.freeze, page_size=32, window=32,
+                             tau_mode="quantile", quantile=0.5, k_soft=1.0,
+                             recovery_enabled=False)
+    return dataclasses.replace(cfg, freeze=fc)
+
+
+def run_paged_comparison(cfg, params, smoke: bool, warmup: bool = True):
+    from repro.serving.engine import ContinuousEngine, PagedContinuousEngine
+
+    cfg = paged_config(cfg)
+    max_seq = 256 if smoke else 1024
+    n_lanes = 2 if smoke else 4
+    pool_pages = 4 if smoke else 6          # 128 / 192 active slots
+    chunk = 64 if smoke else 128
+    reqs, arrivals = long_trace(cfg, smoke)
+
+    contig = ContinuousEngine(cfg, params, max_seq=max_seq, n_lanes=n_lanes)
+    if warmup:                  # same engine: jit caches are per-wrapper
+        serve_poisson(contig, reqs, arrivals)
+    swaps0 = contig.offloader.n_offloads if contig.offloader else 0
+    c_stats = serve_poisson(contig, reqs, arrivals)
+    c_stats["swaps"] = (contig.offloader.n_offloads - swaps0
+                        if contig.offloader else 0)
+
+    paged = PagedContinuousEngine(cfg, params, max_seq=max_seq,
+                                  n_lanes=n_lanes,
+                                  max_active_pages=pool_pages,
+                                  prefill_chunk=chunk)
+    if warmup:
+        # the burst-chunk schedule is load-dependent, so compile the closed
+        # shape set up front instead of relying on one observed trace
+        for plen, n in sorted({(len(p), n) for p, n, _ in reqs}):
+            paged.warm_prefill(plen, n)
+        serve_poisson(paged, reqs, arrivals)
+    swaps0 = paged.ctl.n_swap_out + paged.ctl.n_swap_in
+    p_stats = serve_poisson(paged, reqs, arrivals)
+    p_stats["swaps"] = paged.ctl.n_swap_out + paged.ctl.n_swap_in - swaps0
+    return c_stats, p_stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the untimed compile pass (reports cold times)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced traces for the CI tier-2 smoke job")
+    ap.add_argument("--skip-static", action="store_true",
+                    help="only run the paged vs contiguous comparison")
     args = ap.parse_args()
 
     import jax
@@ -103,25 +225,41 @@ def main():
 
     cfg = bench_config()
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    report = {}
 
-    if not args.no_warmup:   # compile both paths outside the timed runs
-        run_static(cfg, params)
-        run_continuous(cfg, params)
+    if not args.skip_static:
+        if not args.no_warmup:   # compile both paths outside the timed runs
+            run_static(cfg, params)
+            run_continuous(cfg, params)
+        static = run_static(cfg, params)
+        cont = run_continuous(cfg, params)
+        ratio = cont["tokens_per_s"] / max(static["tokens_per_s"], 1e-9)
+        print(f"{'':>22s}  {'static':>10s}  {'continuous':>10s}")
+        for k in ("wall_s", "tokens_per_s", "latency_p50_s", "latency_p99_s",
+                  "jitted_steps", "utilization_pct"):
+            print(f"{k:>22s}  {static[k]:>10}  {cont[k]:>10}")
+        print(f"\nthroughput ratio (continuous / static): {ratio:.2f}x\n")
+        report.update(trace=TRACE, n_lanes=N_LANES, static=static,
+                      continuous=cont, throughput_ratio=round(ratio, 3))
 
-    static = run_static(cfg, params)
-    cont = run_continuous(cfg, params)
-    ratio = cont["tokens_per_s"] / max(static["tokens_per_s"], 1e-9)
-
-    print(f"{'':>22s}  {'static':>10s}  {'continuous':>10s}")
+    # ---- paged vs contiguous on the long-prompt Poisson trace ---- #
+    c_stats, p_stats = run_paged_comparison(cfg, params, smoke=args.smoke,
+                                            warmup=not args.no_warmup)
+    print(f"{'long-prompt Poisson':>22s}  {'contiguous':>12s}  {'paged':>12s}")
     for k in ("wall_s", "tokens_per_s", "latency_p50_s", "latency_p99_s",
-              "jitted_steps", "utilization_pct"):
-        print(f"{k:>22s}  {static[k]:>10}  {cont[k]:>10}")
-    print(f"\nthroughput ratio (continuous / static): {ratio:.2f}x")
+              "jitted_steps", "peak_kv_bytes", "swaps"):
+        print(f"{k:>22s}  {c_stats[k]:>12}  {p_stats[k]:>12}")
+    p99_win = p_stats["latency_p99_s"] < c_stats["latency_p99_s"]
+    mem_win = p_stats["peak_kv_bytes"] < c_stats["peak_kv_bytes"]
+    print(f"\npaged p99 win: {p99_win}   "
+          f"paged peak-KV win: {mem_win} "
+          f"({p_stats['peak_kv_bytes']} < {c_stats['peak_kv_bytes']} bytes)")
+    report.update(long_trace_contiguous=c_stats, long_trace_paged=p_stats,
+                  paged_p99_win=bool(p99_win), paged_mem_win=bool(mem_win))
 
     OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / "continuous_batching.json").write_text(json.dumps(
-        {"trace": TRACE, "n_lanes": N_LANES, "static": static,
-         "continuous": cont, "throughput_ratio": round(ratio, 3)}, indent=2))
+    (OUT / "continuous_batching.json").write_text(
+        json.dumps(report, indent=2))
 
 
 if __name__ == "__main__":

@@ -53,14 +53,19 @@ def paged_decode_attention(
     k_pages: jnp.ndarray,     # (B, P, page, KVH, hd)
     v_pages: jnp.ndarray,     # (B, P, page, KVH, hd)
     slot_mask: jnp.ndarray,   # (B, P, page) bool
+    page_table: Optional[jnp.ndarray] = None,   # (B, P); slots < 0 unmapped
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Decode attention over the active page pool.
 
     Returns (out (B, H, hd), page_relevance (B, P)) where page relevance is
     the masked mean over the page's slots of the Eq. 2 token score.
+    Unmapped slots (page_table < 0) are excluded regardless of slot_mask —
+    the reference semantics of the Pallas kernel's page-table skip.
     """
     B, H, hd = q.shape
     _, P, page, KVH, _ = k_pages.shape
+    if page_table is not None:
+        slot_mask = slot_mask & (page_table >= 0)[..., None]
     G = H // KVH
     qf = q.reshape(B, KVH, G, hd).astype(jnp.float32)
     kf = k_pages.astype(jnp.float32)
@@ -83,18 +88,29 @@ def paged_decode_attention(
 def write_tail(
     k_pages: jnp.ndarray, v_pages: jnp.ndarray, slot_mask: jnp.ndarray,
     new_k: jnp.ndarray, new_v: jnp.ndarray,
-    tail_slot: jnp.ndarray,   # () int32 physical page slot of the tail page
-    tail_off: jnp.ndarray,    # () int32 offset within the tail page
+    tail_slot: jnp.ndarray,   # () or (B,) int32 physical slot of the tail page
+    tail_off: jnp.ndarray,    # () or (B,) int32 offset within the tail page
+    live: Optional[jnp.ndarray] = None,   # (B,) bool; False lanes skip write
 ):
-    """Append one token's (K, V) (B, KVH, hd) into the tail page."""
+    """Append one token's (K, V) (B, KVH, hd) into each lane's tail page.
+
+    `tail_slot` / `tail_off` may be per-lane (B,) vectors — continuous
+    batching runs every lane at its own position, so lanes sit at different
+    offsets of different physical slots.  `live=False` lanes (idle /
+    mid-admission) leave their pool untouched."""
     B = new_k.shape[0]
-    page = k_pages.shape[2]
-    onehot_p = jax.nn.one_hot(tail_slot, k_pages.shape[1], dtype=bool)
-    onehot_s = jax.nn.one_hot(tail_off, page, dtype=bool)
-    sel = (onehot_p[:, None] & onehot_s[None, :])[None, :, :, None, None]
-    k_pages = jnp.where(sel, new_k[:, None, None], k_pages)
-    v_pages = jnp.where(sel, new_v[:, None, None], v_pages)
-    slot_mask = slot_mask | sel[..., 0, 0]
+    P, page = k_pages.shape[1], k_pages.shape[2]
+    ts = jnp.broadcast_to(jnp.asarray(tail_slot, jnp.int32), (B,))
+    to = jnp.broadcast_to(jnp.asarray(tail_off, jnp.int32), (B,))
+    onehot_p = jax.nn.one_hot(ts, P, dtype=bool)            # (B, P)
+    onehot_s = jax.nn.one_hot(to, page, dtype=bool)         # (B, page)
+    sel = onehot_p[:, :, None] & onehot_s[:, None, :]       # (B, P, page)
+    if live is not None:
+        sel = sel & live[:, None, None]
+    selx = sel[:, :, :, None, None]
+    k_pages = jnp.where(selx, new_k[:, None, None], k_pages)
+    v_pages = jnp.where(selx, new_v[:, None, None], v_pages)
+    slot_mask = slot_mask | sel
     return k_pages, v_pages, slot_mask
 
 
@@ -102,15 +118,22 @@ def page_freeze_update(
     state: PageFreezeState,
     page_rel: jnp.ndarray,     # (B, P)
     page_table: jnp.ndarray,   # (B, P) global ids, -1 = empty
-    current_page: jnp.ndarray, # () int32 — global id of the tail page
-    step: jnp.ndarray,
+    current_page: jnp.ndarray, # () or (B,) int32 — global id of the tail page
+    step: jnp.ndarray,         # () or (B,) int32 — per-lane decode clock
     cfg: FreezeConfig,
 ) -> Tuple[PageFreezeState, Dict[str, jnp.ndarray]]:
     """Page-granular Alg. 1 with the sliding window expressed in pages and
-    the forced-freeze bound when the pool is saturated."""
+    the forced-freeze bound when the pool is saturated.
+
+    `current_page` / `step` may be per-lane (B,) vectors — continuous
+    batching runs every lane at its own tail page and decode-step clock."""
     window_pages = max(1, -(-cfg.window // cfg.page_size))
+    current_page = jnp.asarray(current_page, jnp.int32)
+    cp_b = current_page[:, None] if current_page.ndim else current_page
+    step = jnp.asarray(step, jnp.int32)
+    step_b = step[:, None] if step.ndim else step
     exists = page_table >= 0
-    in_window = page_table > (current_page - window_pages)
+    in_window = page_table > (cp_b - window_pages)
     was_frozen = state.frozen
 
     from repro.core.freeze import effective_tau
@@ -145,13 +168,13 @@ def page_freeze_update(
 
     frozen_mid = was_frozen | just_frozen
     d_mid = jnp.where(just_frozen, d_sched, state.d)
-    frozen_at = jnp.where(just_frozen, step, state.frozen_at)
+    frozen_at = jnp.where(just_frozen, step_b, state.frozen_at)
 
     d_dec = jnp.where(was_frozen, d_mid - 1, d_mid)
     restored = was_frozen & (d_dec <= 0)
     frozen_new = frozen_mid & ~restored
     d_new = jnp.where(restored, 0, d_dec)
-    decay = (step % cfg.history) == (cfg.history - 1)
+    decay = (step_b % cfg.history) == (cfg.history - 1)
     c_new = jnp.where(decay, jnp.maximum(c_new - 1, 0), c_new)
 
     new = PageFreezeState(c=c_new, d=d_new, frozen=frozen_new, frozen_at=frozen_at)
@@ -184,23 +207,33 @@ class PagedController:
     n_swap_in: int = 0
 
     def tick(self, pool: dict, fstate: dict, step: int,
-             reserve_slots: int = 1) -> Tuple[dict, dict]:
+             reserve_slots: int = 1,
+             lanes: Optional[Tuple[int, ...]] = None,
+             lane_ids: Optional[Tuple[int, ...]] = None) -> Tuple[dict, dict]:
         """pool: dict of numpy arrays {k, v, page_table, slot_mask};
         fstate: {c, d, frozen, frozen_at} (all (L, B, P) / page arrays).
         Decrements offloaded pages' timers, swaps out frozen device pages,
         swaps expired host pages back into free slots — keeping
         `reserve_slots` free for the incoming tail page (restores retry
-        next step if the pool is contended)."""
+        next step if the pool is contended).
+
+        `lanes` restricts the pass to a subset of batch lanes (continuous
+        batching ticks each lane at its own page-allocation cadence).
+        `lane_ids` maps the pool's batch indices to global lane ids for the
+        host-store keys — the serving engine transfers only the boundary
+        lanes' pool slices, so index b of `pool` is lane `lane_ids[b]`."""
         k, v = pool["k"], pool["v"]
         pt, sm = pool["page_table"], pool["slot_mask"]
         L, B, P = pt.shape
+        lane_set = range(B) if lanes is None else lanes
         frozen = fstate["frozen"]
         for l in range(L):
-            for b in range(B):
+            for b in lane_set:
+                gb = lane_ids[b] if lane_ids is not None else b
                 # 1) swap out frozen device pages
                 for p in range(P):
                     if pt[l, b, p] >= 0 and frozen[l, b, p]:
-                        key = (l, b, int(pt[l, b, p]))
+                        key = (l, gb, int(pt[l, b, p]))
                         self.store[key] = (k[l, b, p].copy(), v[l, b, p].copy())
                         self.frozen_meta[key] = {
                             "c": int(fstate["c"][l, b, p]),
@@ -215,7 +248,7 @@ class PagedController:
                 # 2) decrement offloaded timers; swap expired pages back in
                 for key in sorted(self.frozen_meta):
                     kl, kb, gp = key
-                    if kl != l or kb != b:
+                    if kl != l or kb != gb:
                         continue
                     meta = self.frozen_meta[key]
                     meta["d"] -= 1
@@ -251,3 +284,81 @@ class PagedController:
             slots[l] = free[0]
             pt[l, :, slots[l]] = global_page
         return slots
+
+    # ---- per-lane bookkeeping (continuous batching) ------------------- #
+    def alloc_tail_lane(self, pool: dict, lane: int,
+                        global_page: int) -> Optional[np.ndarray]:
+        """Allocate a tail-page slot per layer for ONE batch lane (other
+        lanes' slots untouched).  Returns (L,) int32 or None if full."""
+        pt = pool["page_table"]
+        L = pt.shape[0]
+        slots = np.full((L,), -1, np.int32)
+        for l in range(L):
+            free = np.nonzero(pt[l, lane] < 0)[0]
+            if len(free) == 0:
+                return None
+            slots[l] = free[0]
+            pt[l, lane, slots[l]] = global_page
+        return slots
+
+    def drop_lane(self, lane: int) -> int:
+        """Forget every host-stored page belonging to one batch lane.
+
+        Called on lane retirement/reassignment: the next occupant's pages
+        must never collide with the retired request's global page ids.
+        Returns the number of pages dropped."""
+        stale = [key for key in self.store if key[1] == lane]
+        for key in stale:
+            self.store.pop(key, None)
+            self.frozen_meta.pop(key, None)
+        return len(stale)
+
+    def stash(self, layer: int, lane: int, global_page: int,
+              k: np.ndarray, v: np.ndarray, d: int) -> None:
+        """Place one page straight into the host store with freeze timer
+        `d` — the admission path for prompt pages that exceed the device
+        pool (chunked-prefill overflow uses the forced-freeze timer)."""
+        key = (layer, lane, global_page)
+        self.store[key] = (k.copy(), v.copy())
+        self.frozen_meta[key] = {"c": 1, "d": int(d), "frozen_at": 0}
+        self.n_swap_out += 1
+
+    def write_lane(self, pool: dict, fstate: dict, lane: int,
+                   k_resident: np.ndarray,    # (L, n, page, KVH, hd)
+                   v_resident: np.ndarray,
+                   page_ids: np.ndarray,      # (n,) global ids
+                   slot_masks: np.ndarray,    # (n, page) bool
+                   store_lane: Optional[int] = None,
+                   ) -> np.ndarray:
+        """Wholesale-reset one lane's device pages and install `n` resident
+        pages into its first slots — admission after a (chunked) prefill.
+        Neighbouring lanes' slots, tables and freeze state are untouched.
+        `lane` indexes the pool arrays; `store_lane` (default: same) is the
+        global lane id whose host store is dropped — they differ when the
+        engine hands over a single-lane pool slice.
+        Returns the (L, n) physical slots used (slot i holds page_ids[i] in
+        every layer, so the engine's per-layer tail slots start aligned)."""
+        k, v = pool["k"], pool["v"]
+        pt, sm = pool["page_table"], pool["slot_mask"]
+        L, B, P = pt.shape
+        n = len(page_ids)
+        assert n <= P, (n, P)
+        self.drop_lane(lane if store_lane is None else store_lane)
+        pt[:, lane, :] = -1
+        sm[:, lane, :] = False
+        k[:, lane] = 0
+        v[:, lane] = 0
+        for f in ("c", "d", "frozen", "frozen_at"):
+            fstate[f][:, lane] = 0
+        slots = np.zeros((L, n), np.int32)
+        for l in range(L):
+            for i in range(n):
+                k[l, lane, i] = k_resident[l, i]
+                v[l, lane, i] = v_resident[l, i]
+                pt[l, lane, i] = page_ids[i]
+                sm[l, lane, i] = slot_masks[i]
+                slots[l, i] = i
+        return slots
+
+    def host_bytes(self) -> int:
+        return sum(kk.nbytes + vv.nbytes for kk, vv in self.store.values())

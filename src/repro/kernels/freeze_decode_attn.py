@@ -57,9 +57,12 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref,        # inputs
         v = v_ref[0].astype(jnp.float32)
         qg = q.reshape(kv_heads, G, hd)
         raw = jnp.einsum("kgh,skh->kgs", qg, k)    # (KVH, G, block_s)
-        # fused Eq.2 relevance: mean over all H query heads of |q.k|
-        rel_ref[0, :] = jnp.mean(
-            jnp.abs(raw), axis=(0, 1)).astype(rel_ref.dtype)
+        # fused Eq.2 relevance: mean over all H query heads of |q.k|;
+        # inactive slots report 0 even inside an active block (frozen /
+        # unwritten KV is garbage — its |Q.K| must not reach the freeze
+        # schedule), matching kernels.ref exactly
+        tok_rel = jnp.mean(jnp.abs(raw), axis=(0, 1))
+        rel_ref[0, :] = jnp.where(mask, tok_rel, 0.0).astype(rel_ref.dtype)
         s = raw * scale
         s = jnp.where(mask[None, None, :], s, NEG_INF)
         m_prev = m_ref[...].reshape(kv_heads, G)

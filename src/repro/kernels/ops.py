@@ -34,15 +34,19 @@ def masked_decode_attention(q, k, v, active_mask, force_kernel: bool = False):
 
 
 @functools.partial(jax.jit, static_argnames=("force_kernel",))
-def paged_decode_attention(q, k_pages, v_pages, slot_mask,
+def paged_decode_attention(q, k_pages, v_pages, slot_mask, page_table=None,
                            force_kernel: bool = False):
-    """(out (B,H,hd), page_relevance (B,P))."""
+    """(out (B,H,hd), page_relevance (B,P)) — the PagedContinuousEngine
+    decode hot path.  `page_table` (B,P) lets the kernel skip unmapped
+    slots before reading their mask; None derives it from slot_mask."""
     if _on_tpu():
-        return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask)
+        return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
+                                             page_table)
     if force_kernel:
         return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
-                                             interpret=True)
-    return ref.paged_decode_attention_ref(q, k_pages, v_pages, slot_mask)
+                                             page_table, interpret=True)
+    return ref.paged_decode_attention_ref(q, k_pages, v_pages, slot_mask,
+                                          page_table)
 
 
 def freeze_state_update(state: FreezeState, relevance, pos, step,

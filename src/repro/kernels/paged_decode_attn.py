@@ -1,20 +1,25 @@
 """Pallas TPU kernel: paged flash-decode attention over the bounded active
-page pool (the long_500k serving path).
+page pool — the serving hot path of the PagedContinuousEngine.
 
-Grid walks (batch, physical page).  Each step loads one page (page_size,
-KVH, hd) of K and V; pages whose slot mask is empty (unallocated, or fully
-frozen awaiting host swap-out) skip their MXU work entirely.  Page-mean
-|Q.K| relevance is emitted fused, feeding the page-granular freeze schedule
-(core.paging.page_freeze_update).
+Grid walks (batch, physical page); each lane's page table arrives via scalar
+prefetch (SMEM), so the kernel knows *before* touching VMEM whether the
+(lane, slot) it was scheduled on is mapped.  Unmapped slots (page_table < 0)
+and pages whose slot mask is empty (fully frozen awaiting host swap-out)
+skip their MXU work entirely under `pl.when` — mirroring
+`freeze_decode_attn`'s block skip, but page-granular and per lane.  The
+page-mean |Q.K| relevance is emitted fused, feeding the page-granular
+freeze schedule (core.paging.page_freeze_update).
 
 On real TPU the page pool lives in HBM while the frozen store is in host
 memory; the kernel only ever touches the device pool — the bounded-memory
-guarantee of DESIGN.md §2.
+guarantee of DESIGN.md §2.  Validated on CPU with interpret=True against
+kernels.ref.paged_decode_attention_ref (tests/test_kernels.py sweep).
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +29,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, mask_ref,
+def _kernel(pt_ref,                       # SMEM scalar prefetch: (B, P) i32
+            q_ref, k_ref, v_ref, mask_ref,
             o_ref, rel_ref,
             m_ref, l_ref, acc_ref,
             *, kv_heads: int, scale: float):
+    b = pl.program_id(0)
     blk = pl.program_id(1)
     nblk = pl.num_programs(1)
 
@@ -38,12 +45,14 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0].astype(jnp.float32)               # (H, hd)
-    mask = mask_ref[0, 0] != 0                     # (page,)
+    mapped = pt_ref[b, blk] >= 0                   # per-lane page table
+    mask = (mask_ref[0, 0] != 0) & mapped          # (page,)
     H, hd = q.shape
     G = H // kv_heads
     n_act = jnp.sum(mask.astype(jnp.float32))
+    live = mapped & (n_act > 0)
 
-    @pl.when(n_act > 0)
+    @pl.when(live)
     def _page():
         k = k_ref[0, 0].astype(jnp.float32)        # (page, KVH, hd)
         v = v_ref[0, 0].astype(jnp.float32)
@@ -64,8 +73,9 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref,
         m_ref[...] = m_new.reshape(H)
         l_ref[...] = l_new.reshape(H)
 
-    @pl.when(n_act == 0)
+    @pl.when(~live)
     def _skip():
+        # unmapped slot or fully-frozen page: no MXU work, relevance 0
         rel_ref[0, 0] = jnp.zeros((), rel_ref.dtype)
 
     @pl.when(blk == nblk - 1)
@@ -81,6 +91,7 @@ def paged_decode_attention_kernel(
     k_pages: jnp.ndarray,     # (B, P, page, KVH, hd)
     v_pages: jnp.ndarray,
     slot_mask: jnp.ndarray,   # (B, P, page) bool
+    page_table: Optional[jnp.ndarray] = None,   # (B, P) i32; < 0 = unmapped
     *,
     interpret: bool = False,
 ):
@@ -89,29 +100,37 @@ def paged_decode_attention_kernel(
     _, P, page, KVH, _ = k_pages.shape
     scale = 1.0 / math.sqrt(hd)
     grid = (B, P)
+    if page_table is None:   # derive: a slot with any valid token is mapped
+        page_table = jnp.where(jnp.any(slot_mask, -1), 0, -1).astype(jnp.int32)
 
-    out, rel = pl.pallas_call(
-        functools.partial(_kernel, kv_heads=KVH, scale=scale),
+    # index maps receive the scalar-prefetch ref as a trailing argument
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, p: (b, 0, 0)),
-            pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p: (b, p, 0, 0, 0)),
-            pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p: (b, p, 0, 0, 0)),
-            pl.BlockSpec((1, 1, page), lambda b, p: (b, p, 0)),
+            pl.BlockSpec((1, H, hd), lambda b, p, *_: (b, 0, 0)),
+            pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p, *_: (b, p, 0, 0, 0)),
+            pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p, *_: (b, p, 0, 0, 0)),
+            pl.BlockSpec((1, 1, page), lambda b, p, *_: (b, p, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, p: (b, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, p: (b, p)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, H, hd), q.dtype),
-            jax.ShapeDtypeStruct((B, P), jnp.float32),
+            pl.BlockSpec((1, H, hd), lambda b, p, *_: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, *_: (b, p)),
         ],
         scratch_shapes=[
             pltpu.VMEM((H,), jnp.float32),
             pltpu.VMEM((H,), jnp.float32),
             pltpu.VMEM((H, hd), jnp.float32),
         ],
+    )
+    out, rel = pl.pallas_call(
+        functools.partial(_kernel, kv_heads=KVH, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, P), jnp.float32),
+        ],
         interpret=interpret,
-    )(q, k_pages, v_pages, slot_mask.astype(jnp.int8))
+    )(jnp.asarray(page_table, jnp.int32),
+      q, k_pages, v_pages, slot_mask.astype(jnp.int8))
     return out, rel

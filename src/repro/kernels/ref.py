@@ -16,17 +16,19 @@ from repro.models.layers import decode_attention as _masked_ref
 
 def freeze_decode_attention_ref(q, k, v, active_mask):
     """Oracle for kernels.freeze_decode_attn — (out, relevance (B,S) f32).
-    Matches the kernel's convention that masked slots report relevance 0
-    only when their whole block is inactive; the reference computes exact
-    per-slot |Q.K| means (the kernel sweep compares only active blocks'
-    scores — see tests)."""
+    Inactive slots report relevance 0 (their KV is frozen or unwritten
+    garbage, so their |Q.K| head-mean must never reach the freeze
+    schedule) — slot-exact parity with the kernel, including inactive
+    slots inside partially-active blocks."""
     out, rel = _masked_ref(q, k, v, active_mask)
-    return out, rel.astype(jnp.float32)
+    return out, jnp.where(active_mask, rel, 0.0).astype(jnp.float32)
 
 
-def paged_decode_attention_ref(q, k_pages, v_pages, slot_mask):
-    """Oracle for kernels.paged_decode_attn — (out, page_relevance)."""
-    return _paged_ref(q, k_pages, v_pages, slot_mask)
+def paged_decode_attention_ref(q, k_pages, v_pages, slot_mask,
+                               page_table=None):
+    """Oracle for kernels.paged_decode_attn — (out, page_relevance).
+    Unmapped page-table slots (< 0) are excluded like empty pages."""
+    return _paged_ref(q, k_pages, v_pages, slot_mask, page_table)
 
 
 def relevance_freeze_ref(state: FreezeState, relevance, pos, step,

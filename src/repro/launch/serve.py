@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import model as MD
-from repro.serving.engine import ContinuousEngine, Engine
+from repro.serving.engine import (ContinuousEngine, Engine,
+                                  PagedContinuousEngine)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler, StaticScheduler
 
@@ -42,6 +43,12 @@ def main():
     ap.add_argument("--static", action="store_true",
                     help="static FIFO batching baseline instead of "
                          "continuous batching")
+    ap.add_argument("--paged", action="store_true",
+                    help="bounded-HBM paged engine (chunked prefill, "
+                         "O(pages) device KV per lane)")
+    ap.add_argument("--pages", type=int, default=8,
+                    help="device-resident pages per lane (--paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
@@ -54,7 +61,8 @@ def main():
             window=16, k_soft=1.0, entropy_abs_threshold=1e9))
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    mode = "static" if args.static else "continuous"
+    mode = "static" if args.static else \
+        ("paged-continuous" if args.paged else "continuous")
     print(f"arch={cfg.name} params={n/1e6:.1f}M "
           f"freeze={not args.no_freeze} batching={mode}")
 
@@ -62,6 +70,13 @@ def main():
         eng = Engine(cfg, params, max_seq=args.max_seq,
                      enable_freeze=not args.no_freeze)
         sched = StaticScheduler(eng, batch_size=args.batch)
+    elif args.paged:
+        eng = PagedContinuousEngine(cfg, params, max_seq=args.max_seq,
+                                    n_lanes=args.batch,
+                                    max_active_pages=args.pages,
+                                    enable_freeze=not args.no_freeze,
+                                    prefill_chunk=args.prefill_chunk)
+        sched = Scheduler(eng)
     else:
         eng = ContinuousEngine(cfg, params, max_seq=args.max_seq,
                                n_lanes=args.batch,
@@ -84,6 +99,11 @@ def main():
         decode_tokens = total - len(sched.done)
         util = 100 * decode_tokens / max(eng.wall_step * args.batch, 1)
         print(f"jitted steps: {eng.wall_step}  lane utilization: {util:.0f}%")
+        if args.paged:
+            print(f"device KV pool: {eng.kv_device_bytes} bytes "
+                  f"(peak {eng.peak_kv_bytes} incl. prefill scratch)  "
+                  f"page swaps: {eng.ctl.n_swap_out} out / "
+                  f"{eng.ctl.n_swap_in} in")
 
 
 if __name__ == "__main__":

@@ -70,12 +70,26 @@ def write_lane_state(cfg: ModelConfig, state, lane_state, lane):
     return T.write_lane_state(state, lane_state, lane)
 
 
+def prefill_chunk(params, cfg: ModelConfig, tokens, state, pos0):
+    """Chunked prefill (attention-only decoder stacks): process one prompt
+    chunk at positions pos0.., writing its K/V into the contiguous cache.
+    Returns (chunk-final logits, state)."""
+    assert not is_encdec(cfg), "chunked prefill is decoder-only"
+    return T.lm_prefill_chunk(params, cfg, tokens, state, pos0)
+
+
 def init_paged_decode_state(cfg: ModelConfig, batch: int, max_active_pages: int):
     assert not is_encdec(cfg), "paged long-context mode is decoder-only"
     return T.init_paged_decode_state(cfg, batch, max_active_pages)
 
 
 def decode_step_paged(params, cfg: ModelConfig, token, pos, step, tail_slot,
-                      state, freeze_cfg=None):
+                      state, freeze_cfg=None, live=None,
+                      enable_freeze: bool = True):
     return T.lm_decode_step_paged(params, cfg, token, pos, step, tail_slot,
-                                  state, freeze_cfg)
+                                  state, freeze_cfg, live, enable_freeze)
+
+
+def reset_paged_lane(cfg: ModelConfig, state, lane):
+    """Unmap one lane of a paged decode state (retirement)."""
+    return T.reset_paged_lane(state, lane)

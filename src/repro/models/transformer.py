@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.configs.base import FreezeConfig, ModelConfig
 from repro.core.freeze import FreezeState, freeze_update, init_freeze_state
 from repro.core.paging import (PageFreezeState, page_freeze_update,
-                               paged_decode_attention, write_tail)
+                               write_tail)
+from repro.kernels import ops as OPS
 from repro.core.recovery import RecoveryState, recovery_update
 from repro.models import layers as L
 from repro.models import mamba as M
@@ -374,6 +375,70 @@ def lm_prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
     return unembed(params, cfg, xl), new_state
 
 
+def lm_prefill_chunk(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                     state: DecodeState, pos0: jnp.ndarray,
+                     ) -> Tuple[jnp.ndarray, DecodeState]:
+    """Chunked prefill: process `tokens` (B, C) at global positions
+    pos0 .. pos0+C-1, attending over the already-written cache prefix plus
+    causally within the chunk, and write the chunk's K/V into the
+    contiguous cache at pos0.
+
+    Returns (chunk-final logits (B, V), updated DecodeState).  Limited to
+    attention-only stacks (mamba/rwkv recurrence would need cross-chunk
+    state threading); the PagedContinuousEngine admits long prompts with
+    this, one chunk per engine step, interleaved with decode steps of the
+    resident lanes — a 4k-token admission no longer head-of-line-blocks
+    the batch."""
+    roles = unit_roles(cfg)
+    assert all(r.kind == "attn" for r in roles), \
+        "chunked prefill requires an attention-only stack"
+    B, C = tokens.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    x = embed(params, cfg, tokens, None)
+    positions = pos0 + jnp.arange(C)
+    xs_state = _split_xs(state, cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        up = xs["params"]
+        ia = 0
+        kv_out = []
+        for i, role in enumerate(roles):
+            lp = up[f"l{i}"]
+            xn = L.rms_norm(x, lp["norm1"] + 1.0, cfg.norm_eps)
+            q, k, v = L.attention_qkv(lp["attn"], xn, positions,
+                                      cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                xs["cache_k"][ia], k.astype(xs["cache_k"].dtype), pos0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                xs["cache_v"][ia], v.astype(xs["cache_v"].dtype), pos0, axis=1)
+            # causal + q_offset: the chunk sees the whole written prefix and
+            # itself causally; unwritten cache slots are masked by causality
+            o = L.flash_attention(q, ck, cv, causal=True, q_offset=pos0)
+            x = x + L.attention_out(lp["attn"], o)
+            kv_out.append((ck, cv))
+            ia += 1
+            xn2 = L.rms_norm(x, lp["norm2"] + 1.0, cfg.norm_eps)
+            if role.moe:
+                y, a = MOE.moe_forward(lp["ffn"], xn2, cfg)
+                aux = aux + a
+            else:
+                y = L.mlp_forward(lp["ffn"], xn2, cfg)
+            x = x + y
+        ys = {
+            "cache_k": jnp.stack([k for k, _ in kv_out]),
+            "cache_v": jnp.stack([v for _, v in kv_out]),
+            "freeze": xs["freeze"],   # prefill tokens start unfrozen
+        }
+        return (x, aux), ys
+
+    xs_all = dict(xs_state, params=params["blocks"])
+    (x, _), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs_all)
+    new_state = _merge_ys(state, ys, cfg)
+    xl = L.rms_norm(x[:, -1], params["final_norm"] + 1.0, cfg.norm_eps)
+    return unembed(params, cfg, xl), new_state
+
+
 # --------------------------------------------------------------------- #
 # Decode step (contiguous cache + ASR-KF-EGR)
 # --------------------------------------------------------------------- #
@@ -553,41 +618,77 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int,
     )
 
 
+def reset_paged_lane(state: PagedDecodeState, lane) -> PagedDecodeState:
+    """Lane-granular paged reset: unmap one lane's pages (page table -> -1,
+    slot masks cleared, freeze counters zeroed) so a retired request's pool
+    is skipped by attention and never churns the host controller.  K/V
+    payloads stay in place — unmapped slots are invisible, and admission
+    overwrites them wholesale."""
+    from repro.core.recovery import init_recovery_state
+    B = state.page_table.shape[1]
+    sel = (jnp.arange(B) == jnp.asarray(lane)).reshape(1, -1, 1)
+    zero = lambda a: jnp.where(sel, jnp.zeros((), a.dtype), a)
+    rec0 = init_recovery_state(B)
+    sel_b = jnp.arange(B) == jnp.asarray(lane)
+    return state._replace(
+        page_table=jnp.where(sel, -1, state.page_table),
+        slot_mask=state.slot_mask & ~sel[..., None],
+        freeze=PageFreezeState(
+            c=zero(state.freeze.c), d=zero(state.freeze.d),
+            frozen=state.freeze.frozen & ~sel,
+            frozen_at=jnp.where(sel, -1, state.freeze.frozen_at)),
+        recovery=RecoveryState(*(jnp.where(sel_b, z.astype(a.dtype), a)
+                                 for a, z in zip(state.recovery, rec0))),
+    )
+
+
 def lm_decode_step_paged(
     params, cfg: ModelConfig,
     token: jnp.ndarray,           # (B,)
-    pos: jnp.ndarray,             # () global position of the new token
-    step: jnp.ndarray,
-    tail_slot: jnp.ndarray,       # () shared or (L_attn,) per-layer tail slot
+    pos: jnp.ndarray,             # () or (B,) global position of the new token
+    step: jnp.ndarray,            # () or (B,) per-lane decode clock
+    tail_slot: jnp.ndarray,       # (), (L_attn,) or (L_attn, B) tail slot
     state: PagedDecodeState,
     freeze_cfg: Optional[FreezeConfig] = None,
+    live: Optional[jnp.ndarray] = None,   # (B,) bool; False lanes don't write
+    enable_freeze: bool = True,
 ) -> Tuple[jnp.ndarray, PagedDecodeState, Dict[str, jnp.ndarray]]:
     """Bounded-active decode: attention sees only the device-resident page
-    pool; page-granular freeze feeds the host PagedController."""
+    pool; page-granular freeze feeds the host PagedController.
+
+    `pos` / `step` may be per-lane (B,) vectors and `tail_slot` a per-layer,
+    per-lane (L_attn, B) table — continuous batching runs every lane at its
+    own position, decode clock and tail page.  `live=False` lanes (idle or
+    mid-admission) skip the tail write so their pool never grows garbage."""
     fcfg = freeze_cfg or cfg.freeze
     roles = unit_roles(cfg)
     B = token.shape[0]
     page = fcfg.page_size
+    pos = jnp.asarray(pos, jnp.int32)
+    step = jnp.asarray(step, jnp.int32)
+    per_lane = pos.ndim == 1
     x = embed(params, cfg, token[:, None], None)[:, 0]
     if cfg.decode_act_gather:
         # H2: batch-replicated, feature-sharded decode activations
         x = L.dag(x, cfg, ".f")
-    positions = jnp.full((B, 1), pos)
-    tail_off = pos % page
+    positions = pos[:, None] if per_lane else jnp.full((B, 1), pos)
+    tail_off = pos % page                 # () or (B,)
     current_page = pos // page
 
     n = num_units(cfg)
     ia_n = sum(1 for r in roles if r.kind == "attn")
     im_n = sum(1 for r in roles if r.kind == "mamba")
-    tail_slot = jnp.broadcast_to(jnp.asarray(tail_slot, jnp.int32),
-                                 (max(n * ia_n, 1),))
+    tail_slot = jnp.asarray(tail_slot, jnp.int32)
+    if tail_slot.ndim == 1:               # (L_attn,) shared across lanes
+        tail_slot = tail_slot[:, None]
+    tail_slot = jnp.broadcast_to(tail_slot, (max(n * ia_n, 1), B))
     xs = {"params": params["blocks"]}
     if ia_n:
         rs = lambda a: a.reshape((n, ia_n) + a.shape[1:])
         xs.update(k=rs(state.k), v=rs(state.v),
                   page_table=rs(state.page_table),
                   slot_mask=rs(state.slot_mask),
-                  tail_slot=tail_slot.reshape(n, ia_n),
+                  tail_slot=tail_slot.reshape(n, ia_n, B),
                   freeze=PageFreezeState(*(rs(a) for a in state.freeze)))
     if im_n:
         xs["mamba"] = {kk: vv.reshape((n, im_n) + vv.shape[1:])
@@ -619,17 +720,24 @@ def lm_decode_step_paged(
                 sm = xs_u["slot_mask"][ia]
                 kp, vp, sm = write_tail(kp, vp, sm, k.astype(kp.dtype),
                                         v.astype(vp.dtype),
-                                        xs_u["tail_slot"][ia], tail_off)
+                                        xs_u["tail_slot"][ia], tail_off,
+                                        live=live)
                 fz = PageFreezeState(*(a[ia] for a in xs_u["freeze"]))
                 att_mask = sm & ~fz.frozen[..., None]
-                o, prel = paged_decode_attention(q, kp, vp, att_mask)
+                # kernels.ops dispatch: Pallas paged kernel on TPU (unmapped
+                # / frozen pages skipped via the prefetched page table),
+                # pure-jnp reference elsewhere
+                o, prel = OPS.paged_decode_attention(
+                    q, kp, vp, att_mask, xs_u["page_table"][ia])
                 if cfg.decode_act_gather:
                     o = L.dag(o, cfg, ".m.")
                 x = x + L.dag(L.attention_out(lp["attn"], o), cfg, ".f") \
                     if cfg.decode_act_gather else x + L.attention_out(lp["attn"], o)
-                fz, finfo = page_freeze_update(
-                    fz, prel, xs_u["page_table"][ia], current_page, step, fcfg)
-                nfro = nfro + jnp.sum(finfo["n_frozen"])
+                if enable_freeze:
+                    fz, finfo = page_freeze_update(
+                        fz, prel, xs_u["page_table"][ia], current_page, step,
+                        fcfg)
+                    nfro = nfro + jnp.sum(finfo["n_frozen"])
                 outs["k"].append(kp); outs["v"].append(vp)
                 outs["slot_mask"].append(sm); fz_out.append(fz)
                 ia += 1
@@ -676,5 +784,13 @@ def lm_decode_step_paged(
             rwkv={kk: flat(vv) for kk, vv in ys["rwkv"].items()})
     x = L.rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
     logits = unembed(params, cfg, x)
-    info = {"n_frozen_pages": nfro}
+    info: Dict[str, jnp.ndarray] = {"n_frozen_pages": nfro}
+    if attn_layer_count(cfg):
+        exists = new_state.page_table >= 0                 # (L, B, P)
+        frozen = new_state.freeze.frozen & exists
+        visible = new_state.slot_mask & ~new_state.freeze.frozen[..., None]
+        # per-lane counts, summed over layers (host divides by L_attn)
+        info["n_frozen_pages_lane"] = jnp.sum(frozen, axis=(0, 2))
+        info["n_active_pages_lane"] = jnp.sum(exists & ~frozen, axis=(0, 2))
+        info["n_active_slots_lane"] = jnp.sum(visible, axis=(0, 2, 3))
     return logits, new_state, info

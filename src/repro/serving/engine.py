@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.configs.base import FreezeConfig, ModelConfig
 from repro.core.cache import HostOffloadController, KVCache
+from repro.core.paging import PagedController, PageFreezeState
 from repro.models import model as MD
 from repro.serving.sampling import (SamplingParams, params_arrays, sample,
                                     sample_batched)
@@ -89,11 +90,15 @@ class Engine:
         self.fcfg = freeze_cfg or cfg.freeze
         self.enable_freeze = enable_freeze
         self.offload = offload and enable_freeze
+        # donate the decode state: KV / freeze buffers are updated in place
+        # instead of double-buffered in HBM (on backends without donation
+        # support, e.g. CPU, JAX falls back to copies with a warning)
         self._prefill = jax.jit(
-            functools.partial(MD.prefill, cfg=cfg))
+            functools.partial(MD.prefill, cfg=cfg),
+            donate_argnames=("state",))
         self._step = jax.jit(functools.partial(
             MD.decode_step, cfg=cfg, freeze_cfg=self.fcfg,
-            enable_freeze=enable_freeze))
+            enable_freeze=enable_freeze), donate_argnames=("state",))
 
     def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int,
                  sampling: SamplingParams = SamplingParams(),
@@ -187,26 +192,18 @@ class _Lane:
     last_rewind_step: int = -10**9
 
 
-class ContinuousEngine:
-    """Continuous-batching generation: per-lane admission and retirement.
-
-    The jitted step always runs the full ``n_lanes``-wide batch (fixed
-    shapes, one compile); idle lanes decode garbage that the host ignores.
-    Prompt lengths are padded to power-of-two buckets so the per-lane
-    prefill compiles O(log max_seq) times, not once per prompt length.
-    """
+class _LaneEngineBase:
+    """Shared lane management for the continuous-batching engines: lane
+    accounting, prompt bucketing, per-lane sampling-parameter mirrors and
+    the admit/finish event log.  Subclasses own the decode state layout
+    (contiguous vs paged) and the step/admission mechanics."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
                  freeze_cfg: Optional[FreezeConfig] = None,
                  enable_freeze: bool = True,
-                 offload: bool = True,
-                 max_rewinds: int = 4,
-                 rewind_cooldown: int = 32,
                  pad_id: int = 0,
-                 offload_every: int = 8,
                  seed: int = 0,
-                 min_prompt_bucket: int = 8,
-                 debug_lane_checks: bool = False):
+                 min_prompt_bucket: int = 8):
         assert not cfg.is_encoder_decoder, \
             "continuous batching is decoder-only (enc-dec uses Engine)"
         self.cfg = cfg
@@ -215,19 +212,9 @@ class ContinuousEngine:
         self.n_lanes = n_lanes
         self.fcfg = freeze_cfg or cfg.freeze
         self.enable_freeze = enable_freeze
-        self.max_rewinds = max_rewinds
-        self.rewind_cooldown = rewind_cooldown
         self.pad_id = pad_id
-        self.offload_every = offload_every
         self.min_prompt_bucket = min_prompt_bucket
-        self.debug_lane_checks = debug_lane_checks
-        self._prefill = jax.jit(functools.partial(MD.prefill, cfg=cfg))
-        self._step = jax.jit(functools.partial(
-            MD.decode_step, cfg=cfg, freeze_cfg=self.fcfg,
-            enable_freeze=enable_freeze))
-        self._write_lane = jax.jit(functools.partial(MD.write_lane_state, cfg))
         self._sample = jax.jit(sample_batched)
-        self.state = MD.init_decode_state(cfg, n_lanes, max_seq)
         self.lanes = [_Lane() for _ in range(n_lanes)]
         self.pos = np.zeros(n_lanes, np.int32)
         self.step = np.zeros(n_lanes, np.int32)
@@ -237,22 +224,18 @@ class ContinuousEngine:
             np.array(a) for a in params_arrays([greedy] * n_lanes))
         self._lane_params_dev = None     # device mirror, refreshed on admit
         self.key = jax.random.PRNGKey(seed)
-        self.offloader = HostOffloadController(self.fcfg.page_size) \
-            if (offload and enable_freeze) else None
         self.wall_step = 0          # number of jitted decode steps issued
         self.events: List[Dict[str, Any]] = []   # admit / finish log
+        self.peak_kv_bytes = 0      # high-water device KV (incl. prefill
+                                    # scratch) — the benchmark memory metric
 
-    @classmethod
-    def from_engine(cls, engine: Engine, n_lanes: int,
-                    **kw) -> "ContinuousEngine":
-        """Build a continuous engine sharing a static Engine's model and
-        freeze settings (the Scheduler's compatibility path)."""
-        return cls(engine.cfg, engine.params, engine.max_seq, n_lanes,
-                   freeze_cfg=engine.fcfg,
-                   enable_freeze=engine.enable_freeze,
-                   offload=engine.offload,
-                   max_rewinds=engine.max_rewinds,
-                   rewind_cooldown=engine.rewind_cooldown, **kw)
+    @property
+    def kv_device_bytes(self) -> int:       # subclasses override
+        return 0
+
+    def _note_kv_peak(self, scratch_bytes: int = 0) -> None:
+        self.peak_kv_bytes = max(self.peak_kv_bytes,
+                                 self.kv_device_bytes + scratch_bytes)
 
     # ---------------- lane accounting ---------------- #
     @property
@@ -284,6 +267,83 @@ class ContinuousEngine:
                 f"slots but the engine was built with max_seq={self.max_seq}")
         return b
 
+    def _set_lane_sampling(self, lane: int, sp: SamplingParams) -> None:
+        self._temp[lane] = sp.temperature
+        self._topk[lane] = sp.top_k
+        self._topp[lane] = sp.top_p
+        self._lane_params_dev = None
+
+    def _lane_params(self):
+        if self._lane_params_dev is None:
+            self._lane_params_dev = (jnp.asarray(self._temp),
+                                     jnp.asarray(self._topk),
+                                     jnp.asarray(self._topp))
+        return self._lane_params_dev
+
+    def _left_padded(self, prompt: np.ndarray, sp: int) -> np.ndarray:
+        toks = np.full((1, sp), self.pad_id, np.int32)
+        toks[0, sp - len(prompt):] = prompt
+        return toks
+
+
+class ContinuousEngine(_LaneEngineBase):
+    """Continuous-batching generation: per-lane admission and retirement.
+
+    The jitted step always runs the full ``n_lanes``-wide batch (fixed
+    shapes, one compile); idle lanes decode garbage that the host ignores.
+    Prompt lengths are padded to power-of-two buckets so the per-lane
+    prefill compiles O(log max_seq) times, not once per prompt length.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
+                 freeze_cfg: Optional[FreezeConfig] = None,
+                 enable_freeze: bool = True,
+                 offload: bool = True,
+                 max_rewinds: int = 4,
+                 rewind_cooldown: int = 32,
+                 pad_id: int = 0,
+                 offload_every: int = 8,
+                 seed: int = 0,
+                 min_prompt_bucket: int = 8,
+                 debug_lane_checks: bool = False):
+        super().__init__(cfg, params, max_seq, n_lanes,
+                         freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
+                         pad_id=pad_id, seed=seed,
+                         min_prompt_bucket=min_prompt_bucket)
+        self.max_rewinds = max_rewinds
+        self.rewind_cooldown = rewind_cooldown
+        self.offload_every = offload_every
+        self.debug_lane_checks = debug_lane_checks
+        # donated decode state: the per-step KV/freeze buffers are reused in
+        # place rather than double-buffered in HBM (no-op on CPU)
+        self._prefill = jax.jit(functools.partial(MD.prefill, cfg=cfg),
+                                donate_argnames=("state",))
+        self._step = jax.jit(functools.partial(
+            MD.decode_step, cfg=cfg, freeze_cfg=self.fcfg,
+            enable_freeze=enable_freeze), donate_argnames=("state",))
+        self._write_lane = jax.jit(functools.partial(MD.write_lane_state, cfg),
+                                   donate_argnames=("state", "lane_state"))
+        self.state = MD.init_decode_state(cfg, n_lanes, max_seq)
+        self.offloader = HostOffloadController(self.fcfg.page_size) \
+            if (offload and enable_freeze) else None
+
+    @classmethod
+    def from_engine(cls, engine: Engine, n_lanes: int,
+                    **kw) -> "ContinuousEngine":
+        """Build a continuous engine sharing a static Engine's model and
+        freeze settings (the Scheduler's compatibility path)."""
+        return cls(engine.cfg, engine.params, engine.max_seq, n_lanes,
+                   freeze_cfg=engine.fcfg,
+                   enable_freeze=engine.enable_freeze,
+                   offload=engine.offload,
+                   max_rewinds=engine.max_rewinds,
+                   rewind_cooldown=engine.rewind_cooldown, **kw)
+
+    @property
+    def kv_device_bytes(self) -> int:
+        """Live device KV footprint (the benchmark's peak-memory metric)."""
+        return self.state.cache_k.nbytes + self.state.cache_v.nbytes
+
     # ---------------- admission ---------------- #
     def admit(self, req: Request, lane: Optional[int] = None) -> int:
         """Prefill `req` into a free lane mid-stream.  The single-lane
@@ -297,8 +357,7 @@ class ContinuousEngine:
         assert l.request is None, f"lane {lane} is busy"
         prompt = np.asarray(req.prompt, np.int32)
         sp = self._bucket(len(prompt), req.n_tokens)
-        toks = np.full((1, sp), self.pad_id, np.int32)
-        toks[0, sp - len(prompt):] = prompt           # left-pad, as in prefill
+        toks = self._left_padded(prompt, sp)          # left-pad, as in prefill
         event = {"event": "admit", "uid": req.uid, "lane": lane,
                  "wall_step": self.wall_step}
         if self.debug_lane_checks:
@@ -307,6 +366,7 @@ class ContinuousEngine:
             event["recovery_steps_before"] = int(
                 np.asarray(self.state.recovery.steps_seen)[lane])
         lane_state = MD.init_decode_state(self.cfg, 1, self.max_seq)
+        self._note_kv_peak(lane_state.cache_k.nbytes + lane_state.cache_v.nbytes)
         logits, lane_state = self._prefill(
             self.params, batch={"tokens": jnp.asarray(toks)}, state=lane_state)
         self.state = self._write_lane(self.state, lane_state, jnp.int32(lane))
@@ -322,10 +382,7 @@ class ContinuousEngine:
         self.key, sub = jax.random.split(self.key)
         first = int(np.asarray(sample(logits, sub, req.sampling))[0])
         self.tok[lane] = first
-        self._temp[lane] = req.sampling.temperature
-        self._topk[lane] = req.sampling.top_k
-        self._topp[lane] = req.sampling.top_p
-        self._lane_params_dev = None
+        self._set_lane_sampling(lane, req.sampling)
         l.request = req
         l.generated = [first]
         l.history = []
@@ -342,6 +399,7 @@ class ContinuousEngine:
         active = [i for i, l in enumerate(self.lanes) if l.request is not None]
         if not active:
             return []
+        self._note_kv_peak()
         logits, self.state, info = self._step(
             self.params, token=jnp.asarray(self.tok),
             pos=jnp.asarray(self.pos), step=jnp.asarray(self.step),
@@ -351,15 +409,11 @@ class ContinuousEngine:
         # the telemetry in ONE device->host transfer (rewound lanes simply
         # discard their draw)
         self.key, sub = jax.random.split(self.key)
-        if self._lane_params_dev is None:
-            self._lane_params_dev = (jnp.asarray(self._temp),
-                                     jnp.asarray(self._topk),
-                                     jnp.asarray(self._topp))
         keys = ("n_active", "n_frozen", "entropy", "spike", "level",
                 "rr_request")
         host = jax.device_get(dict(
             {k: info[k] for k in keys if k in info},
-            toks=self._sample(logits, sub, *self._lane_params_dev)))
+            toks=self._sample(logits, sub, *self._lane_params())))
         get = host.get
         n_active, n_frozen = get("n_active"), get("n_frozen")
         entropy, spike, level = get("entropy"), get("spike"), get("level")
@@ -452,9 +506,383 @@ class ContinuousEngine:
         # park the idle lane: greedy sampling, position clamped in-bounds,
         # and the retired request's offloaded pages released right away
         # (offload sync also masks idle lanes, so no churn until re-admit)
-        self._temp[lane] = 0.0
-        self._lane_params_dev = None
+        self._set_lane_sampling(lane, SamplingParams.greedy())
         self.pos[lane] = min(int(self.pos[lane]), self.max_seq - 1)
         if self.offloader is not None:
             self.offloader.drop_lane(lane)
+        return req
+
+
+# ===================================================================== #
+# Paged continuous batching (bounded-HBM decode + chunked prefill)
+# ===================================================================== #
+@dataclasses.dataclass
+class _PendingPrefill:
+    """An admission in flight: the prompt is prefilled chunk-by-chunk into a
+    contiguous single-lane scratch cache, interleaved with decode steps of
+    the resident lanes; on completion the scratch is repacked into pages
+    and installed into the lane."""
+    req: Request
+    toks: np.ndarray          # (1, sp) left-padded prompt
+    scratch: Any              # contiguous DecodeState (B=1, S=sp)
+    sp: int                   # padded prompt length
+    done: int = 0             # tokens prefilled so far
+    logits: Any = None        # chunk-final logits (valid once done == sp)
+
+
+class PagedContinuousEngine(_LaneEngineBase):
+    """Continuous batching whose decode attends only each lane's bounded
+    active page pool: device KV is O(P * page) per lane instead of
+    O(max_seq), with frozen / overflow pages living in the host store
+    (`core.paging.PagedController`).
+
+    Two serving properties beyond `ContinuousEngine`:
+
+    * **Bounded-HBM decode** — the jitted step (`model.decode_step_paged`,
+      Pallas paged-attention kernel on TPU) runs per-lane (B,) pos/step
+      clocks and a per-layer, per-lane tail-slot table; page-granular
+      freeze plus the forced-freeze bound keep every lane inside its P
+      physical slots, and the host controller swaps frozen pages out / due
+      pages in at each lane's own page-allocation cadence.
+
+    * **Chunked prefill** — admission prefills the prompt in fixed-size
+      chunks (`prefill_chunk` tokens per engine step) into a scratch cache
+      while resident lanes keep decoding; the finished prompt is repacked
+      into pages (overflow beyond the pool is stashed to the host store)
+      and installed with a wholesale per-lane reset
+      (`PagedController.write_lane`).  A long prompt therefore never
+      head-of-line-blocks the batch.
+
+    Restricted to attention-only decoder stacks (chunked prefill would
+    need cross-chunk recurrent-state threading for mamba/rwkv hybrids).
+    Entropy-guided recovery runs lane-local in the contiguous engine only;
+    the paged path relies on freeze-timer expiry for restoration.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
+                 max_active_pages: int,
+                 freeze_cfg: Optional[FreezeConfig] = None,
+                 enable_freeze: bool = True,
+                 prefill_chunk: int = 64,
+                 pad_id: int = 0,
+                 seed: int = 0,
+                 min_prompt_bucket: int = 8):
+        super().__init__(cfg, params, max_seq, n_lanes,
+                         freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
+                         pad_id=pad_id, seed=seed,
+                         min_prompt_bucket=min_prompt_bucket)
+        assert max_active_pages >= 3, "pool needs tail + swap headroom"
+        assert prefill_chunk >= 1
+        self.P = max_active_pages
+        self.page = self.fcfg.page_size
+        self.prefill_chunk = prefill_chunk
+        self._step = jax.jit(functools.partial(
+            MD.decode_step_paged, cfg=cfg, freeze_cfg=self.fcfg,
+            enable_freeze=enable_freeze), donate_argnames=("state",))
+        self._chunk = jax.jit(functools.partial(MD.prefill_chunk, cfg=cfg),
+                              donate_argnames=("state",))
+        self._reset_lane = jax.jit(functools.partial(MD.reset_paged_lane, cfg),
+                                   donate_argnames=("state",))
+        self._lane_read = jax.jit(
+            lambda arrs, lane: tuple(
+                jax.lax.dynamic_slice_in_dim(a, lane, 1, axis=1)
+                for a in arrs))
+        self._lane_write = jax.jit(
+            lambda arrs, lane, lane_arrs: tuple(
+                jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), lane, axis=1)
+                for big, small in zip(arrs, lane_arrs)),
+            donate_argnums=(0,))
+        self.state = MD.init_paged_decode_state(cfg, n_lanes, max_active_pages)
+        self.L_attn = max(self.state.page_table.shape[0], 1)
+        assert self.state.page_table.shape[0] == cfg.num_layers, \
+            "paged continuous batching requires an attention-only stack"
+        self.ctl = PagedController(cfg=cfg, batch=n_lanes,
+                                   max_active_pages=max_active_pages)
+        self.tail_slot = np.zeros((self.L_attn, n_lanes), np.int32)
+        self.prefills: Dict[int, _PendingPrefill] = {}
+
+    @property
+    def kv_device_bytes(self) -> int:
+        """Live device KV footprint — O(n_lanes * P * page), independent of
+        context length (the benchmark's peak-memory metric)."""
+        return self.state.k.nbytes + self.state.v.nbytes
+
+    def _offloaded_tokens_lane(self, lane: int) -> int:
+        n = sum(1 for key in self.ctl.frozen_meta if key[1] == lane)
+        return n * self.page // self.L_attn
+
+    def _scratch_bytes(self) -> int:
+        return sum(pp.scratch.cache_k.nbytes + pp.scratch.cache_v.nbytes
+                   for pp in self.prefills.values())
+
+    # ---------------- device <-> host pool transfer ---------------- #
+    # Only the affected lanes' pool slices cross the host<->device boundary:
+    # page maintenance is per-lane, so a 1-lane page boundary moves
+    # (L, 1, P, page) arrays, not the whole (L, n_lanes, ...) pool.  The
+    # write path is a donated dynamic_update_slice — in place on backends
+    # with donation, a contiguous copy elsewhere.
+    _POOL_FIELDS = ("k", "v", "page_table", "slot_mask")
+    _FZ_FIELDS = ("c", "d", "frozen", "frozen_at")
+
+    def _state_arrs(self):
+        st = self.state
+        return tuple(getattr(st, f) for f in self._POOL_FIELDS) + \
+            tuple(st.freeze)
+
+    def _pull_lanes(self, lanes: List[int]) -> Tuple[dict, dict]:
+        cols = [jax.device_get(self._lane_read(self._state_arrs(),
+                                               jnp.int32(lane)))
+                for lane in lanes]
+        cat = lambda i: np.concatenate([c[i] for c in cols], axis=1)
+        pool = {f: cat(i) for i, f in enumerate(self._POOL_FIELDS)}
+        fstate = {f: cat(len(self._POOL_FIELDS) + i)
+                  for i, f in enumerate(self._FZ_FIELDS)}
+        return pool, fstate
+
+    def _push_lanes(self, pool: dict, fstate: dict, lanes: List[int]) -> None:
+        arrs = self._state_arrs()
+        for j, lane in enumerate(lanes):
+            sl = [pool[f][:, j:j + 1] for f in self._POOL_FIELDS] + \
+                 [fstate[f][:, j:j + 1] for f in self._FZ_FIELDS]
+            arrs = self._lane_write(arrs, jnp.int32(lane),
+                                    tuple(jnp.asarray(s) for s in sl))
+        self.state = self.state._replace(
+            **dict(zip(self._POOL_FIELDS, arrs[:4])),
+            freeze=PageFreezeState(*arrs[4:]))
+
+    # ---------------- admission (chunked) ---------------- #
+    def admit(self, req: Request, lane: Optional[int] = None) -> int:
+        """Begin a chunked admission: reserves a lane and queues the prompt
+        for chunk-by-chunk prefill.  Returns immediately — resident lanes
+        keep decoding while `step_once` advances the prefill."""
+        if lane is None:
+            lane = self._free_lane()
+        l = self.lanes[lane]
+        assert l.request is None, f"lane {lane} is busy"
+        prompt = np.asarray(req.prompt, np.int32)
+        sp = self._bucket(len(prompt), req.n_tokens)
+        if not self.enable_freeze:
+            # without freezing nothing ever swaps out, so the whole request
+            # must fit in the pool (plus the tail-allocation headroom slot)
+            need = -(-(sp + req.n_tokens) // self.page) + 1
+            if need > self.P:
+                raise ValueError(
+                    f"request needs ~{need} pages ({sp} prompt + "
+                    f"{req.n_tokens} generated tokens) but the pool holds "
+                    f"{self.P} and freezing is disabled (no page ever swaps "
+                    f"out); enable freezing or raise max_active_pages")
+        self.prefills[lane] = _PendingPrefill(
+            req=req, toks=self._left_padded(prompt, sp),
+            scratch=MD.init_decode_state(self.cfg, 1, sp), sp=sp)
+        l.request = req
+        l.generated = []
+        req.telemetry = GenerationResult([], [], [], [], [], [], [])
+        self.events.append({"event": "admit_start", "uid": req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "prompt_len": len(prompt), "bucket": sp})
+        return lane
+
+    def _chunk_sizes(self, sp: int) -> List[int]:
+        """Every chunk length a prompt bucket `sp` can hit, over all
+        interleaved/burst schedules (small closed set: the schedule only
+        ever picks min(prefill_chunk, rem) or the largest power-of-two
+        multiple of it that fits rem)."""
+        sizes, seen, frontier = set(), set(), {sp}
+        while frontier:
+            rem = frontier.pop()
+            if rem <= 0 or rem in seen:
+                continue
+            seen.add(rem)
+            ci = min(self.prefill_chunk, rem)
+            cb = self.prefill_chunk
+            while cb * 2 <= rem:
+                cb *= 2
+            cb = min(cb, rem)
+            sizes.update((ci, cb))
+            frontier.update((rem - ci, rem - cb))
+        return sorted(sizes)
+
+    def warm_prefill(self, prompt_len: int, n_tokens: int) -> None:
+        """Pre-compile every prefill-chunk shape a prompt of this length
+        can encounter (the burst schedule makes the shape sequence depend
+        on engine load, so production warmup must cover the closed set,
+        not one observed trace)."""
+        sp = self._bucket(prompt_len, n_tokens)
+        state = MD.init_decode_state(self.cfg, 1, sp)
+        for c in self._chunk_sizes(sp):
+            _, state = self._chunk(self.params,
+                                   tokens=jnp.zeros((1, c), jnp.int32),
+                                   state=state, pos0=jnp.int32(0))
+
+    def _prefill_tick(self, lane: int, busy: bool = True) -> None:
+        """Advance one admission by one prompt chunk.
+
+        `busy=False` (no resident lane is decoding) grows the chunk to the
+        largest power of two that fits the remainder: fine-grained chunks
+        only buy anything when there is decode work to interleave, so an
+        empty engine admits at near-whole-prefill speed while a busy one
+        keeps the configured interleave granularity.  Chunk lengths stay
+        powers of two, so compiles remain O(log max_seq)."""
+        pp = self.prefills[lane]
+        self._note_kv_peak(self._scratch_bytes())
+        rem = pp.sp - pp.done
+        c = self.prefill_chunk
+        if not busy:
+            while c * 2 <= rem:
+                c *= 2
+        c = min(c, rem)
+        chunk = jnp.asarray(pp.toks[:, pp.done:pp.done + c])
+        pp.logits, pp.scratch = self._chunk(
+            self.params, tokens=chunk, state=pp.scratch,
+            pos0=jnp.int32(pp.done))
+        pp.done += c
+        self.events.append({"event": "prefill_chunk", "uid": pp.req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "done": pp.done, "total": pp.sp})
+        if pp.done >= pp.sp:
+            self._install(lane)
+
+    def _install(self, lane: int) -> None:
+        """Repack the finished scratch prefill into pages and install them
+        into the lane: the newest pages fill the device pool, older pages
+        are stashed in the host store (returning as slots free up), and
+        `PagedController.write_lane` wholesale-resets exactly this lane."""
+        pp = self.prefills.pop(lane)
+        sp, page, P, L = pp.sp, self.page, self.P, self.L_attn
+        ck = np.array(pp.scratch.cache_k[:, 0])      # (L, sp, KVH, hd)
+        cv = np.array(pp.scratch.cache_v[:, 0])
+        n_pages = -(-sp // page)
+        pad = n_pages * page - sp
+        if pad:
+            ck = np.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = np.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ck = ck.reshape(L, n_pages, page, *ck.shape[2:])
+        cv = cv.reshape(L, n_pages, page, *cv.shape[2:])
+        masks = (np.arange(n_pages * page) < sp).reshape(n_pages, page)
+        # newest pages resident (leave one slot free for the next tail);
+        # older prompt pages overflow to the host store and cycle back in
+        # as the freeze schedule frees slots
+        r = min(n_pages, P - 1)
+        # write_lane overwrites every byte of the lane slice, so build it
+        # host-side instead of pulling the stale device copy first
+        kvh, hd = ck.shape[-2:]
+        dt = np.dtype(self.state.k.dtype)
+        pool = {"k": np.zeros((L, 1, P, page, kvh, hd), dt),
+                "v": np.zeros((L, 1, P, page, kvh, hd), dt),
+                "page_table": np.full((L, 1, P), -1, np.int32),
+                "slot_mask": np.zeros((L, 1, P, page), bool)}
+        fstate = {"c": np.zeros((L, 1, P), np.int32),
+                  "d": np.zeros((L, 1, P), np.int32),
+                  "frozen": np.zeros((L, 1, P), bool),
+                  "frozen_at": np.zeros((L, 1, P), np.int32)}
+        # write_lane drops the lane's host store, so overflow pages must be
+        # stashed AFTER it or they'd be deleted before decode ever starts
+        self.ctl.write_lane(pool, fstate, 0,
+                            ck[:, n_pages - r:], cv[:, n_pages - r:],
+                            np.arange(n_pages - r, n_pages, dtype=np.int32),
+                            masks[n_pages - r:], store_lane=lane)
+        # overflow pages are not low-relevance, just oldest-out: timer 1
+        # returns each the moment the freeze schedule frees a slot
+        for gp in range(n_pages - r):
+            for layer in range(L):
+                self.ctl.stash(layer, lane, gp, ck[layer, gp], cv[layer, gp],
+                               d=1)
+        self._push_lanes(pool, fstate, [lane])
+        if sp % page:                       # partial tail page is resident
+            self.tail_slot[:, lane] = r - 1
+        self.pos[lane] = sp                 # sp % page == 0 -> the boundary
+        self.step[lane] = 0                 # alloc runs before the next step
+        self.key, sub = jax.random.split(self.key)
+        first = int(np.asarray(sample(pp.logits, sub, pp.req.sampling))[0])
+        self.tok[lane] = first
+        self._set_lane_sampling(lane, pp.req.sampling)
+        self.lanes[lane].generated = [first]
+        self.events.append({"event": "admit", "uid": pp.req.uid,
+                            "lane": lane, "wall_step": self.wall_step})
+
+    # ---------------- stepping ---------------- #
+    def step_once(self) -> List[Request]:
+        """One engine step: a jitted paged decode step over the resident
+        lanes (with per-lane page-boundary maintenance), then one prefill
+        chunk for every admission in flight.  Returns retired requests."""
+        decode_lanes = [i for i, l in enumerate(self.lanes)
+                        if l.request is not None and i not in self.prefills]
+        finished: List[Request] = []
+        if decode_lanes:
+            boundary = [i for i in decode_lanes if self.pos[i] % self.page == 0]
+            if boundary:
+                pool, fstate = self._pull_lanes(boundary)
+                self.ctl.tick(pool, fstate, step=self.wall_step,
+                              lane_ids=tuple(boundary))
+                for bi, i in enumerate(boundary):
+                    slots = self.ctl.alloc_tail_lane(
+                        pool, bi, int(self.pos[i]) // self.page)
+                    if slots is None:
+                        raise RuntimeError(
+                            f"lane {i}: page pool exhausted"
+                            + (" (forced freeze should have kept headroom)"
+                               if self.enable_freeze else
+                               " — freezing is disabled, so nothing swaps "
+                               "out; admission should have rejected this"))
+                    self.tail_slot[:, i] = slots
+                self._push_lanes(pool, fstate, boundary)
+            live = np.zeros(self.n_lanes, bool)
+            live[decode_lanes] = True
+            self._note_kv_peak(self._scratch_bytes())
+            logits, self.state, info = self._step(
+                self.params, token=jnp.asarray(self.tok),
+                pos=jnp.asarray(self.pos), step=jnp.asarray(self.step),
+                tail_slot=jnp.asarray(self.tail_slot), state=self.state,
+                live=jnp.asarray(live))
+            self.wall_step += 1
+            self.key, sub = jax.random.split(self.key)
+            keys = ("n_active_slots_lane", "n_frozen_pages_lane")
+            host = jax.device_get(dict(
+                {k: info[k] for k in keys if k in info},
+                toks=self._sample(logits, sub, *self._lane_params())))
+            toks = host["toks"]
+            act, fro = (host.get(k) for k in keys)
+
+            for i in decode_lanes:
+                res = self.lanes[i].request.telemetry
+                if act is not None:
+                    res.active_kv.append(float(act[i]) / self.L_attn)
+                    res.frozen_kv.append(
+                        float(fro[i]) * self.page / self.L_attn)
+                else:
+                    res.active_kv.append(float(self.pos[i] + 1))
+                    res.frozen_kv.append(0.0)
+                res.total_kv.append(int(self.pos[i]) + 1)
+                res.offloaded_tokens.append(self._offloaded_tokens_lane(i))
+
+            for i in decode_lanes:
+                l = self.lanes[i]
+                t = int(toks[i])
+                l.generated.append(t)
+                self.tok[i] = t
+                self.pos[i] += 1
+                self.step[i] += 1
+                if len(l.generated) >= l.request.n_tokens:
+                    finished.append(self._retire(i))
+
+        # ---- chunked prefill: one chunk per admission in flight ---- #
+        for lane in list(self.prefills):
+            self._prefill_tick(lane, busy=bool(decode_lanes))
+        return finished
+
+    def _retire(self, lane: int) -> Request:
+        l = self.lanes[lane]
+        req = l.request
+        req.result = np.asarray(l.generated[: req.n_tokens], np.int32)
+        req.telemetry.tokens = req.result[None, :]
+        self.events.append({"event": "finish", "uid": req.uid, "lane": lane,
+                            "wall_step": self.wall_step})
+        l.request = None
+        l.generated = []
+        # unmap the lane's pages on device (attention skips them) and drop
+        # its host store so nothing leaks into the lane's next occupant
+        self.state = self._reset_lane(state=self.state, lane=jnp.int32(lane))
+        self.ctl.drop_lane(lane)
+        self._set_lane_sampling(lane, SamplingParams.greedy())
         return req

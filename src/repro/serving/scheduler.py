@@ -1,10 +1,11 @@
 """Request scheduling over the serving engines.
 
-``Scheduler`` is a thin admission queue over ``ContinuousEngine``: it holds
-pending requests and feeds one into a lane the moment that lane retires —
-mid-generation — so short requests never wait for a long co-batched one
-(no head-of-line blocking).  All batching mechanics (per-lane prefill,
-freeze-state reset, retirement) live in the engine.
+``Scheduler`` is a thin admission queue over ``ContinuousEngine`` or
+``PagedContinuousEngine``: it holds pending requests and feeds one into a
+lane the moment that lane retires — mid-generation — so short requests
+never wait for a long co-batched one (no head-of-line blocking).  All
+batching mechanics (per-lane prefill — whole-prompt or chunked — freeze
+state reset, retirement) live in the engine.
 
 ``StaticScheduler`` keeps the original fixed-batch FIFO behaviour — pad a
 batch, run everyone for max(n_tokens) steps, only then admit more — as the
@@ -17,16 +18,20 @@ from typing import Dict, List, Optional, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import ContinuousEngine, Engine, Request
+from repro.serving.engine import (ContinuousEngine, Engine,
+                                  PagedContinuousEngine, Request)
 from repro.serving.sampling import SamplingParams
 
 
 class Scheduler:
-    """FIFO admission queue over the continuous-batching engine."""
+    """FIFO admission queue over a continuous-batching engine (contiguous
+    or paged — both expose the same admit/step_once lane lifecycle)."""
 
-    def __init__(self, engine: Union[Engine, ContinuousEngine],
+    def __init__(self,
+                 engine: Union[Engine, ContinuousEngine,
+                               PagedContinuousEngine],
                  batch_size: Optional[int] = None, pad_id: int = 0, **kw):
-        if isinstance(engine, ContinuousEngine):
+        if isinstance(engine, (ContinuousEngine, PagedContinuousEngine)):
             self.engine = engine
         else:
             self.engine = ContinuousEngine.from_engine(

@@ -34,12 +34,11 @@ def test_freeze_decode_attn_sweep(B, S, H, KVH, hd, blk, dtype):
     out_r, rel_r = ref.freeze_decode_attention_ref(q, k, v, mask)
     np.testing.assert_allclose(np.asarray(out_k, np.float32),
                                np.asarray(out_r, np.float32), **TOLS[dtype])
-    # relevance compared on blocks that have >=1 active slot (skipped blocks
-    # legitimately report 0)
-    mb = np.asarray(mask).reshape(B, S // blk, blk).any(-1)
-    mb = np.repeat(mb, blk, axis=-1)
-    np.testing.assert_allclose(np.asarray(rel_k) * mb,
-                               np.asarray(rel_r) * mb, **TOLS[dtype])
+    # slot-exact relevance parity: inactive slots (also inside partially
+    # active blocks) report exactly 0 in kernel and reference alike
+    np.testing.assert_allclose(np.asarray(rel_k), np.asarray(rel_r),
+                               **TOLS[dtype])
+    np.testing.assert_array_equal(np.asarray(rel_k)[~np.asarray(mask)], 0.0)
 
 
 def test_freeze_decode_attn_skips_frozen_blocks():
@@ -61,8 +60,9 @@ def test_freeze_decode_attn_skips_frozen_blocks():
 
 @pytest.mark.parametrize("B,P,page,H,KVH,hd", [
     (1, 4, 128, 8, 8, 64),
-    (2, 8, 64, 8, 2, 64),
-    (2, 6, 128, 4, 1, 128),
+    (2, 8, 64, 8, 2, 64),     # GQA
+    (2, 6, 128, 4, 1, 128),   # MQA
+    (3, 5, 32, 16, 8, 128),   # non-pow2 batch/pool, small pages
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_paged_decode_attn_sweep(B, P, page, H, KVH, hd, dtype):
@@ -72,14 +72,51 @@ def test_paged_decode_attn_sweep(B, P, page, H, KVH, hd, dtype):
     vp = jax.random.normal(ks[2], (B, P, page, KVH, hd), dtype)
     sm = jax.random.bernoulli(ks[3], 0.5, (B, P, page))
     sm = sm.at[:, 0, 0].set(True)
-    sm = sm.at[:, -1].set(False)      # one dead page
+    sm = sm.at[:, -1].set(False)      # one dead (fully-frozen) page
     out_k, rel_k = paged_decode_attention_kernel(q, kp, vp, sm, interpret=True)
     out_r, rel_r = ref.paged_decode_attention_ref(q, kp, vp, sm)
     np.testing.assert_allclose(np.asarray(out_k, np.float32),
                                np.asarray(out_r, np.float32), **TOLS[dtype])
-    act = np.asarray(sm).any(-1)
-    np.testing.assert_allclose(np.asarray(rel_k) * act,
-                               np.asarray(rel_r) * act, **TOLS[dtype])
+    np.testing.assert_allclose(np.asarray(rel_k), np.asarray(rel_r),
+                               **TOLS[dtype])
+    np.testing.assert_array_equal(np.asarray(rel_k[:, -1]), 0.0)
+
+
+@pytest.mark.parametrize("B,P,page,H,KVH,hd", [
+    (1, 4, 128, 8, 8, 64),
+    (2, 6, 64, 8, 2, 64),
+])
+def test_paged_decode_attn_unmapped_page_skip(B, P, page, H, KVH, hd):
+    """A slot whose page-table entry is -1 must be skipped even if its slot
+    mask claims valid tokens (stale mask bits after a host swap-out) — the
+    per-lane page table is authoritative.  Output equals attention over the
+    mapped pages only; unmapped pages report relevance 0."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (B, P, page, KVH, hd))
+    vp = jax.random.normal(ks[2], (B, P, page, KVH, hd))
+    sm = jnp.ones((B, P, page), bool)               # stale: claims all valid
+    pt = jnp.zeros((B, P), jnp.int32).at[:, 1].set(-1)   # slot 1 unmapped
+    out_k, rel_k = paged_decode_attention_kernel(q, kp, vp, sm, pt,
+                                                 interpret=True)
+    out_r, rel_r = ref.paged_decode_attention_ref(q, kp, vp, sm, pt)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(rel_k), np.asarray(rel_r),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(rel_k[:, 1]), 0.0)
+    # cross-check against a hand-masked pool: unmapped == fully dead page
+    out_m, _ = ref.paged_decode_attention_ref(
+        q, kp, vp, sm.at[:, 1].set(False))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_m),
+                               rtol=2e-5, atol=2e-5)
+
+    # fully-unmapped lane: all pages -1 -> zero output, zero relevance
+    pt_dead = jnp.full((B, P), -1, jnp.int32)
+    out_d, rel_d = paged_decode_attention_kernel(q, kp, vp, sm, pt_dead,
+                                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_d), 0.0)
+    np.testing.assert_array_equal(np.asarray(rel_d), 0.0)
 
 
 @pytest.mark.parametrize("B,S,blk", [(1, 256, 64), (2, 1024, 256), (4, 512, 512)])

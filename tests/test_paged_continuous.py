@@ -1,0 +1,200 @@
+"""PagedContinuousEngine: token-stream parity with the contiguous engine,
+chunked-prefill interleaving (no head-of-line blocking), bounded-pool decode
+with host swapping, and per-lane reset guarantees."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving.engine import ContinuousEngine, PagedContinuousEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def tiny_f32():
+    """f32 tiny model (exact argmax parity across summation orders) with a
+    small page size so pools stay cheap."""
+    cfg = get_config("llama3-8b-tiny")
+    fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                             recovery_enabled=False)
+    cfg = dataclasses.replace(cfg, freeze=fc, dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+class TestParity:
+    """With freezing disabled and a pool large enough for the whole trace,
+    paged and contiguous continuous batching are the same math — token
+    streams must be identical."""
+
+    def test_identical_token_streams(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(0, cfg.vocab_size, size=n)
+                   for n in (16, 10, 16, 7)]
+        n_toks = [12, 8, 10, 9]
+
+        def run(paged):
+            if paged:
+                eng = PagedContinuousEngine(
+                    cfg, params, max_seq=96, n_lanes=2, max_active_pages=8,
+                    enable_freeze=False, prefill_chunk=8)
+            else:
+                eng = ContinuousEngine(cfg, params, max_seq=96, n_lanes=2,
+                                       enable_freeze=False, offload=False)
+            s = Scheduler(eng)
+            uids = [s.submit(p, n, SamplingParams.greedy())
+                    for p, n in zip(prompts, n_toks)]
+            s.run()
+            return [s.done[u].result for u in uids]
+
+        for i, (a, b) in enumerate(zip(run(False), run(True))):
+            np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+
+
+class TestChunkedPrefill:
+    def test_resident_lane_decodes_during_long_admission(self, tiny_f32):
+        """A long prompt admitted while another lane is decoding must be
+        prefilled in fine-grained chunks, with the resident lane producing
+        decode steps between admit_start and admit-complete."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(1)
+        from repro.serving.engine import Request
+        eng = PagedContinuousEngine(cfg, params, max_seq=160, n_lanes=2,
+                                    max_active_pages=12, enable_freeze=False,
+                                    prefill_chunk=8)
+        short = Request(1, rng.randint(0, cfg.vocab_size, size=8).astype(
+            np.int32), 40, SamplingParams.greedy())
+        long = Request(2, rng.randint(0, cfg.vocab_size, size=60).astype(
+            np.int32), 8, SamplingParams.greedy())
+        eng.admit(short)
+        while eng.prefills:          # install the short request...
+            eng.step_once()
+        eng.step_once()              # ...and start decoding it
+        eng.admit(long)              # now the engine is busy: chunked path
+        finished = []
+        while len(finished) < 2:
+            finished += eng.step_once()
+        assert {r.uid for r in finished} == {1, 2}
+        assert short.result.shape == (40,)
+        assert long.result.shape == (8,)
+        ev = {(e["event"], e["uid"]): e["wall_step"] for e in eng.events}
+        start, done = ev[("admit_start", 2)], ev[("admit", 2)]
+        # 60-token prompt -> 64 bucket -> 8 chunks of 8, one per decode
+        # step: the resident lane advanced throughout the admission
+        chunks = [e for e in eng.events if e["event"] == "prefill_chunk"
+                  and e["uid"] == 2]
+        assert len(chunks) == 8
+        assert done - start >= 8, "admission did not interleave with decode"
+
+    def test_idle_engine_bursts_admission(self, tiny_f32):
+        """With no resident decode work, chunking buys nothing: the burst
+        schedule grows chunks to powers of two and admits in few steps."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(3)
+        from repro.serving.engine import Request
+        eng = PagedContinuousEngine(cfg, params, max_seq=160, n_lanes=2,
+                                    max_active_pages=12, enable_freeze=False,
+                                    prefill_chunk=8)
+        req = Request(1, rng.randint(0, cfg.vocab_size, size=60).astype(
+            np.int32), 8, SamplingParams.greedy())
+        eng.admit(req)
+        eng.step_once()
+        chunks = [e for e in eng.events if e["event"] == "prefill_chunk"]
+        assert len(chunks) == 1 and chunks[0]["done"] == 64
+
+    def test_overflow_prompt_pages_survive_install(self):
+        """A prompt whose pages exceed the device pool must keep its oldest
+        pages in the host store after install (regression: write_lane's
+        internal drop_lane used to delete the just-stashed overflow), and
+        they must swap back in during decode so early context is never
+        permanently lost."""
+        cfg = get_config("llama3-8b-tiny")
+        fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                                 tau_mode="quantile", quantile=0.6,
+                                 k_soft=1.0, recovery_enabled=False)
+        cfg = dataclasses.replace(cfg, freeze=fc)
+        params = MD.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(4)
+        from repro.serving.engine import Request
+        eng = PagedContinuousEngine(cfg, params, max_seq=256, n_lanes=1,
+                                    max_active_pages=6, prefill_chunk=16)
+        # 48-token prompt -> 64 bucket = 8 pages > 5 resident: 3 overflow
+        req = Request(1, rng.randint(0, cfg.vocab_size, size=48).astype(
+            np.int32), 40, SamplingParams(temperature=0.7))
+        eng.admit(req)
+        while eng.prefills:
+            eng.step_once()
+        overflow = {k[2] for k in eng.ctl.store if k[1] == 0}
+        assert overflow == {0, 1, 2}, \
+            f"overflow prompt pages lost at install: {overflow}"
+        swaps_before = eng.ctl.n_swap_in
+        while eng.lanes[0].request is not None:
+            eng.step_once()
+        assert eng.ctl.n_swap_in > swaps_before, \
+            "overflow pages never swapped back in during decode"
+
+    def test_no_decode_lane_still_progresses(self, tiny_f32):
+        """An admission into an otherwise-empty engine must complete even
+        though no decode steps run."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(2)
+        eng = PagedContinuousEngine(cfg, params, max_seq=96, n_lanes=1,
+                                    max_active_pages=8, enable_freeze=False,
+                                    prefill_chunk=8)
+        s = Scheduler(eng)
+        uid = s.submit(rng.randint(0, cfg.vocab_size, size=30), 6,
+                       SamplingParams.greedy())
+        s.run()
+        assert s.done[uid].result.shape == (6,)
+
+
+class TestBoundedPool:
+    @pytest.fixture(scope="class")
+    def bounded_run(self):
+        cfg = get_config("llama3-8b-tiny")
+        fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                                 tau_mode="quantile", quantile=0.6,
+                                 k_soft=1.0, recovery_enabled=False)
+        cfg = dataclasses.replace(cfg, freeze=fc)
+        params = MD.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(0)
+        eng = PagedContinuousEngine(cfg, params, max_seq=256, n_lanes=2,
+                                    max_active_pages=6, prefill_chunk=16)
+        s = Scheduler(eng)
+        uids = [s.submit(rng.randint(0, cfg.vocab_size, size=sp), n,
+                         SamplingParams(temperature=0.7))
+                for sp, n in ((48, 60), (12, 20), (20, 24))]
+        s.run()
+        return eng, s, uids
+
+    def test_all_complete_and_swapping_happened(self, bounded_run):
+        eng, s, uids = bounded_run
+        for u, n in zip(uids, (60, 20, 24)):
+            assert s.done[u].result.shape == (n,)
+        # context (64 prompt bucket + 60 decode) far exceeds the 48-slot
+        # pool: pages must have been swapped out and back in
+        assert eng.ctl.n_swap_out > 0
+        assert eng.ctl.n_swap_in > 0
+
+    def test_active_kv_is_bounded_by_pool(self, bounded_run):
+        """The whole point: per-lane active KV never exceeds P * page even
+        though the context grows past it."""
+        eng, s, uids = bounded_run
+        t = s.done[uids[0]].telemetry
+        pool_slots = 6 * 8
+        assert max(t.active_kv) <= pool_slots
+        assert t.total_kv[-1] > pool_slots       # context outgrew the pool
+        assert t.compression > 0.3
+
+    def test_lane_reuse_leaks_nothing(self, bounded_run):
+        """After the run every lane retired: page tables must be unmapped
+        and the controller's per-lane store empty."""
+        eng, _, _ = bounded_run
+        assert int(np.asarray((eng.state.page_table >= 0).sum())) == 0
+        assert not eng.ctl.frozen_meta
+        assert eng.kv_device_bytes == eng.state.k.nbytes + eng.state.v.nbytes
