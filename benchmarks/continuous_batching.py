@@ -1,6 +1,6 @@
 """Serving benchmarks over mixed request traces.
 
-Two comparisons, both reported per run:
+Three comparisons, all reported per run:
 
 1. **static vs continuous** (PR 1): the static FIFO batcher runs every batch
    for max(n_tokens) steps (head-of-line blocking); the continuous engine
@@ -16,6 +16,19 @@ Two comparisons, both reported per run:
    latency p50/p99, peak live device KV bytes (incl. prefill scratch), and
    page swap counts — the acceptance check is paged winning p99 at strictly
    lower peak KV.
+
+3. **needle-in-haystack retrieval** (PR 3): the paper's defining claim is
+   that freezing is *reversible* — entropy spikes recover frozen KV, which
+   is what separates ASR-KF-EGR from eviction schemes that permanently
+   lose early context.  Each request plants a "needle" in its first prompt
+   page, freeze pressure pushes that page out (frozen / host-stashed), and
+   sustained entropy spikes drive the recovery ladder.  Retrieval accuracy
+   = the fraction of the needle's KV that is *attendable* (un-frozen, and
+   device-resident on the paged path) during the query window — the last
+   stretch of each request's decode.  Acceptance: the paged engine with
+   recovery enabled matches the contiguous engine's accuracy at strictly
+   lower peak device KV bytes; paged *without* recovery is reported as the
+   eviction-scheme contrast.
 
     PYTHONPATH=src python -m benchmarks.continuous_batching           # full
     PYTHONPATH=src python -m benchmarks.continuous_batching --smoke   # CI
@@ -209,6 +222,112 @@ def run_paged_comparison(cfg, params, smoke: bool, warmup: bool = True):
     return c_stats, p_stats
 
 
+# ===================================================================== #
+# Needle-in-haystack retrieval: is frozen/stashed context recoverable?
+# ===================================================================== #
+def needle_config(cfg, page: int, recovery: bool):
+    """Aggressive freeze pressure (quantile tau flags half the eligible
+    pages every step, k_soft < 1 lengthens timers) plus a low absolute
+    entropy threshold so spikes — and with them the recovery ladder — fire
+    throughout the decode."""
+    fc = dataclasses.replace(cfg.freeze, page_size=page, window=page,
+                             tau_mode="quantile", quantile=0.5, k_soft=0.7,
+                             recovery_enabled=recovery,
+                             entropy_abs_threshold=0.5)
+    return dataclasses.replace(cfg, freeze=fc)
+
+
+def _needle_visibility(eng, lane: int, needle) -> float:
+    """Fraction of the needle's KV currently attendable in `lane`.
+
+    Paged engine (`needle` = global page id): mean over layers of "the
+    needle page is device-resident AND un-frozen".  Contiguous engine
+    (`needle` = cache-slot indices): mean over layers/slots of ~frozen.
+    """
+    from repro.serving.engine import PagedContinuousEngine
+    if isinstance(eng, PagedContinuousEngine):
+        pt = np.asarray(eng.state.page_table[:, lane])       # (L, P)
+        fro = np.asarray(eng.state.freeze.frozen[:, lane])   # (L, P)
+        return float(np.mean([
+            bool(((pt[l] == needle) & ~fro[l]).any())
+            for l in range(pt.shape[0])]))
+    fro = np.asarray(eng.state.freeze.frozen[:, lane, :])    # (L, S)
+    return float(np.mean(~fro[:, needle]))
+
+
+def run_needle(cfg, params, smoke: bool, paged: bool, recovery: bool):
+    """Serve the needle trace through one engine arm; retrieval accuracy is
+    the max needle visibility observed inside each request's query window
+    (its last 2 pages of decode steps), averaged over requests — i.e. "can
+    attention still reach the needle when the query arrives?".  Accuracy
+    is state-based, not timing-based, so no warmup pass is needed."""
+    from repro.serving.engine import (ContinuousEngine,
+                                      PagedContinuousEngine, Request)
+    from repro.serving.sampling import SamplingParams
+
+    page = 16
+    cfg = needle_config(cfg, page, recovery)
+    n_req = 2 if smoke else 4
+    prompt_len = 4 * page if smoke else 8 * page     # needle = prompt page 0
+    n_gen = 3 * page if smoke else 4 * page
+    pool_pages = 4 if smoke else 6
+    max_seq = prompt_len + n_gen + page
+    query_window = 2 * page
+
+    if paged:
+        eng = PagedContinuousEngine(cfg, params, max_seq=max_seq,
+                                    n_lanes=n_req,
+                                    max_active_pages=pool_pages,
+                                    prefill_chunk=page, max_rewinds=0)
+    else:
+        eng = ContinuousEngine(cfg, params, max_seq=max_seq, n_lanes=n_req,
+                               max_rewinds=0)
+    rng = np.random.RandomState(7)
+    reqs = [Request(i + 1,
+                    rng.randint(0, cfg.vocab_size, size=prompt_len).astype(
+                        np.int32),
+                    n_gen, SamplingParams(temperature=0.7))
+            for i in range(n_req)]
+    lane_of = {eng.admit(r): r for r in reqs}
+    best = {r.uid: 0.0 for r in reqs}
+    steps = 0
+    while any(l.request is not None for l in eng.lanes):
+        eng.step_once()
+        steps += 1
+        assert steps < 200 * n_gen, "needle benchmark stalled"
+        for lane, r in lane_of.items():
+            l = eng.lanes[lane]
+            if l.request is not r or lane in getattr(eng, "prefills", {}):
+                continue
+            if r.n_tokens - len(l.generated) > query_window:
+                continue
+            if paged:
+                needle = 0                                  # global page id
+            else:
+                sp = eng._bucket(prompt_len, n_gen)         # left-pad offset
+                needle = np.arange(page) + (sp - prompt_len)
+            best[r.uid] = max(best[r.uid],
+                              _needle_visibility(eng, lane, needle))
+    stats = {"retrieval_acc": round(float(np.mean(list(best.values()))), 3),
+             "peak_kv_bytes": int(eng.peak_kv_bytes)}
+    if paged:
+        stats["thaws"] = eng.ctl.n_thaw
+        stats["swaps"] = eng.ctl.n_swap_out + eng.ctl.n_swap_in
+    return stats
+
+
+def run_needle_comparison(cfg, params, smoke: bool):
+    """Three arms: contiguous + recovery (the reference), paged + recovery
+    (must match it at lower peak KV), paged without recovery (the
+    eviction-scheme contrast ROADMAP warns about)."""
+    out = {}
+    for name, paged, recovery in (("contiguous_recovery", False, True),
+                                  ("paged_recovery", True, True),
+                                  ("paged_no_recovery", True, False)):
+        out[name] = run_needle(cfg, params, smoke, paged, recovery)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-warmup", action="store_true",
@@ -256,6 +375,24 @@ def main():
           f"({p_stats['peak_kv_bytes']} < {c_stats['peak_kv_bytes']} bytes)")
     report.update(long_trace_contiguous=c_stats, long_trace_paged=p_stats,
                   paged_p99_win=bool(p99_win), paged_mem_win=bool(mem_win))
+
+    # ---- needle-in-haystack: recovery keeps frozen context retrievable ---- #
+    needle = run_needle_comparison(cfg, params, smoke=args.smoke)
+    print(f"\n{'needle retrieval':>22s}  "
+          + "  ".join(f"{k:>20s}" for k in needle))
+    for field in ("retrieval_acc", "peak_kv_bytes"):
+        print(f"{field:>22s}  "
+              + "  ".join(f"{needle[k][field]:>20}" for k in needle))
+    acc_match = (needle["paged_recovery"]["retrieval_acc"]
+                 >= needle["contiguous_recovery"]["retrieval_acc"])
+    needle_mem_win = (needle["paged_recovery"]["peak_kv_bytes"]
+                      < needle["contiguous_recovery"]["peak_kv_bytes"])
+    print(f"\npaged+recovery matches contiguous retrieval: {acc_match}   "
+          f"at lower peak KV: {needle_mem_win}   "
+          f"(no-recovery contrast: "
+          f"{needle['paged_no_recovery']['retrieval_acc']})")
+    report.update(needle=needle, needle_acc_match=bool(acc_match),
+                  needle_mem_win=bool(needle_mem_win))
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "continuous_batching.json").write_text(

@@ -54,6 +54,7 @@ def paged_decode_attention(
     v_pages: jnp.ndarray,     # (B, P, page, KVH, hd)
     slot_mask: jnp.ndarray,   # (B, P, page) bool
     page_table: Optional[jnp.ndarray] = None,   # (B, P); slots < 0 unmapped
+    page_visible: Optional[jnp.ndarray] = None, # (B, P) bool; False = frozen
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Decode attention over the active page pool.
 
@@ -61,11 +62,17 @@ def paged_decode_attention(
     the masked mean over the page's slots of the Eq. 2 token score.
     Unmapped slots (page_table < 0) are excluded regardless of slot_mask —
     the reference semantics of the Pallas kernel's page-table skip.
+    ``page_visible`` is the thaw-aware visibility mask (``~frozen`` after
+    the recovery ladder ran): invisible pages contribute nothing and report
+    relevance 0, exactly like an unmapped slot, while a page the ladder
+    just thawed re-enters both the softmax and the relevance accounting.
     """
     B, H, hd = q.shape
     _, P, page, KVH, _ = k_pages.shape
     if page_table is not None:
         slot_mask = slot_mask & (page_table >= 0)[..., None]
+    if page_visible is not None:
+        slot_mask = slot_mask & page_visible[..., None]
     G = H // KVH
     qf = q.reshape(B, KVH, G, hd).astype(jnp.float32)
     kf = k_pages.astype(jnp.float32)
@@ -205,11 +212,15 @@ class PagedController:
         dataclasses.field(default_factory=dict)
     n_swap_out: int = 0
     n_swap_in: int = 0
+    n_thaw: int = 0        # entropy-guided recovery: pages remapped early
 
     def tick(self, pool: dict, fstate: dict, step: int,
              reserve_slots: int = 1,
              lanes: Optional[Tuple[int, ...]] = None,
-             lane_ids: Optional[Tuple[int, ...]] = None) -> Tuple[dict, dict]:
+             lane_ids: Optional[Tuple[int, ...]] = None,
+             thaw_lanes: Optional[Tuple[int, ...]] = None,
+             keep_gids: Optional[Dict[int, Tuple[int, ...]]] = None,
+             ) -> Tuple[dict, dict]:
         """pool: dict of numpy arrays {k, v, page_table, slot_mask};
         fstate: {c, d, frozen, frozen_at} (all (L, B, P) / page arrays).
         Decrements offloaded pages' timers, swaps out frozen device pages,
@@ -221,7 +232,12 @@ class PagedController:
         batching ticks each lane at its own page-allocation cadence).
         `lane_ids` maps the pool's batch indices to global lane ids for the
         host-store keys — the serving engine transfers only the boundary
-        lanes' pool slices, so index b of `pool` is lane `lane_ids[b]`."""
+        lanes' pool slices, so index b of `pool` is lane `lane_ids[b]`.
+        `thaw_lanes` (batch indices) are additionally serviced by
+        ``thaw_lane`` after the timer pass — the entropy ladder's FR level
+        raised ``thaw_request`` for them and their stashed pages come home
+        ahead of their freeze timers; `keep_gids[b]` lists global page ids
+        (tail + in-window) that must never be chosen as eviction victims."""
         k, v = pool["k"], pool["v"]
         pt, sm = pool["page_table"], pool["slot_mask"]
         L, B, P = pt.shape
@@ -267,7 +283,157 @@ class PagedController:
                         del self.frozen_meta[key]
                         # keep host copy (pages are immutable once complete)
                         self.n_swap_in += 1
+        for b in (thaw_lanes or ()):
+            gb = lane_ids[b] if lane_ids is not None else b
+            self.thaw_lane(pool, fstate, b, gb,
+                           keep_gids=(keep_gids or {}).get(b, ()),
+                           reserve_slots=reserve_slots)
         return pool, fstate
+
+    # ---- entropy-guided recovery: early thaw of stashed pages ---------- #
+    def _evict_coldest(self, pool: dict, fstate: dict, l: int, b: int,
+                       lane_id: int, keep_gids=(), skip_gids=()
+                       ) -> Optional[int]:
+        """Stash the coldest resident page of (layer, lane) to the host
+        store and unmap its slot; returns the freed physical slot or None
+        if nothing is evictable.  Coldness ranks frozen pages first, then
+        ascending thaw priority (most-often-flagged, longest-frozen pages
+        leave first).  The victim gets the forced-freeze timer (one
+        page-fill interval) so it returns by itself; `keep_gids` (tail +
+        in-window pages) and `skip_gids` (pages thawed in this very pass —
+        prevents ping-pong) are never victims."""
+        from repro.core.recovery import thaw_priority
+        pt, sm = pool["page_table"], pool["slot_mask"]
+        protected = set(keep_gids) | set(skip_gids)
+        best, best_rank = None, None
+        for p in range(pt.shape[2]):
+            gid = int(pt[l, b, p])
+            if gid < 0 or gid in protected:
+                continue
+            rank = (not bool(fstate["frozen"][l, b, p]),
+                    thaw_priority(int(fstate["c"][l, b, p]),
+                                  int(fstate["frozen_at"][l, b, p])), gid)
+            if best_rank is None or rank < best_rank:
+                best, best_rank = p, rank
+        if best is None:
+            return None
+        gid = int(pt[l, b, best])
+        key = (l, lane_id, gid)
+        self.store[key] = (pool["k"][l, b, best].copy(),
+                           pool["v"][l, b, best].copy())
+        self.frozen_meta[key] = {
+            "c": max(int(fstate["c"][l, b, best]), 1),
+            "d": self.cfg.freeze.page_size,
+            "frozen_at": int(fstate["frozen_at"][l, b, best]),
+        }
+        pt[l, b, best] = -1
+        sm[l, b, best] = False
+        for f in ("c", "d", "frozen", "frozen_at"):
+            fstate[f][l, b, best] = 0
+        self.n_swap_out += 1
+        return best
+
+    def _install_page(self, pool: dict, fstate: dict, l: int, b: int,
+                      p: int, key: Tuple[int, int, int]) -> None:
+        """Remap one stashed page into physical slot `p`, un-frozen (it
+        re-enters attention and relevance accounting immediately)."""
+        meta = self.frozen_meta.pop(key)
+        kk, vv = self.store[key]           # host copy stays (immutable)
+        pool["k"][l, b, p] = kk
+        pool["v"][l, b, p] = vv
+        pool["page_table"][l, b, p] = key[2]
+        pool["slot_mask"][l, b, p] = True
+        fstate["c"][l, b, p] = meta["c"]
+        fstate["d"][l, b, p] = 0
+        fstate["frozen"][l, b, p] = False
+        fstate["frozen_at"][l, b, p] = meta["frozen_at"]
+
+    def thaw_lane(self, pool: dict, fstate: dict, b: int, lane_id: int,
+                  keep_gids=(), reserve_slots: int = 1,
+                  max_pages: Optional[int] = None) -> int:
+        """Entropy-guided recovery (FR level): remap the lane's stashed
+        host pages back into its device pool ahead of their freeze timers.
+        Candidates are ranked by ``recovery.thaw_priority`` over the freeze
+        counters stashed with each page (fewest low-relevance flags, most
+        recently frozen first).  While free slots (beyond the tail
+        reserve) exist they are used; once the pool is full the coldest
+        resident page is evicted — stashed in turn with the forced-freeze
+        timer — so the thaw trades the least-wanted resident page for the
+        most-wanted stashed one.  Returns the number of pages thawed."""
+        from repro.core.recovery import thaw_priority
+        pt = pool["page_table"]
+        L = pt.shape[0]
+        budget = pt.shape[2] if max_pages is None else max_pages
+        thawed = 0
+        for l in range(L):
+            cand = [key for key in self.frozen_meta
+                    if key[0] == l and key[1] == lane_id]
+            cand.sort(key=lambda key: -thaw_priority(
+                self.frozen_meta[key]["c"], self.frozen_meta[key]["frozen_at"]))
+            done_gids = []
+            for key in cand[:budget]:
+                free = np.nonzero(pt[l, b] < 0)[0]
+                if len(free) > reserve_slots:
+                    p = int(free[0])
+                else:
+                    p = self._evict_coldest(pool, fstate, l, b, lane_id,
+                                            keep_gids=keep_gids,
+                                            skip_gids=done_gids)
+                    if p is None:
+                        break
+                self._install_page(pool, fstate, l, b, p, key)
+                done_gids.append(key[2])
+                thawed += 1
+                self.n_thaw += 1
+        return thawed
+
+    def ensure_resident(self, pool: dict, fstate: dict, b: int, lane_id: int,
+                        gid: int, keep_gids=()) -> bool:
+        """Make global page `gid` device-resident and un-frozen in every
+        layer — the rewind path's requirement: the page holding the new
+        tail position must be attendable and writable before decode
+        resumes.  Resident-but-frozen copies are un-frozen in place;
+        missing copies are thawed from the host store (evicting the
+        coldest page if the pool is full).  Returns False only if a layer
+        has neither a resident copy, a stashed copy, nor an evictable
+        victim — the engine then skips the rewind."""
+        pt = pool["page_table"]
+        L = pt.shape[0]
+        for l in range(L):
+            where = np.nonzero(pt[l, b] == gid)[0]
+            if len(where):
+                p = int(where[0])
+                fstate["frozen"][l, b, p] = False
+                fstate["d"][l, b, p] = 0
+                continue
+            key = (l, lane_id, gid)
+            if key not in self.frozen_meta:
+                return False
+            free = np.nonzero(pt[l, b] < 0)[0]
+            p = int(free[0]) if len(free) else \
+                self._evict_coldest(pool, fstate, l, b, lane_id,
+                                    keep_gids=keep_gids, skip_gids=(gid,))
+            if p is None:
+                return False
+            self._install_page(pool, fstate, l, b, p, key)
+            self.n_thaw += 1
+        return True
+
+    def force_free_slot(self, pool: dict, fstate: dict, b: int, lane_id: int,
+                        keep_gids=()) -> bool:
+        """Guarantee at least one free physical slot per layer by evicting
+        the coldest resident page wherever the pool is full — the tail
+        allocator's backstop when recovery un-freezing left nothing for
+        the timer-driven swap-out to release.  Returns False if a full
+        layer has no evictable page."""
+        pt = pool["page_table"]
+        ok = True
+        for l in range(pt.shape[0]):
+            if (pt[l, b] < 0).any():
+                continue
+            ok &= self._evict_coldest(pool, fstate, l, b, lane_id,
+                                      keep_gids=keep_gids) is not None
+        return ok
 
     def alloc_tail(self, pool: dict, global_page: int) -> Optional[np.ndarray]:
         """Allocate a tail-page slot PER LAYER (layers' freeze patterns
@@ -308,6 +474,19 @@ class PagedController:
         must never collide with the retired request's global page ids.
         Returns the number of pages dropped."""
         stale = [key for key in self.store if key[1] == lane]
+        for key in stale:
+            self.store.pop(key, None)
+            self.frozen_meta.pop(key, None)
+        return len(stale)
+
+    def drop_pages_from(self, lane: int, first_gid: int) -> int:
+        """Forget the host copies of one lane's pages with global id >=
+        `first_gid` — the Rewalk-rewind path: pages wholly past the rewind
+        point are regenerated, so a stashed copy of the rewound generation
+        must never swap back in over the replayed pages.  Returns the
+        number of pages dropped."""
+        stale = [key for key in self.store
+                 if key[1] == lane and key[2] >= first_gid]
         for key in stale:
             self.store.pop(key, None)
             self.frozen_meta.pop(key, None)

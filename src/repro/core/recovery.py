@@ -7,6 +7,19 @@ escalates one level and applies that level's intervention to the freeze
 state; sustained calm de-escalates.  RR (Rewalk Regeneration) cannot be done
 inside a jitted step — it rewinds generation — so the step only raises
 ``rr_request`` and the serving engine performs the rewind (engine.py).
+
+Two freeze granularities share the same ladder (``_ladder_step``):
+
+* ``recovery_update``      — token-granular ``FreezeState`` (contiguous
+  engines: slots are individual KV positions).
+* ``page_recovery_update`` — page-granular ``PageFreezeState`` (the paged
+  engine: slots are whole device pages).  FR additionally raises
+  ``thaw_request`` so the host ``PagedController`` remaps stashed pages
+  back into the device pool at the lane's next page-boundary tick; RR
+  raises ``rr_request`` and the engine performs a page-aware rewind
+  (``model.rewind_paged_lane``).
+
+The math is documented in docs/recovery.md.
 """
 from __future__ import annotations
 
@@ -56,13 +69,14 @@ def token_entropy(logits: jnp.ndarray) -> jnp.ndarray:
     return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
 
 
-def recovery_update(
-    rec: RecoveryState,
-    freeze: FreezeState,            # stacked (L, B, S) or flat (B, S)
-    logits: jnp.ndarray,            # (B, V)
-    step: jnp.ndarray,
-    cfg: FreezeConfig,
-) -> Tuple[RecoveryState, FreezeState, dict]:
+def _ladder_step(rec: RecoveryState, logits: jnp.ndarray,
+                 cfg: FreezeConfig):
+    """Shared per-lane escalation core: spike detection, level bookkeeping
+    and the EMA baseline.  Both freeze granularities (token slots and
+    device pages) run this exact code so their ladders stay in lockstep —
+    the paged-vs-contiguous parity test depends on it.
+
+    Returns (new RecoveryState, spike, level, rr_request)."""
     ent = token_entropy(logits)                                   # (B,)
     warm = rec.steps_seen >= 8
     spike = warm & (
@@ -77,21 +91,91 @@ def recovery_update(
     deescalate = calm >= cfg.calm_steps_to_deescalate
     level = jnp.where(deescalate & ~spike, jnp.maximum(level - 1, 0), level)
     calm = jnp.where(deescalate, 0, calm)
-
-    # apply the ladder interventions for sequences spiking at each level
-    freeze = soft_reset(freeze, spike & (level == SR))
-    freeze = window_reset(freeze, spike & (level == WR), step, cfg.recovery_window)
-    freeze = full_reset(freeze, spike & (level >= FR))
     rr_request = spike & (level == RR)
-    # RR is terminal for the ladder: after requesting a rewalk the escalation
-    # restarts from CALM (prevents a rewind livelock under sustained spikes)
-    level = jnp.where(rr_request, CALM, level)
+    post_level = jnp.where(rr_request, CALM, level)
 
     # EMA update (only post-update so the spike itself doesn't pollute the
     # baseline immediately)
     a = cfg.entropy_ema_decay
     ema = jnp.where(rec.steps_seen == 0, ent, a * rec.ema_entropy + (1 - a) * ent)
-    new = RecoveryState(ema_entropy=ema, level=level, calm_steps=calm,
+    new = RecoveryState(ema_entropy=ema, level=post_level, calm_steps=calm,
                         steps_seen=rec.steps_seen + 1)
-    info = {"entropy": ent, "spike": spike, "level": level, "rr_request": rr_request}
+    info = {"entropy": ent, "spike": spike, "level": level,
+            "rr_request": rr_request}
+    return new, spike, level, info
+
+
+def recovery_update(
+    rec: RecoveryState,
+    freeze: FreezeState,            # stacked (L, B, S) or flat (B, S)
+    logits: jnp.ndarray,            # (B, V)
+    step: jnp.ndarray,
+    cfg: FreezeConfig,
+) -> Tuple[RecoveryState, FreezeState, dict]:
+    new, spike, level, info = _ladder_step(rec, logits, cfg)
+
+    # apply the ladder interventions for sequences spiking at each level
+    # (RR is terminal: after requesting a rewalk the escalation restarts
+    # from CALM, preventing a rewind livelock under sustained spikes)
+    freeze = soft_reset(freeze, spike & (level == SR))
+    freeze = window_reset(freeze, spike & (level == WR), step, cfg.recovery_window)
+    freeze = full_reset(freeze, spike & (level >= FR))
     return new, freeze, info
+
+
+# --------------------------------------------------------------------- #
+# Page-granular ladder (the paged engine's recovery path)
+# --------------------------------------------------------------------- #
+def page_recovery_update(
+    rec: RecoveryState,
+    freeze,                         # PageFreezeState, arrays (L, B, P)
+    page_table: jnp.ndarray,        # (L, B, P) global ids, -1 = unmapped
+    logits: jnp.ndarray,            # (B, V)
+    step: jnp.ndarray,              # (B,) per-lane decode clock
+    cfg: FreezeConfig,
+) -> Tuple[RecoveryState, "PageFreezeState", dict]:
+    """Entropy ladder over page-granular freeze state.  The in-step
+    interventions un-freeze *device-resident* pages (they re-enter
+    attention on the next step via the kernel's per-page visibility mask);
+    bringing *stashed* host pages home cannot happen inside a jitted step,
+    so FR additionally raises ``thaw_request`` and the serving engine asks
+    the host ``PagedController`` to thaw at the lane's next page-boundary
+    tick.  RR raises ``rr_request`` for the engine's page-aware rewind.
+
+    SR:  un-freeze resident pages with d > 1 (the long-frozen ones).
+    WR:  un-freeze resident pages frozen within ``recovery_window`` steps.
+    FR:  clear the lane's whole page-freeze state + request a host thaw.
+    RR:  FR + request a generation rewind (page-granular, engine-side).
+    """
+    new, spike, level, info = _ladder_step(rec, logits, cfg)
+    exists = page_table >= 0
+    sel = lambda cond: cond.reshape((1, -1, 1))            # (B,) -> (L,B,P)
+
+    # SR: thaw long-frozen resident pages
+    hit = sel(spike & (level == SR)) & exists & (freeze.d > 1)
+    # WR: thaw pages frozen in the recovery window (per-lane step clock)
+    step_b = jnp.asarray(step, jnp.int32).reshape(1, -1, 1)
+    recent = freeze.frozen_at > (step_b - cfg.recovery_window)
+    hit = hit | (sel(spike & (level == WR)) & exists & recent)
+    # FR / RR: clear everything resident for the lane
+    fr = sel(spike & (level >= FR))
+    hit = hit | (fr & exists)
+
+    freeze = freeze._replace(
+        c=jnp.where(fr, 0, freeze.c),
+        d=jnp.where(hit, 0, freeze.d),
+        frozen=freeze.frozen & ~hit,
+        frozen_at=jnp.where(hit, -1, freeze.frozen_at),
+    )
+    info["thaw_request"] = spike & (level >= FR)
+    return new, freeze, info
+
+
+def thaw_priority(c, frozen_at):
+    """Thaw-candidate score from the freeze counters the schedule already
+    tracks per page: pages flagged low-relevance the fewest times (small
+    ``c``) and frozen most recently (large ``frozen_at``) are most likely
+    to be asked for again, so they thaw first.  The same score, negated,
+    ranks eviction victims (coldest page out).  Works on scalars (host
+    controller) and arrays alike."""
+    return -1000.0 * c + frozen_at

@@ -35,18 +35,23 @@ def masked_decode_attention(q, k, v, active_mask, force_kernel: bool = False):
 
 @functools.partial(jax.jit, static_argnames=("force_kernel",))
 def paged_decode_attention(q, k_pages, v_pages, slot_mask, page_table=None,
-                           force_kernel: bool = False):
+                           page_visible=None, force_kernel: bool = False):
     """(out (B,H,hd), page_relevance (B,P)) — the PagedContinuousEngine
     decode hot path.  `page_table` (B,P) lets the kernel skip unmapped
-    slots before reading their mask; None derives it from slot_mask."""
+    slots before reading their mask; None derives it from slot_mask.
+    `page_visible` (B,P) is the recovery ladder's thaw-aware visibility
+    mask (``~frozen``): False pages are skipped like unmapped slots, and a
+    just-thawed page re-enters attention + relevance accounting through
+    it; None means every mapped page is visible."""
     if _on_tpu():
         return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
-                                             page_table)
+                                             page_table, page_visible)
     if force_kernel:
         return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
-                                             page_table, interpret=True)
+                                             page_table, page_visible,
+                                             interpret=True)
     return ref.paged_decode_attention_ref(q, k_pages, v_pages, slot_mask,
-                                          page_table)
+                                          page_table, page_visible)
 
 
 def freeze_state_update(state: FreezeState, relevance, pos, step,

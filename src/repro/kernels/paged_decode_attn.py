@@ -1,14 +1,18 @@
 """Pallas TPU kernel: paged flash-decode attention over the bounded active
 page pool — the serving hot path of the PagedContinuousEngine.
 
-Grid walks (batch, physical page); each lane's page table arrives via scalar
-prefetch (SMEM), so the kernel knows *before* touching VMEM whether the
-(lane, slot) it was scheduled on is mapped.  Unmapped slots (page_table < 0)
-and pages whose slot mask is empty (fully frozen awaiting host swap-out)
-skip their MXU work entirely under `pl.when` — mirroring
-`freeze_decode_attn`'s block skip, but page-granular and per lane.  The
-page-mean |Q.K| relevance is emitted fused, feeding the page-granular
-freeze schedule (core.paging.page_freeze_update).
+Grid walks (batch, physical page); each lane's page table AND per-page
+visibility mask arrive via scalar prefetch (SMEM), so the kernel knows
+*before* touching VMEM whether the (lane, slot) it was scheduled on is
+mapped and attendable.  Unmapped slots (page_table < 0), invisible pages
+(frozen and not thawed by the recovery ladder — page_visible == 0) and
+pages whose slot mask is empty skip their MXU work entirely under
+`pl.when` — mirroring `freeze_decode_attn`'s block skip, but page-granular
+and per lane.  The page-mean |Q.K| relevance is emitted fused, feeding the
+page-granular freeze schedule (core.paging.page_freeze_update); a page the
+entropy ladder just thawed re-enters both the softmax and the relevance
+accounting through the same mask, so the freeze schedule immediately sees
+fresh scores for it.
 
 On real TPU the page pool lives in HBM while the frozen store is in host
 memory; the kernel only ever touches the device pool — the bounded-memory
@@ -30,6 +34,7 @@ NEG_INF = -1e30
 
 
 def _kernel(pt_ref,                       # SMEM scalar prefetch: (B, P) i32
+            vis_ref,                      # SMEM scalar prefetch: (B, P) i32
             q_ref, k_ref, v_ref, mask_ref,
             o_ref, rel_ref,
             m_ref, l_ref, acc_ref,
@@ -46,11 +51,12 @@ def _kernel(pt_ref,                       # SMEM scalar prefetch: (B, P) i32
 
     q = q_ref[0].astype(jnp.float32)               # (H, hd)
     mapped = pt_ref[b, blk] >= 0                   # per-lane page table
-    mask = (mask_ref[0, 0] != 0) & mapped          # (page,)
+    visible = vis_ref[b, blk] != 0                 # thaw-aware page mask
+    mask = (mask_ref[0, 0] != 0) & mapped & visible    # (page,)
     H, hd = q.shape
     G = H // kv_heads
     n_act = jnp.sum(mask.astype(jnp.float32))
-    live = mapped & (n_act > 0)
+    live = mapped & visible & (n_act > 0)
 
     @pl.when(live)
     def _page():
@@ -75,7 +81,8 @@ def _kernel(pt_ref,                       # SMEM scalar prefetch: (B, P) i32
 
     @pl.when(~live)
     def _skip():
-        # unmapped slot or fully-frozen page: no MXU work, relevance 0
+        # unmapped slot, invisible (frozen, un-thawed) page, or empty slot
+        # mask: no MXU work, relevance 0
         rel_ref[0, 0] = jnp.zeros((), rel_ref.dtype)
 
     @pl.when(blk == nblk - 1)
@@ -92,20 +99,28 @@ def paged_decode_attention_kernel(
     v_pages: jnp.ndarray,
     slot_mask: jnp.ndarray,   # (B, P, page) bool
     page_table: Optional[jnp.ndarray] = None,   # (B, P) i32; < 0 = unmapped
+    page_visible: Optional[jnp.ndarray] = None, # (B, P) bool; False = frozen
     *,
     interpret: bool = False,
 ):
-    """Returns (out (B, H, hd), page_relevance (B, P) f32)."""
+    """Returns (out (B, H, hd), page_relevance (B, P) f32).
+
+    ``page_visible`` is the recovery ladder's thaw-aware mask (``~frozen``
+    after in-step un-freezing): False pages skip their MXU work exactly
+    like unmapped slots.  None means all mapped pages are visible.
+    """
     B, H, hd = q.shape
     _, P, page, KVH, _ = k_pages.shape
     scale = 1.0 / math.sqrt(hd)
     grid = (B, P)
     if page_table is None:   # derive: a slot with any valid token is mapped
         page_table = jnp.where(jnp.any(slot_mask, -1), 0, -1).astype(jnp.int32)
+    if page_visible is None:
+        page_visible = jnp.ones((B, P), jnp.int32)
 
-    # index maps receive the scalar-prefetch ref as a trailing argument
+    # index maps receive the scalar-prefetch refs as trailing arguments
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, H, hd), lambda b, p, *_: (b, 0, 0)),
@@ -132,5 +147,6 @@ def paged_decode_attention_kernel(
         ],
         interpret=interpret,
     )(jnp.asarray(page_table, jnp.int32),
+      jnp.asarray(page_visible, jnp.int32),
       q, k_pages, v_pages, slot_mask.astype(jnp.int8))
     return out, rel

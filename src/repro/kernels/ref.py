@@ -25,10 +25,13 @@ def freeze_decode_attention_ref(q, k, v, active_mask):
 
 
 def paged_decode_attention_ref(q, k_pages, v_pages, slot_mask,
-                               page_table=None):
+                               page_table=None, page_visible=None):
     """Oracle for kernels.paged_decode_attn — (out, page_relevance).
-    Unmapped page-table slots (< 0) are excluded like empty pages."""
-    return _paged_ref(q, k_pages, v_pages, slot_mask, page_table)
+    Unmapped page-table slots (< 0) and invisible pages (page_visible
+    False — frozen and not thawed by the recovery ladder) are excluded
+    like empty pages."""
+    return _paged_ref(q, k_pages, v_pages, slot_mask, page_table,
+                      page_visible)
 
 
 def relevance_freeze_ref(state: FreezeState, relevance, pos, step,

@@ -1,5 +1,15 @@
-"""Serving launcher: run the ASR-KF-EGR continuous-batching engine for any
---arch config.
+"""Serving launcher: drive any --arch config through one of the three
+serving paths (see docs/serving.md for the architecture):
+
+* default — ``ContinuousEngine``: continuous batching with per-lane
+  admission/retirement over a dense (n_lanes, max_seq) KV cache.
+* ``--paged`` — ``PagedContinuousEngine``: bounded-HBM decode over a
+  per-lane active page pool (``--pages``) with chunked prefill
+  (``--prefill-chunk``) and host page swapping; with ``--recovery`` the
+  entropy ladder also thaws stashed pages and performs page-granular
+  Rewalk rewinds (docs/recovery.md).
+* ``--static`` — the pre-continuous-batching fixed-batch FIFO baseline
+  (head-of-line blocking: every lane runs for the batch max n_tokens).
 
 CPU/demo scale runs the tiny variant end-to-end; on a TPU slice the same
 driver binds the production mesh (launch/mesh.py) and the jitted steps carry
@@ -7,10 +17,7 @@ the in/out shardings from launch/specs.py.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --tiny \
         --requests 8 --tokens 128
-
-``--static`` serves the same trace through the original fixed-batch FIFO
-path for comparison (head-of-line blocking: every lane runs for the
-batch max n_tokens).
+    PYTHONPATH=src python -m repro.launch.serve --tiny --paged --recovery
 """
 from __future__ import annotations
 
@@ -49,6 +56,13 @@ def main():
     ap.add_argument("--pages", type=int, default=8,
                     help="device-resident pages per lane (--paged)")
     ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--recovery", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="entropy-guided recovery: the escalation ladder "
+                         "(SR/WR/FR/RR) un-freezes KV on entropy spikes; "
+                         "on --paged this includes host thaws of stashed "
+                         "pages and page-granular rewinds "
+                         "(--no-recovery = freeze-timer expiry only)")
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
@@ -59,6 +73,8 @@ def main():
         cfg = dataclasses.replace(cfg, freeze=dataclasses.replace(
             cfg.freeze, tau_mode="quantile", quantile=args.quantile_tau,
             window=16, k_soft=1.0, entropy_abs_threshold=1e9))
+    cfg = dataclasses.replace(cfg, freeze=dataclasses.replace(
+        cfg.freeze, recovery_enabled=args.recovery))
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     mode = "static" if args.static else \
@@ -103,7 +119,11 @@ def main():
             print(f"device KV pool: {eng.kv_device_bytes} bytes "
                   f"(peak {eng.peak_kv_bytes} incl. prefill scratch)  "
                   f"page swaps: {eng.ctl.n_swap_out} out / "
-                  f"{eng.ctl.n_swap_in} in")
+                  f"{eng.ctl.n_swap_in} in / {eng.ctl.n_thaw} thawed")
+        if args.recovery:
+            rewinds = sum(r.telemetry.rewinds for r in sched.done.values()
+                          if r.telemetry is not None)
+            print(f"recovery: {rewinds} rewalk rewinds")
 
 
 if __name__ == "__main__":

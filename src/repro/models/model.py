@@ -93,3 +93,10 @@ def decode_step_paged(params, cfg: ModelConfig, token, pos, step, tail_slot,
 def reset_paged_lane(cfg: ModelConfig, state, lane):
     """Unmap one lane of a paged decode state (retirement)."""
     return T.reset_paged_lane(state, lane)
+
+
+def rewind_paged_lane(cfg: ModelConfig, state, lane, new_pos, page: int):
+    """Page-aware Rewalk rewind for one lane: invalidate KV slots at
+    positions >= new_pos, unmap wholly-invalid pages, un-freeze the
+    surviving tail page (entropy-guided recovery level RR)."""
+    return T.rewind_paged_lane(state, lane, new_pos, page)

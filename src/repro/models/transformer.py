@@ -27,7 +27,8 @@ from repro.core.freeze import FreezeState, freeze_update, init_freeze_state
 from repro.core.paging import (PageFreezeState, page_freeze_update,
                                write_tail)
 from repro.kernels import ops as OPS
-from repro.core.recovery import RecoveryState, recovery_update
+from repro.core.recovery import (RecoveryState, page_recovery_update,
+                                 recovery_update)
 from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import moe as MOE
@@ -642,6 +643,49 @@ def reset_paged_lane(state: PagedDecodeState, lane) -> PagedDecodeState:
     )
 
 
+def rewind_paged_lane(state: PagedDecodeState, lane, new_pos,
+                      page: int) -> PagedDecodeState:
+    """Page-aware Rewalk Regeneration rewind for ONE lane: tokens at
+    positions >= ``new_pos`` are discarded, so their KV slots must become
+    invisible and writable again.
+
+    * Slots holding positions >= new_pos have their slot-mask bits cleared
+      (regenerated tokens overwrite them in place).
+    * Pages that become wholly invalid (``gid * page >= new_pos`` — every
+      slot past the rewind point) are unmapped; when the rewind lands
+      exactly on a page boundary this includes the new tail page itself,
+      and the next step's page-boundary maintenance re-allocates it.
+    * The surviving tail page (``gid == new_pos // page`` when the rewind
+      lands mid-page) is un-frozen with its timer cleared — regeneration
+      must attend and append to it immediately.
+
+    The host side (``PagedController.ensure_resident`` + tail-slot fixup)
+    runs in the serving engine; ``page`` is static (``fcfg.page_size``).
+    """
+    B = state.page_table.shape[1]
+    sel = (jnp.arange(B) == jnp.asarray(lane)).reshape(1, -1, 1)   # (1,B,1)
+    new_pos = jnp.asarray(new_pos, jnp.int32)
+    pt = state.page_table
+    mapped = pt >= 0
+    # global position of every (page, offset) slot
+    gpos = pt[..., None] * page + jnp.arange(page)                 # (L,B,P,pg)
+    keep = gpos < new_pos
+    slot_mask = jnp.where(sel[..., None] & mapped[..., None],
+                          state.slot_mask & keep, state.slot_mask)
+    dead = sel & mapped & (pt * page >= new_pos)
+    pt_new = jnp.where(dead, -1, pt)
+    slot_mask = slot_mask & ~dead[..., None]
+    tail_hit = sel & (pt_new == new_pos // page)
+    fz = state.freeze
+    fz = PageFreezeState(
+        c=jnp.where(dead, 0, fz.c),
+        d=jnp.where(dead | tail_hit, 0, fz.d),
+        frozen=fz.frozen & ~(dead | tail_hit),
+        frozen_at=jnp.where(dead | tail_hit, -1, fz.frozen_at),
+    )
+    return state._replace(page_table=pt_new, slot_mask=slot_mask, freeze=fz)
+
+
 def lm_decode_step_paged(
     params, cfg: ModelConfig,
     token: jnp.ndarray,           # (B,)
@@ -723,12 +767,14 @@ def lm_decode_step_paged(
                                         xs_u["tail_slot"][ia], tail_off,
                                         live=live)
                 fz = PageFreezeState(*(a[ia] for a in xs_u["freeze"]))
-                att_mask = sm & ~fz.frozen[..., None]
                 # kernels.ops dispatch: Pallas paged kernel on TPU (unmapped
-                # / frozen pages skipped via the prefetched page table),
-                # pure-jnp reference elsewhere
+                # slots and invisible pages skipped via the two prefetched
+                # per-lane tables), pure-jnp reference elsewhere.  The
+                # visibility mask is thaw-aware: a page the recovery ladder
+                # un-froze last step re-enters attention AND relevance
+                # accounting here.
                 o, prel = OPS.paged_decode_attention(
-                    q, kp, vp, att_mask, xs_u["page_table"][ia])
+                    q, kp, vp, sm, xs_u["page_table"][ia], ~fz.frozen)
                 if cfg.decode_act_gather:
                     o = L.dag(o, cfg, ".m.")
                 x = x + L.dag(L.attention_out(lp["attn"], o), cfg, ".f") \
@@ -785,6 +831,16 @@ def lm_decode_step_paged(
     x = L.rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
     logits = unembed(params, cfg, x)
     info: Dict[str, jnp.ndarray] = {"n_frozen_pages": nfro}
+    # ---- entropy-guided recovery over the stacked page-freeze state ---- #
+    # (in-step interventions un-freeze resident pages; thaw_request /
+    # rr_request ask the host for stashed-page thaws and page-aware
+    # rewinds — see core/recovery.py and serving/engine.py)
+    if enable_freeze and attn_layer_count(cfg) and fcfg.recovery_enabled:
+        rec, pfz, rinfo = page_recovery_update(
+            new_state.recovery, new_state.freeze, new_state.page_table,
+            logits, step, fcfg)
+        new_state = new_state._replace(recovery=rec, freeze=pfz)
+        info.update(rinfo)
     if attn_layer_count(cfg):
         exists = new_state.page_table >= 0                 # (L, B, P)
         frozen = new_state.freeze.frozen & exists

@@ -1,26 +1,36 @@
 """ASR-KF-EGR serving engines.
 
-Two generation drivers share the jitted prefill / decode-step cores:
+Three generation drivers share the jitted prefill / decode-step cores:
 
 * ``Engine`` — static one-shot batched generation: every lane starts
   together and runs for the same number of steps (benchmark arms, examples,
   the paper's Table 1 protocol).
 
-* ``ContinuousEngine`` — the production path: a jitted per-step core with
-  **per-lane** ``pos`` / ``step`` vectors plus a host-side lane manager.
-  Lanes admit a new request the moment their current one retires —
-  mid-generation, without draining the batch — via a per-lane
-  prefill-into-slot (``model.write_lane_state``).  Admission overwrites the
-  lane's KV / freeze / recovery state wholesale, so no freeze counters or
-  entropy baselines leak between requests sharing a lane.
+* ``ContinuousEngine`` — continuous batching over a dense per-lane cache:
+  a jitted per-step core with **per-lane** ``pos`` / ``step`` vectors plus
+  a host-side lane manager.  Lanes admit a new request the moment their
+  current one retires — mid-generation, without draining the batch — via a
+  per-lane prefill-into-slot (``model.write_lane_state``).  Admission
+  overwrites the lane's KV / freeze / recovery state wholesale, so no
+  freeze counters or entropy baselines leak between requests sharing a
+  lane.
 
-Host-side responsibilities beyond the jitted step (both drivers):
-  * page-batched host offload of fully-frozen KV pages (the paper's
-    "frozen storage F" — cache.HostOffloadController, bookkeeping keyed
-    per (layer, lane, page) so lane reuse can drop exactly its own pages)
+* ``PagedContinuousEngine`` — the bounded-HBM production path: decode
+  attends only each lane's O(P * page) device page pool, long prompts
+  prefill in chunks interleaved with resident decode, frozen/overflow
+  pages live in the host store, and entropy-guided recovery runs
+  page-granular (stashed-page thaws + page-aware rewinds).
+
+Host-side responsibilities beyond the jitted step (all drivers):
+  * host residency of fully-frozen KV (the paper's "frozen storage F"):
+    page-batched offload on the dense paths (cache.HostOffloadController)
+    and per-page swap/stash/thaw on the paged path
+    (core.paging.PagedController) — bookkeeping keyed per (layer, lane,
+    page) so lane reuse can drop exactly its own pages
   * Rewalk Regeneration (recovery level 4): rewind ``rewalk_tokens``,
     clear freeze state (FR already applied in-step), re-decode — history,
-    rewind budget and cooldown are tracked per lane
+    rewind budget and cooldown are tracked per lane; the paged path also
+    invalidates the rewound KV slots / pages on device
   * telemetry: active/frozen KV trajectory (paper Fig. 1), compression
     ratio (Table 1), entropy/recovery events — one append per lane-step
 """
@@ -155,7 +165,11 @@ class Engine:
                 pos -= nback
                 res.rewinds += 1
                 last_rewind_step = step
-                tok = history[-1][0] if history else tok
+                # the input at the rewind point: the last surviving history
+                # entry, or the prefill-sampled first token when the rewind
+                # consumed the whole history (out_tokens[0] survives)
+                tok = history[-1][0] if history \
+                    else jnp.asarray(out_tokens[-1])
                 step += 1
                 res.offloaded_tokens.append(
                     offloader.offloaded_tokens if offloader else 0)
@@ -284,6 +298,25 @@ class _LaneEngineBase:
         toks = np.full((1, sp), self.pad_id, np.int32)
         toks[0, sp - len(prompt):] = prompt
         return toks
+
+    def _rewind_bookkeeping(self, lane: int) -> None:
+        """Shared RR host bookkeeping: truncate the rolled-back tokens,
+        charge the lane's rewind budget/cooldown, and restore the input
+        token at the rewind point — the last surviving history entry, or
+        the admission-time first token (``generated[0]`` survives the
+        truncation) when the rewind consumed the whole history.  The
+        contiguous and paged engines must stay semantically identical
+        here — the paged-vs-contiguous parity test depends on it."""
+        l = self.lanes[lane]
+        nback = self.fcfg.rewalk_tokens
+        del l.history[-nback:]
+        del l.generated[-nback:]
+        self.pos[lane] -= nback
+        l.rewinds += 1
+        l.last_rewind_step = int(self.step[lane])
+        l.request.telemetry.rewinds += 1
+        self.tok[lane] = l.history[-1][0] if l.history else l.generated[-1]
+        self.step[lane] += 1
 
 
 class ContinuousEngine(_LaneEngineBase):
@@ -449,16 +482,7 @@ class ContinuousEngine(_LaneEngineBase):
                         and l.rewinds < self.max_rewinds \
                         and int(self.step[i]) - l.last_rewind_step \
                             >= self.rewind_cooldown:
-                    nback = self.fcfg.rewalk_tokens
-                    del l.history[-nback:]
-                    del l.generated[-nback:]
-                    self.pos[i] -= nback
-                    l.rewinds += 1
-                    l.last_rewind_step = int(self.step[i])
-                    l.request.telemetry.rewinds += 1
-                    if l.history:
-                        self.tok[i] = l.history[-1][0]
-                    self.step[i] += 1
+                    self._rewind_bookkeeping(i)
                     rewound.add(i)
 
         # ---- page-batched host offload ----
@@ -555,8 +579,26 @@ class PagedContinuousEngine(_LaneEngineBase):
 
     Restricted to attention-only decoder stacks (chunked prefill would
     need cross-chunk recurrent-state threading for mamba/rwkv hybrids).
-    Entropy-guided recovery runs lane-local in the contiguous engine only;
-    the paged path relies on freeze-timer expiry for restoration.
+
+    **Entropy-guided recovery** (when ``freeze_cfg.recovery_enabled``) runs
+    page-granular: the jitted step's ladder (``core.recovery.
+    page_recovery_update``) un-freezes *resident* pages in place — they
+    re-enter attention through the kernel's per-page visibility mask — and
+    raises two host requests the step itself cannot service:
+
+    * ``thaw_request`` (FR level): the lane's stashed host pages are due
+      back early.  The engine marks the lane and the ``PagedController``
+      thaws at its next page-boundary tick — stashed pages are ranked by
+      ``recovery.thaw_priority`` and remapped into free slots, evicting
+      the coldest resident page (stashed in turn) once the pool is full.
+    * ``rr_request`` (RR level): page-aware Rewalk rewind.  The host
+      rewinds ``rewalk_tokens``, invalidates the rewound KV slots on
+      device (``model.rewind_paged_lane`` — wholly-rewound pages unmap;
+      a rewind landing exactly on a page boundary leaves tail allocation
+      to the next boundary tick), makes sure the surviving tail page is
+      resident/un-frozen (``PagedController.ensure_resident``), and
+      replays from the rewind point.  Budget and cooldown are per lane,
+      mirroring ``ContinuousEngine``.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
@@ -564,6 +606,8 @@ class PagedContinuousEngine(_LaneEngineBase):
                  freeze_cfg: Optional[FreezeConfig] = None,
                  enable_freeze: bool = True,
                  prefill_chunk: int = 64,
+                 max_rewinds: int = 4,
+                 rewind_cooldown: int = 32,
                  pad_id: int = 0,
                  seed: int = 0,
                  min_prompt_bucket: int = 8):
@@ -576,9 +620,15 @@ class PagedContinuousEngine(_LaneEngineBase):
         self.P = max_active_pages
         self.page = self.fcfg.page_size
         self.prefill_chunk = prefill_chunk
+        self.max_rewinds = max_rewinds
+        self.rewind_cooldown = rewind_cooldown
+        self.pending_thaws: set = set()   # lanes owed a host thaw (FR level)
         self._step = jax.jit(functools.partial(
             MD.decode_step_paged, cfg=cfg, freeze_cfg=self.fcfg,
             enable_freeze=enable_freeze), donate_argnames=("state",))
+        self._rewind = jax.jit(
+            functools.partial(MD.rewind_paged_lane, cfg, page=self.page),
+            donate_argnames=("state",))
         self._chunk = jax.jit(functools.partial(MD.prefill_chunk, cfg=cfg),
                               donate_argnames=("state",))
         self._reset_lane = jax.jit(functools.partial(MD.reset_paged_lane, cfg),
@@ -677,6 +727,9 @@ class PagedContinuousEngine(_LaneEngineBase):
             scratch=MD.init_decode_state(self.cfg, 1, sp), sp=sp)
         l.request = req
         l.generated = []
+        l.history = []
+        l.rewinds = 0
+        l.last_rewind_step = -10**9
         req.telemetry = GenerationResult([], [], [], [], [], [], [])
         self.events.append({"event": "admit_start", "uid": req.uid,
                             "lane": lane, "wall_step": self.wall_step,
@@ -750,6 +803,12 @@ class PagedContinuousEngine(_LaneEngineBase):
         `PagedController.write_lane` wholesale-resets exactly this lane."""
         pp = self.prefills.pop(lane)
         sp, page, P, L = pp.sp, self.page, self.P, self.L_attn
+        # wholesale lane reset first: beyond the pool fields the push below
+        # overwrites, this clears the lane's recovery ladder — the decode
+        # steps that ran while this admission was in flight advanced the
+        # lane's entropy baseline on garbage logits, which must not leak
+        # into the new occupant
+        self.state = self._reset_lane(state=self.state, lane=jnp.int32(lane))
         ck = np.array(pp.scratch.cache_k[:, 0])      # (L, sp, KVH, hd)
         cv = np.array(pp.scratch.cache_v[:, 0])
         n_pages = -(-sp // page)
@@ -802,10 +861,20 @@ class PagedContinuousEngine(_LaneEngineBase):
                             "lane": lane, "wall_step": self.wall_step})
 
     # ---------------- stepping ---------------- #
+    def _keep_gids(self, lane: int) -> Tuple[int, ...]:
+        """Global page ids the host must never evict for this lane: the
+        tail page plus the freeze window (the jitted step would just
+        re-write / re-attend them)."""
+        cp = int(self.pos[lane]) // self.page
+        window_pages = max(1, -(-self.fcfg.window // self.page))
+        return tuple(range(max(0, cp - window_pages), cp + 1))
+
     def step_once(self) -> List[Request]:
-        """One engine step: a jitted paged decode step over the resident
-        lanes (with per-lane page-boundary maintenance), then one prefill
-        chunk for every admission in flight.  Returns retired requests."""
+        """One engine step: per-lane page-boundary maintenance (host swap
+        tick, pending recovery thaws, tail allocation), a jitted paged
+        decode step over the resident lanes, recovery servicing (page
+        rewinds), then one prefill chunk for every admission in flight.
+        Returns retired requests."""
         decode_lanes = [i for i, l in enumerate(self.lanes)
                         if l.request is not None and i not in self.prefills]
         finished: List[Request] = []
@@ -813,11 +882,26 @@ class PagedContinuousEngine(_LaneEngineBase):
             boundary = [i for i in decode_lanes if self.pos[i] % self.page == 0]
             if boundary:
                 pool, fstate = self._pull_lanes(boundary)
+                keep = {bi: self._keep_gids(i)
+                        for bi, i in enumerate(boundary)}
+                thaw = tuple(bi for bi, i in enumerate(boundary)
+                             if i in self.pending_thaws)
                 self.ctl.tick(pool, fstate, step=self.wall_step,
-                              lane_ids=tuple(boundary))
+                              lane_ids=tuple(boundary),
+                              thaw_lanes=thaw, keep_gids=keep)
+                self.pending_thaws -= set(boundary)
                 for bi, i in enumerate(boundary):
                     slots = self.ctl.alloc_tail_lane(
                         pool, bi, int(self.pos[i]) // self.page)
+                    if slots is None and self.enable_freeze:
+                        # recovery may have un-frozen every page the timer
+                        # pass would have swapped out; the host is the
+                        # bound's enforcer of last resort — stash the
+                        # coldest page and retry
+                        self.ctl.force_free_slot(pool, fstate, bi, i,
+                                                 keep_gids=keep[bi])
+                        slots = self.ctl.alloc_tail_lane(
+                            pool, bi, int(self.pos[i]) // self.page)
                     if slots is None:
                         raise RuntimeError(
                             f"lane {i}: page pool exhausted"
@@ -837,12 +921,16 @@ class PagedContinuousEngine(_LaneEngineBase):
                 live=jnp.asarray(live))
             self.wall_step += 1
             self.key, sub = jax.random.split(self.key)
-            keys = ("n_active_slots_lane", "n_frozen_pages_lane")
+            keys = ("n_active_slots_lane", "n_frozen_pages_lane", "entropy",
+                    "spike", "level", "rr_request", "thaw_request")
             host = jax.device_get(dict(
                 {k: info[k] for k in keys if k in info},
                 toks=self._sample(logits, sub, *self._lane_params())))
             toks = host["toks"]
-            act, fro = (host.get(k) for k in keys)
+            get = host.get
+            act, fro = get("n_active_slots_lane"), get("n_frozen_pages_lane")
+            entropy, spike, level = get("entropy"), get("spike"), get("level")
+            rr, thaw_req = get("rr_request"), get("thaw_request")
 
             for i in decode_lanes:
                 res = self.lanes[i].request.telemetry
@@ -855,10 +943,39 @@ class PagedContinuousEngine(_LaneEngineBase):
                     res.frozen_kv.append(0.0)
                 res.total_kv.append(int(self.pos[i]) + 1)
                 res.offloaded_tokens.append(self._offloaded_tokens_lane(i))
+                if entropy is not None:
+                    res.entropy.append(float(entropy[i]))
+                    if spike is not None and bool(spike[i]):
+                        res.recovery_events.append({
+                            "step": int(self.step[i]),
+                            "level": int(level[i]),
+                            "entropy": float(entropy[i]),
+                        })
+
+            # ---- recovery servicing: host thaws + page-aware rewinds ----
+            if thaw_req is not None:
+                for i in decode_lanes:
+                    if bool(thaw_req[i]):
+                        # serviced by PagedController.thaw_lane at the
+                        # lane's next page-boundary tick
+                        self.pending_thaws.add(i)
+            rewound = set()
+            if rr is not None:
+                for i in decode_lanes:
+                    l = self.lanes[i]
+                    if bool(rr[i]) and len(l.history) >= self.fcfg.rewalk_tokens \
+                            and l.rewinds < self.max_rewinds \
+                            and int(self.step[i]) - l.last_rewind_step \
+                                >= self.rewind_cooldown \
+                            and self._rewind_lane(i):
+                        rewound.add(i)
 
             for i in decode_lanes:
+                if i in rewound:
+                    continue
                 l = self.lanes[i]
                 t = int(toks[i])
+                l.history.append((t, int(self.pos[i])))
                 l.generated.append(t)
                 self.tok[i] = t
                 self.pos[i] += 1
@@ -871,6 +988,49 @@ class PagedContinuousEngine(_LaneEngineBase):
             self._prefill_tick(lane, busy=bool(decode_lanes))
         return finished
 
+    def _rewind_lane(self, lane: int) -> bool:
+        """Rewalk Regeneration on the paged path: rewind ``rewalk_tokens``,
+        invalidate the rewound KV slots on device, and make the surviving
+        tail page attendable again.  Pages wholly past the rewind point
+        unmap (a boundary-landing rewind leaves tail re-allocation to the
+        next page-boundary tick) and their stale host copies are dropped —
+        the replayed pages must never collide with a stashed copy of the
+        rewound generation.  Returns False (rewind skipped, nothing
+        mutated) if the tail page cannot be made resident."""
+        l = self.lanes[lane]
+        nback = self.fcfg.rewalk_tokens
+        new_pos = int(self.pos[lane]) - nback
+        if new_pos <= 0:
+            return False
+        gid_t = new_pos // self.page
+        window_pages = max(1, -(-self.fcfg.window // self.page))
+        keep = tuple(range(max(0, gid_t - window_pages), gid_t + 1))
+        if new_pos % self.page:
+            # mid-page landing: the tail page must be resident + un-frozen
+            # in every layer before decode resumes (it may have been
+            # frozen or even stashed if the freeze window is one page)
+            pool, fstate = self._pull_lanes([lane])
+            ok = self.ctl.ensure_resident(pool, fstate, 0, lane, gid_t,
+                                          keep_gids=keep)
+            # push back even on failure: a partial layer's thaw/eviction
+            # mutated both the pulled copies and the controller's host
+            # bookkeeping, and dropping the copies would desynchronize
+            # them (duplicate swap-ins / unreachable host pages)
+            self._push_lanes(pool, fstate, [lane])
+            if not ok:
+                return False
+            for lyr in range(self.L_attn):
+                slot = np.nonzero(pool["page_table"][lyr, 0] == gid_t)[0]
+                self.tail_slot[lyr, lane] = int(slot[0])
+        self.state = self._rewind(state=self.state, lane=jnp.int32(lane),
+                                  new_pos=jnp.int32(new_pos))
+        self.ctl.drop_pages_from(lane, -(-new_pos // self.page))
+        self._rewind_bookkeeping(lane)
+        self.events.append({"event": "rewind", "uid": l.request.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "new_pos": new_pos})
+        return True
+
     def _retire(self, lane: int) -> Request:
         l = self.lanes[lane]
         req = l.request
@@ -880,9 +1040,12 @@ class PagedContinuousEngine(_LaneEngineBase):
                             "wall_step": self.wall_step})
         l.request = None
         l.generated = []
-        # unmap the lane's pages on device (attention skips them) and drop
-        # its host store so nothing leaks into the lane's next occupant
+        l.history = []
+        # unmap the lane's pages on device (attention skips them), drop its
+        # host store and any pending thaw so nothing leaks into the lane's
+        # next occupant
         self.state = self._reset_lane(state=self.state, lane=jnp.int32(lane))
         self.ctl.drop_lane(lane)
+        self.pending_thaws.discard(lane)
         self._set_lane_sampling(lane, SamplingParams.greedy())
         return req

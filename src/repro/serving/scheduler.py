@@ -5,11 +5,15 @@
 lane the moment that lane retires — mid-generation — so short requests
 never wait for a long co-batched one (no head-of-line blocking).  All
 batching mechanics (per-lane prefill — whole-prompt or chunked — freeze
-state reset, retirement) live in the engine.
+state reset, entropy-guided recovery servicing, retirement) live in the
+engine; the scheduler only sees lanes becoming free.  A recovery rewind
+keeps its lane busy longer (the request replays ``rewalk_tokens``), which
+to the scheduler is indistinguishable from a longer generation.
 
-``StaticScheduler`` keeps the original fixed-batch FIFO behaviour — pad a
-batch, run everyone for max(n_tokens) steps, only then admit more — as the
-comparison baseline for ``benchmarks/continuous_batching.py``.
+``StaticScheduler`` keeps the pre-continuous-batching (pre-PR-1)
+fixed-batch FIFO behaviour — pad a batch, run everyone for max(n_tokens)
+steps, only then admit more — as the comparison baseline for
+``benchmarks/continuous_batching.py``.
 """
 from __future__ import annotations
 

@@ -119,6 +119,46 @@ def test_paged_decode_attn_unmapped_page_skip(B, P, page, H, KVH, hd):
     np.testing.assert_array_equal(np.asarray(rel_d), 0.0)
 
 
+@pytest.mark.parametrize("B,P,page,H,KVH,hd", [
+    (1, 4, 128, 8, 8, 64),
+    (2, 6, 64, 8, 2, 64),
+    (3, 5, 32, 16, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attn_page_visible(B, P, page, H, KVH, hd, dtype):
+    """The per-page visibility mask (the recovery ladder's thaw-aware
+    ~frozen) must gate attention AND relevance exactly like zeroing the
+    page's slot mask: invisible pages contribute nothing and report
+    relevance 0; flipping a page back to visible (a thaw) restores it."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (B, P, page, KVH, hd), dtype)
+    vp = jax.random.normal(ks[2], (B, P, page, KVH, hd), dtype)
+    sm = jnp.ones((B, P, page), bool)
+    pt = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    vis = jax.random.bernoulli(ks[3], 0.5, (B, P)).at[:, 0].set(True)
+    out_k, rel_k = paged_decode_attention_kernel(q, kp, vp, sm, pt, vis,
+                                                 interpret=True)
+    out_r, rel_r = ref.paged_decode_attention_ref(q, kp, vp, sm, pt, vis)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), **TOLS[dtype])
+    np.testing.assert_allclose(np.asarray(rel_k), np.asarray(rel_r),
+                               **TOLS[dtype])
+    np.testing.assert_array_equal(np.asarray(rel_k)[~np.asarray(vis)], 0.0)
+    # invisible == mask-dead: hand-fold the visibility into the slot mask
+    out_m, rel_m = ref.paged_decode_attention_ref(
+        q, kp, vp, sm & vis[..., None], pt)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_m, np.float32), **TOLS[dtype])
+    # thaw: all-visible equals no mask at all
+    out_t, rel_t = paged_decode_attention_kernel(
+        q, kp, vp, sm, pt, jnp.ones((B, P), bool), interpret=True)
+    out_n, rel_n = paged_decode_attention_kernel(q, kp, vp, sm, pt,
+                                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_n))
+    np.testing.assert_array_equal(np.asarray(rel_t), np.asarray(rel_n))
+
+
 @pytest.mark.parametrize("B,S,blk", [(1, 256, 64), (2, 1024, 256), (4, 512, 512)])
 @pytest.mark.parametrize("window,ksoft,history", [(8, 2.0, 10**6), (4, 1.0, 64)])
 def test_relevance_freeze_sweep(B, S, blk, window, ksoft, history):

@@ -9,7 +9,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as MD
-from repro.serving.engine import ContinuousEngine, PagedContinuousEngine
+from repro.serving.engine import (ContinuousEngine, PagedContinuousEngine,
+                                  Request)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler
 
@@ -151,6 +152,189 @@ class TestChunkedPrefill:
                        SamplingParams.greedy())
         s.run()
         assert s.done[uid].result.shape == (6,)
+
+
+class TestRecovery:
+    """Entropy-guided recovery on the paged path: parity with the
+    contiguous oracle, page-granular rewinds, and host thaw servicing."""
+
+    def test_recovery_token_parity_with_contiguous_oracle(self, tiny_f32):
+        """With freezing never firing (fixed tau = 0) but sustained entropy
+        spikes, both engines run the identical recovery ladder — including
+        RR rewinds, which on the paged path exercise the device-side slot
+        invalidation and replay.  Token streams must be identical to the
+        contiguous engine (the oracle), and rewinds must actually happen
+        or the test is vacuous."""
+        cfg, params = tiny_f32
+        fc = dataclasses.replace(cfg.freeze, tau_mode="fixed", tau=0.0,
+                                 recovery_enabled=True,
+                                 entropy_abs_threshold=0.5, rewalk_tokens=4)
+        cfg = dataclasses.replace(cfg, freeze=fc)
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(0, cfg.vocab_size, size=n)
+                   for n in (16, 10, 16, 7)]
+        n_toks = [14, 10, 12, 9]
+
+        def run(paged):
+            if paged:
+                eng = PagedContinuousEngine(
+                    cfg, params, max_seq=96, n_lanes=2, max_active_pages=10,
+                    prefill_chunk=8, rewind_cooldown=8)
+            else:
+                eng = ContinuousEngine(cfg, params, max_seq=96, n_lanes=2,
+                                       offload=False, rewind_cooldown=8)
+            s = Scheduler(eng)
+            uids = [s.submit(p, n, SamplingParams.greedy())
+                    for p, n in zip(prompts, n_toks)]
+            s.run()
+            rewinds = sum(s.done[u].telemetry.rewinds for u in uids)
+            return [s.done[u].result for u in uids], rewinds
+
+        (a, rw_c), (b, rw_p) = run(False), run(True)
+        assert rw_c > 0, "no rewinds fired — parity test is vacuous"
+        assert rw_p == rw_c
+        for i, (x, y) in enumerate(zip(a, b)):
+            np.testing.assert_array_equal(x, y, err_msg=f"request {i}")
+
+    def test_rewind_landing_on_page_boundary(self, tiny_f32):
+        """A rewind whose target position is exactly a page boundary must
+        unmap the (now wholly invalid) tail page and leave its
+        re-allocation to the next page-boundary tick; greedy replay then
+        reproduces the never-rewound stream."""
+        cfg, params = tiny_f32
+        fc = dataclasses.replace(cfg.freeze, recovery_enabled=True,
+                                 entropy_abs_threshold=1e9,  # no organic RR
+                                 rewalk_tokens=8)
+        cfg = dataclasses.replace(cfg, freeze=fc)
+        rng = np.random.RandomState(5)
+        prompt = rng.randint(0, cfg.vocab_size, size=14).astype(np.int32)
+
+        def run(rewind):
+            eng = PagedContinuousEngine(cfg, params, max_seq=96, n_lanes=1,
+                                        max_active_pages=10, prefill_chunk=8)
+            req = Request(1, prompt, 30, SamplingParams.greedy())
+            eng.admit(req)
+            while eng.prefills:
+                eng.step_once()
+            # bucket 16 -> pos starts 16; 16 commits -> pos 32
+            while int(eng.pos[0]) < 32:
+                eng.step_once()
+            if rewind:
+                assert eng._rewind_lane(0)
+                assert int(eng.pos[0]) == 24 and 24 % eng.page == 0
+                pt = np.asarray(eng.state.page_table[:, 0])
+                assert (pt[pt >= 0] < 24 // eng.page).all(), \
+                    "wholly-rewound pages must be unmapped"
+            while eng.lanes[0].request is not None:
+                eng.step_once()
+            return req.result
+
+        base, rew = run(False), run(True)
+        np.testing.assert_array_equal(base, rew)
+
+    def test_thaw_with_full_pool_evicts_coldest(self, tiny_f32):
+        """thaw_lane on a saturated pool must evict the coldest resident
+        page (frozen pages first), stash it with the forced-freeze timer,
+        and install the thawed page in its slot."""
+        cfg, params = tiny_f32
+        from repro.core.paging import PagedController
+        L, P, page = 2, 4, cfg.freeze.page_size
+        kvh, hd = 2, cfg.head_dim
+        ctl = PagedController(cfg=cfg, batch=1, max_active_pages=P)
+        rng = np.random.RandomState(0)
+        pool = {"k": rng.randn(L, 1, P, page, kvh, hd).astype(np.float32),
+                "v": rng.randn(L, 1, P, page, kvh, hd).astype(np.float32),
+                "page_table": np.tile(np.arange(5, 9, dtype=np.int32),
+                                      (L, 1, 1)),
+                "slot_mask": np.ones((L, 1, P, page), bool)}
+        fstate = {"c": np.tile(np.array([3, 0, 1, 0], np.int32), (L, 1, 1)),
+                  "d": np.zeros((L, 1, P), np.int32),
+                  "frozen": np.tile(np.array([True, False, False, False]),
+                                    (L, 1, 1)),
+                  "frozen_at": np.zeros((L, 1, P), np.int32)}
+        stash_k = rng.randn(page, kvh, hd).astype(np.float32)
+        for l in range(L):
+            ctl.stash(l, 0, 2, stash_k, stash_k, d=50)
+        n = ctl.thaw_lane(pool, fstate, 0, 0, keep_gids=(8,),
+                          reserve_slots=0)
+        assert n == L and ctl.n_thaw == L
+        for l in range(L):
+            # gid 2 resident and un-frozen, in the evicted page's slot
+            where = np.nonzero(pool["page_table"][l, 0] == 2)[0]
+            assert len(where) == 1 and where[0] == 0, \
+                "thaw must land in the frozen victim's slot"
+            assert not fstate["frozen"][l, 0, where[0]]
+            np.testing.assert_array_equal(pool["k"][l, 0, where[0]], stash_k)
+            # the frozen victim (gid 5) was stashed in turn, durable timer
+            key = (l, 0, 5)
+            assert key in ctl.store and key in ctl.frozen_meta
+            assert ctl.frozen_meta[key]["d"] == cfg.freeze.page_size
+            assert 5 not in pool["page_table"][l, 0]
+
+    def test_thaw_of_chunked_prefill_overflow_page(self):
+        """A page stashed at install because the prompt overflowed the
+        device pool must be recoverable by an entropy-driven thaw: with
+        the pool still saturated, thaw_lane evicts a cold resident page
+        and remaps the overflow page into its slot."""
+        cfg = get_config("llama3-8b-tiny")
+        fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                                 tau_mode="quantile", quantile=0.6,
+                                 k_soft=1.0, recovery_enabled=False)
+        cfg = dataclasses.replace(cfg, freeze=fc)
+        params = MD.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(4)
+        eng = PagedContinuousEngine(cfg, params, max_seq=256, n_lanes=1,
+                                    max_active_pages=6, prefill_chunk=16)
+        # 48-token prompt -> 64 bucket = 8 pages > 5 resident: gids 0..2
+        # overflow into the host store at install
+        req = Request(1, rng.randint(0, cfg.vocab_size, size=48).astype(
+            np.int32), 40, SamplingParams(temperature=0.7))
+        eng.admit(req)
+        while eng.prefills:
+            eng.step_once()
+        assert {k[2] for k in eng.ctl.frozen_meta if k[1] == 0} \
+            >= {0, 1, 2}
+        pool, fstate = eng._pull_lanes([0])
+        n = eng.ctl.thaw_lane(pool, fstate, 0, 0,
+                              keep_gids=eng._keep_gids(0), reserve_slots=1)
+        assert n > 0 and eng.ctl.n_thaw == n
+        thawed = [gid for gid in (0, 1, 2)
+                  if all((pool["page_table"][l, 0] == gid).any()
+                         for l in range(eng.L_attn))]
+        assert thawed, "no overflow prompt page came back resident"
+        eng._push_lanes(pool, fstate, [0])
+        # decode still completes after the host rearranged the pool
+        while eng.lanes[0].request is not None:
+            eng.step_once()
+        assert req.result.shape == (40,)
+
+    def test_entropy_spikes_drive_thaws_end_to_end(self):
+        """Full loop: freeze pressure stashes pages, sustained entropy
+        spikes escalate to FR, pending thaws are serviced at page-boundary
+        ticks, and every request still completes with no host-store
+        leaks."""
+        cfg = get_config("llama3-8b-tiny")
+        fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                                 tau_mode="quantile", quantile=0.6,
+                                 k_soft=0.7, recovery_enabled=True,
+                                 entropy_abs_threshold=0.5, rewalk_tokens=6)
+        cfg = dataclasses.replace(cfg, freeze=fc, dtype="float32")
+        params = MD.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(0)
+        eng = PagedContinuousEngine(cfg, params, max_seq=256, n_lanes=2,
+                                    max_active_pages=6, prefill_chunk=16,
+                                    rewind_cooldown=12)
+        s = Scheduler(eng)
+        uids = [s.submit(rng.randint(0, cfg.vocab_size, size=sp), n,
+                         SamplingParams(temperature=0.7))
+                for sp, n in ((48, 70), (20, 50))]
+        s.run()
+        for u, n in zip(uids, (70, 50)):
+            assert s.done[u].result.shape == (n,)
+        assert eng.ctl.n_thaw > 0, "no thaw was ever serviced"
+        assert sum(s.done[u].telemetry.rewinds for u in uids) > 0
+        assert any(s.done[u].telemetry.recovery_events for u in uids)
+        assert not eng.ctl.frozen_meta and not eng.ctl.store
 
 
 class TestBoundedPool:

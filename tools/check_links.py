@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Usage: python tools/check_links.py README.md docs [more files/dirs...]
+
+Checks every relative link target `[text](path)` / `[text](path#anchor)`
+in the given markdown files (directories are scanned for *.md) against
+the working tree.  External links (http/https/mailto) are skipped — this
+guards against the docs rotting relative to the repo, not the internet.
+In-file anchors are validated against the target file's headings using
+GitHub's slug rules (lowercase, spaces -> dashes, punctuation dropped).
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+CODE_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def slug(heading: str) -> str:
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    text = CODE_FENCE.sub("", path.read_text())
+    return {slug(m.group(1)) for m in HEADING.finditer(text)}
+
+
+def check_file(md: pathlib.Path, errors: list) -> None:
+    text = CODE_FENCE.sub("", md.read_text())
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md if not path_part else \
+            (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" \
+                and slug(anchor) not in anchors_of(dest):
+            errors.append(f"{md}: missing anchor -> {target}")
+
+
+def main(argv) -> int:
+    files: list = []
+    for arg in argv or ["README.md", "docs"]:
+        p = pathlib.Path(arg)
+        files += sorted(p.rglob("*.md")) if p.is_dir() else [p]
+    errors: list = []
+    for md in files:
+        check_file(md, errors)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
