@@ -148,7 +148,7 @@ def serve_poisson(engine, reqs, arrivals):
     step0 = engine.wall_step
     pending = list(zip(range(1, len(reqs) + 1), reqs, arrivals))
     arr_of = {i + 1: a for i, a in enumerate(arrivals)}
-    queue, lat, done = [], [], 0
+    queue, lat, step_lat, done = [], [], [], 0
     t0 = time.time()
     while done < len(reqs):
         now = time.time() - t0
@@ -163,7 +163,10 @@ def serve_poisson(engine, reqs, arrivals):
             engine.admit(queue.pop(0))
         if engine.n_active_lanes == 0:
             continue
-        for req in engine.step_once():
+        ts = time.perf_counter()
+        retired = engine.step_once()
+        step_lat.append(time.perf_counter() - ts)
+        for req in retired:
             lat.append((time.time() - t0) - arr_of[req.uid])
             done += 1
     wall = time.time() - t0
@@ -173,6 +176,9 @@ def serve_poisson(engine, reqs, arrivals):
         "tokens_per_s": round(total_tokens / max(wall, 1e-9), 1),
         "latency_p50_s": round(float(np.percentile(lat, 50)), 3),
         "latency_p99_s": round(float(np.percentile(lat, 99)), 3),
+        "step_ms_mean": round(1e3 * float(np.mean(step_lat)), 3),
+        "step_ms_p50": round(1e3 * float(np.percentile(step_lat, 50)), 3),
+        "step_ms_p99": round(1e3 * float(np.percentile(step_lat, 99)), 3),
         "jitted_steps": engine.wall_step - step0,
         "peak_kv_bytes": int(engine.peak_kv_bytes),
     }
@@ -220,6 +226,128 @@ def run_paged_comparison(cfg, params, smoke: bool, warmup: bool = True):
     p_stats = serve_poisson(paged, reqs, arrivals)
     p_stats["swaps"] = paged.ctl.n_swap_out + paged.ctl.n_swap_in - swaps0
     return c_stats, p_stats
+
+
+# ===================================================================== #
+# Async DMA pipeline: sync vs async paged engine, token-parity asserted
+# ===================================================================== #
+def async_trace_config(cfg):
+    """Freeze + recovery settings for the async-pipeline comparison:
+    aggressive page-granular freeze pressure (pages stash steadily) plus a
+    low absolute entropy threshold so the recovery ladder escalates to FR
+    and raises host thaws throughout the decode — the workload the
+    speculative-thaw staging is built for.
+
+    f32 + greedy decoding (the repo's parity methodology, see
+    tests/test_paged_continuous.py::TestParity): the two arms interleave
+    admissions and decode differently, so the load-adaptive prefill-chunk
+    schedule produces numerically different (bit-wise) logit roundings —
+    greedy argmax over f32 is stable across them, sampled bf16 is not."""
+    fc = dataclasses.replace(cfg.freeze, page_size=16, window=16,
+                             tau_mode="quantile", quantile=0.55, k_soft=0.7,
+                             recovery_enabled=True,
+                             entropy_abs_threshold=0.5, rewalk_tokens=8)
+    return dataclasses.replace(cfg, freeze=fc, dtype="float32")
+
+
+def _run_async_arm(cfg, params, smoke: bool, async_pipeline: bool):
+    """Serve a deterministic mixed trace (all requests queued up front —
+    admissions depend only on lane availability, never on wall clock, so
+    both arms make bit-identical decisions) through one paged engine arm;
+    returns (per-uid token streams, stats dict)."""
+    from repro.serving.engine import PagedContinuousEngine
+    from repro.serving.scheduler import Scheduler
+    from repro.serving.sampling import SamplingParams
+
+    lens = [(96, 32), (24, 24), (64, 32), (16, 24)] if smoke else \
+        [(192, 48), (48, 32), (128, 48), (32, 32), (192, 48), (48, 32)]
+    max_seq = 256 if smoke else 512
+    eng = PagedContinuousEngine(
+        cfg, params, max_seq=max_seq, n_lanes=2,
+        max_active_pages=5 if smoke else 6, prefill_chunk=16,
+        rewind_cooldown=12, async_pipeline=async_pipeline,
+        # fixed chunk split: the arms interleave admissions differently,
+        # and burst chunks would change flash-attention summation order
+        burst_prefill=False)
+    sched = Scheduler(eng)
+    rng = np.random.RandomState(3)
+    uids = [sched.submit(rng.randint(0, cfg.vocab_size, size=pl), n,
+                         SamplingParams.greedy())
+            for pl, n in lens]
+
+    def run_trace():
+        lat = []
+        while sched.queue or eng.n_active_lanes:
+            sched._admit_free()
+            if not eng.n_active_lanes:
+                break
+            t0 = time.perf_counter()
+            for req in eng.step_once():
+                sched.done[req.uid] = req
+            lat.append(time.perf_counter() - t0)
+        return lat
+
+    run_trace()                             # warmup pass (jit compiles)
+    snap0 = eng.stats.snapshot()
+    thaw0 = (eng.ctl.n_thaw, eng.ctl.n_thaw_remap, eng.ctl.n_thaw_upload)
+    # two timed repeats, best-of by mean: wall-clock on shared CI boxes is
+    # scheduler/GC-noise dominated, and min-of-N is the standard latency
+    # methodology; the structural metrics (parity, blocked fraction, thaw
+    # counters) accumulate over both repeats
+    lat_reps = []
+    for _ in range(2):
+        for pl, n in lens:                  # same trace shape each repeat
+            sched.submit(rng.randint(0, cfg.vocab_size, size=pl), n,
+                         SamplingParams.greedy())
+        lat_reps.append(run_trace())
+    lat = min(lat_reps, key=lambda ls: float(np.mean(ls)))
+    snap1 = eng.stats.snapshot()
+    d = lambda k: snap1[k] - snap0[k]
+    steps = max(d("steps"), 1)
+    tokens = {u - len(lens): np.asarray(sched.done[u].result)
+              for u in sorted(sched.done) if u > len(lens)}
+    return tokens, {
+        "step_ms_mean": round(1e3 * float(np.mean(lat)), 3),
+        "step_ms_p50": round(1e3 * float(np.percentile(lat, 50)), 3),
+        "step_ms_p99": round(1e3 * float(np.percentile(lat, 99)), 3),
+        "host_blocked_fraction": round(d("blocked_steps") / steps, 4),
+        "blocking_d2h": d("blocking_d2h"),
+        "blocking_h2d": d("blocking_h2d"),
+        "async_d2h": d("async_d2h"),
+        "async_h2d": d("async_h2d"),
+        "thaws": eng.ctl.n_thaw - thaw0[0],
+        "thaw_remap": eng.ctl.n_thaw_remap - thaw0[1],
+        "thaw_upload": eng.ctl.n_thaw_upload - thaw0[2],
+        "peak_kv_bytes": int(eng.peak_kv_bytes),
+    }
+
+
+def run_async_comparison(cfg, params, smoke: bool):
+    """Sync vs async paged engine on the same deterministic thaw-heavy
+    trace.  The pipeline must be a pure overlap optimization: token
+    streams are asserted identical, the async arm's host-blocked fraction
+    must be strictly lower (it blocks only at boundary ticks), and
+    speculative staging should turn most thaws into remap-only installs."""
+    import jax
+    from repro.models import model as MD
+    cfg = async_trace_config(cfg)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)   # f32 weights
+    sync_toks, sync_stats = _run_async_arm(cfg, params, smoke, False)
+    async_toks, async_stats = _run_async_arm(cfg, params, smoke, True)
+    parity = set(sync_toks) == set(async_toks) and all(
+        np.array_equal(sync_toks[u], async_toks[u]) for u in sync_toks)
+    thaws = async_stats["thaws"]
+    remap_frac = async_stats["thaw_remap"] / thaws if thaws else 0.0
+    return {
+        "sync": sync_stats,
+        "async": async_stats,
+        "token_parity": bool(parity),
+        "latency_win": bool(async_stats["step_ms_mean"]
+                            < sync_stats["step_ms_mean"]),
+        "blocked_win": bool(async_stats["host_blocked_fraction"]
+                            < sync_stats["host_blocked_fraction"]),
+        "thaw_remap_fraction": round(remap_frac, 3),
+    }
 
 
 # ===================================================================== #
@@ -274,14 +402,18 @@ def run_needle(cfg, params, smoke: bool, paged: bool, recovery: bool):
     max_seq = prompt_len + n_gen + page
     query_window = 2 * page
 
+    # sync pipeline for the needle arms: the probe reads per-lane host
+    # bookkeeping (generated counts) between steps, which the async ring
+    # defers — retrieval accuracy is a state property, not a timing one
     if paged:
         eng = PagedContinuousEngine(cfg, params, max_seq=max_seq,
                                     n_lanes=n_req,
                                     max_active_pages=pool_pages,
-                                    prefill_chunk=page, max_rewinds=0)
+                                    prefill_chunk=page, max_rewinds=0,
+                                    async_pipeline=False)
     else:
         eng = ContinuousEngine(cfg, params, max_seq=max_seq, n_lanes=n_req,
-                               max_rewinds=0)
+                               max_rewinds=0, async_pipeline=False)
     rng = np.random.RandomState(7)
     reqs = [Request(i + 1,
                     rng.randint(0, cfg.vocab_size, size=prompt_len).astype(
@@ -376,6 +508,19 @@ def main():
     report.update(long_trace_contiguous=c_stats, long_trace_paged=p_stats,
                   paged_p99_win=bool(p99_win), paged_mem_win=bool(mem_win))
 
+    # ---- async DMA pipeline: sync vs async paged engine ---- #
+    ab = run_async_comparison(cfg, params, smoke=args.smoke)
+    print(f"\n{'async pipeline':>22s}  {'sync':>12s}  {'async':>12s}")
+    for k in ("step_ms_mean", "step_ms_p50", "step_ms_p99",
+              "host_blocked_fraction", "blocking_d2h", "blocking_h2d",
+              "thaws", "thaw_remap", "thaw_upload"):
+        print(f"{k:>22s}  {ab['sync'][k]:>12}  {ab['async'][k]:>12}")
+    print(f"\nasync token parity: {ab['token_parity']}   "
+          f"host-blocked win: {ab['blocked_win']}   "
+          f"mean-step win: {ab['latency_win']}   "
+          f"thaw remap fraction: {ab['thaw_remap_fraction']}")
+    report.update(async_vs_sync=ab)
+
     # ---- needle-in-haystack: recovery keeps frozen context retrievable ---- #
     needle = run_needle_comparison(cfg, params, smoke=args.smoke)
     print(f"\n{'needle retrieval':>22s}  "
@@ -397,6 +542,27 @@ def main():
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "continuous_batching.json").write_text(
         json.dumps(report, indent=2))
+    # machine-readable summary at the repo root (CI tier-2 asserts on it)
+    bench = {
+        "step_latency_ms": {
+            arm: {k: ab[arm][f"step_ms_{k}"] for k in ("mean", "p50", "p99")}
+            for arm in ("sync", "async")},
+        "host_blocked_fraction": {
+            arm: ab[arm]["host_blocked_fraction"]
+            for arm in ("sync", "async")},
+        "peak_device_kv_bytes": {
+            "contiguous": c_stats["peak_kv_bytes"],
+            "paged": p_stats["peak_kv_bytes"],
+            "paged_async_arm": ab["async"]["peak_kv_bytes"]},
+        "token_parity": ab["token_parity"],
+        "blocked_win": ab["blocked_win"],
+        "latency_win": ab["latency_win"],
+        "thaws": ab["async"]["thaws"],
+        "thaw_remap_fraction": ab["thaw_remap_fraction"],
+    }
+    (pathlib.Path(__file__).resolve().parents[1]
+     / "BENCH_continuous_batching.json").write_text(
+        json.dumps(bench, indent=2))
 
 
 if __name__ == "__main__":

@@ -118,15 +118,41 @@ class HostOffloadController:
     n_offloads: int = 0
     n_restores: int = 0
 
-    def sync(self, cache: KVCache, frozen: np.ndarray) -> KVCache:
-        """frozen: (L, B, S) bool (post-step).  Returns cache with restored
-        pages written back.  Offloaded pages are tracked; their device slots
-        are considered reclaimable (zeroed to model release)."""
+    def _all_frozen(self, frozen: np.ndarray,
+                    reduced: bool = False) -> np.ndarray:
+        """Page-granular reduction of the (L, B, S) token freeze mask —
+        or a passthrough when the caller already reduced it (the async
+        pipeline reduces ON DEVICE so only (L, B, n_pages) bools ride the
+        per-step fetch, page_size x less D2H than the token mask)."""
+        if reduced:
+            return frozen                                   # (L, B, n_pages)
         L, B, S = frozen.shape
         pg = self.page_size
         n_pages = S // pg
         fz = frozen[:, :, : n_pages * pg].reshape(L, B, n_pages, pg)
-        all_frozen = fz.all(axis=-1)                       # (L, B, n_pages)
+        return fz.all(axis=-1)                              # (L, B, n_pages)
+
+    def needs_sync(self, frozen: np.ndarray, reduced: bool = False) -> bool:
+        """True iff a `sync` with this freeze mask would move any page:
+        a fully-frozen page not yet offloaded, or an offloaded page that
+        thawed — i.e. the fully-frozen set differs from the offloaded
+        set.  The async serving pipeline fetches only the (small,
+        page-reduced) freeze mask with its per-step telemetry ring and
+        calls `sync` — which round-trips the whole K/V cache — only when
+        this says a transfer is actually due."""
+        all_frozen = self._all_frozen(frozen, reduced)
+        want = {(int(l), int(b), int(p))
+                for l, b, p in zip(*np.nonzero(all_frozen))}
+        return want != self.offloaded
+
+    def sync(self, cache: KVCache, frozen: np.ndarray,
+             reduced: bool = False) -> KVCache:
+        """frozen: (L, B, S) bool (post-step), or the (L, B, n_pages)
+        page-reduction when ``reduced``.  Returns cache with restored
+        pages written back.  Offloaded pages are tracked; their device slots
+        are considered reclaimable (zeroed to model release)."""
+        pg = self.page_size
+        all_frozen = self._all_frozen(frozen, reduced)     # (L, B, n_pages)
         k_host = np.array(cache.k)     # mutable host copies
         v_host = np.array(cache.v)
         dirty = False

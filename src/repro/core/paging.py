@@ -128,12 +128,21 @@ def page_freeze_update(
     current_page: jnp.ndarray, # () or (B,) int32 — global id of the tail page
     step: jnp.ndarray,         # () or (B,) int32 — per-lane decode clock
     cfg: FreezeConfig,
+    reserved_slots: int = 0,
 ) -> Tuple[PageFreezeState, Dict[str, jnp.ndarray]]:
     """Page-granular Alg. 1 with the sliding window expressed in pages and
     the forced-freeze bound when the pool is saturated.
 
     `current_page` / `step` may be per-lane (B,) vectors — continuous
-    batching runs every lane at its own tail page and decode-step clock."""
+    batching runs every lane at its own tail page and decode-step clock.
+
+    ``reserved_slots`` (static) is the number of physical slots per lane
+    the host keeps out of the allocator — the speculative-thaw staging
+    slots of the async DMA pipeline.  They are permanently unmapped from
+    this function's point of view, so they are subtracted from the free
+    count before the forced-freeze headroom check: a pool of P + S slots
+    with S reserved behaves *identically* to a plain P-slot pool (the
+    async-vs-sync token-parity guarantee of serving/engine.py)."""
     window_pages = max(1, -(-cfg.window // cfg.page_size))
     current_page = jnp.asarray(current_page, jnp.int32)
     cp_b = current_page[:, None] if current_page.ndim else current_page
@@ -158,7 +167,7 @@ def page_freeze_update(
     durable_frozen = jnp.sum((was_frozen | just_frozen) &
                              (jnp.where(just_frozen, d_sched, state.d) >=
                               cfg.page_size), axis=-1)
-    free_after = jnp.sum(~exists, axis=-1) + durable_frozen
+    free_after = jnp.sum(~exists, axis=-1) - reserved_slots + durable_frozen
     need_force = free_after < 2
     cand = jnp.where(eligible & ~just_frozen, page_rel, jnp.inf)
     forced_idx = jnp.argmin(cand, axis=-1)                      # (B,)
@@ -213,6 +222,49 @@ class PagedController:
     n_swap_out: int = 0
     n_swap_in: int = 0
     n_thaw: int = 0        # entropy-guided recovery: pages remapped early
+    # ---- speculative-thaw staging (async DMA pipeline) ---------------- #
+    # Fixed reserved physical slots per (layer, lane): the engine keeps
+    # them out of every allocator below and uploads likely-thaw pages into
+    # them between ticks.  `staged_keys` maps a stashed page key to the
+    # staging slot already holding its K/V on device: installing it then
+    # skips the host->device upload — metadata points at the target slot
+    # and the engine issues a device-side copy staging-slot -> target slot
+    # (`pending_remaps`) after the metadata push.  The target slot is
+    # chosen by the SAME free/evict logic as the upload path, so the pool
+    # layout — and with it every float summation order downstream — is
+    # identical whether or not a page was staged (exact async-vs-sync
+    # token parity).  The engine owns both structures; the controller
+    # only consumes them.
+    stage_slots: Dict[Tuple[int, int], list] = \
+        dataclasses.field(default_factory=dict)
+    staged_keys: Dict[Tuple[int, int, int], int] = \
+        dataclasses.field(default_factory=dict)
+    pending_remaps: list = dataclasses.field(default_factory=list)
+    n_upload_installs: int = 0   # installs that crossed the host bus
+    n_remap_installs: int = 0    # installs served from a staging slot
+    n_thaw_upload: int = 0       # thaw-path installs that needed an upload
+    n_thaw_remap: int = 0        # thaw-path installs that were remap-only
+    kv_dirty: bool = False       # this tick wrote pool K/V (push needs it)
+
+    def begin_tick(self) -> None:
+        """Reset the per-tick K/V dirty flag and the remap list; the
+        engine calls this before a boundary-tick pass, pushes the pulled
+        K/V back only when an install actually uploaded into it
+        (metadata-only push otherwise), and executes `pending_remaps`
+        device-side after the push."""
+        self.kv_dirty = False
+        self.pending_remaps = []
+
+    def _free_slots(self, pt: np.ndarray, l: int, b: int,
+                    lane_id: int) -> np.ndarray:
+        """Free physical slots of (layer l, pool index b), excluding the
+        lane's reserved staging slots — every allocator below goes through
+        here so a staged page is never silently overwritten."""
+        free = np.nonzero(pt[l, b] < 0)[0]
+        reserved = self.stage_slots.get((l, lane_id))
+        if reserved:
+            free = free[~np.isin(free, reserved)]
+        return free
 
     def tick(self, pool: dict, fstate: dict, step: int,
              reserve_slots: int = 1,
@@ -269,7 +321,7 @@ class PagedController:
                     meta = self.frozen_meta[key]
                     meta["d"] -= 1
                     if meta["d"] <= 0:
-                        free = np.nonzero(pt[l, b] < 0)[0]
+                        free = self._free_slots(pt, l, b, gb)
                         if len(free) <= reserve_slots:
                             meta["d"] = 1          # retry next step
                             continue
@@ -283,6 +335,7 @@ class PagedController:
                         del self.frozen_meta[key]
                         # keep host copy (pages are immutable once complete)
                         self.n_swap_in += 1
+                        self._kv_transfer(l, gb, p, key)
         for b in (thaw_lanes or ()):
             gb = lane_ids[b] if lane_ids is not None else b
             self.thaw_lane(pool, fstate, b, gb,
@@ -334,9 +387,13 @@ class PagedController:
         return best
 
     def _install_page(self, pool: dict, fstate: dict, l: int, b: int,
-                      p: int, key: Tuple[int, int, int]) -> None:
+                      p: int, key: Tuple[int, int, int]) -> bool:
         """Remap one stashed page into physical slot `p`, un-frozen (it
-        re-enters attention and relevance accounting immediately)."""
+        re-enters attention and relevance accounting immediately);
+        how the K/V reaches the device — host-bus upload or device-side
+        copy from a staging slot — is ``_kv_transfer``'s call; metadata
+        and the pulled host copy are identical either way.  Returns True
+        when the install was remap-only (staged)."""
         meta = self.frozen_meta.pop(key)
         kk, vv = self.store[key]           # host copy stays (immutable)
         pool["k"][l, b, p] = kk
@@ -347,6 +404,29 @@ class PagedController:
         fstate["d"][l, b, p] = 0
         fstate["frozen"][l, b, p] = False
         fstate["frozen_at"][l, b, p] = meta["frozen_at"]
+        return self._kv_transfer(l, key[1], p, key)
+
+    def _kv_transfer(self, l: int, lane_id: int, p: int,
+                     key: Tuple[int, int, int]) -> bool:
+        """Decide how target slot `p`'s K/V reaches the device.  Every
+        install writes the *pulled host copy* (so later host-side reads
+        this tick see real bytes); what differs is the device side: a
+        page the engine staged gets a device-side copy staging-slot -> `p`
+        queued in ``pending_remaps`` — no K/V crosses the host bus and the
+        push stays metadata-only — while an unstaged page marks the pool
+        K/V dirty so the push carries it.  The target slot is the caller's
+        in both cases, so the pool layout (and every float summation
+        order downstream) is identical whether or not the page was staged
+        — the exact-parity guarantee of the async pipeline.  Returns True
+        for a remap-only install."""
+        src = self.staged_keys.pop(key, None)
+        if src is not None and src in self.stage_slots.get((l, lane_id), []):
+            self.pending_remaps.append((l, lane_id, src, p))
+            self.n_remap_installs += 1
+            return True
+        self.kv_dirty = True
+        self.n_upload_installs += 1
+        return False
 
     def thaw_lane(self, pool: dict, fstate: dict, b: int, lane_id: int,
                   keep_gids=(), reserve_slots: int = 1,
@@ -355,15 +435,20 @@ class PagedController:
         host pages back into its device pool ahead of their freeze timers.
         Candidates are ranked by ``recovery.thaw_priority`` over the freeze
         counters stashed with each page (fewest low-relevance flags, most
-        recently frozen first).  While free slots (beyond the tail
-        reserve) exist they are used; once the pool is full the coldest
+        recently frozen first).  A candidate the engine speculatively
+        staged on device installs remap-only (``_kv_transfer`` queues a
+        device-side copy — no K/V upload); otherwise, while free slots
+        (beyond the tail reserve) exist they are used; once the pool is
+        full the coldest
         resident page is evicted — stashed in turn with the forced-freeze
         timer — so the thaw trades the least-wanted resident page for the
         most-wanted stashed one.  Returns the number of pages thawed."""
         from repro.core.recovery import thaw_priority
         pt = pool["page_table"]
         L = pt.shape[0]
-        budget = pt.shape[2] if max_pages is None else max_pages
+        # budget in *usable* pool slots — staging slots must not widen the
+        # async arm's thaw pass relative to the sync arm's
+        budget = self.max_active_pages if max_pages is None else max_pages
         thawed = 0
         for l in range(L):
             cand = [key for key in self.frozen_meta
@@ -372,7 +457,7 @@ class PagedController:
                 self.frozen_meta[key]["c"], self.frozen_meta[key]["frozen_at"]))
             done_gids = []
             for key in cand[:budget]:
-                free = np.nonzero(pt[l, b] < 0)[0]
+                free = self._free_slots(pt, l, b, lane_id)
                 if len(free) > reserve_slots:
                     p = int(free[0])
                 else:
@@ -381,7 +466,10 @@ class PagedController:
                                             skip_gids=done_gids)
                     if p is None:
                         break
-                self._install_page(pool, fstate, l, b, p, key)
+                if self._install_page(pool, fstate, l, b, p, key):
+                    self.n_thaw_remap += 1
+                else:
+                    self.n_thaw_upload += 1
                 done_gids.append(key[2])
                 thawed += 1
                 self.n_thaw += 1
@@ -409,13 +497,16 @@ class PagedController:
             key = (l, lane_id, gid)
             if key not in self.frozen_meta:
                 return False
-            free = np.nonzero(pt[l, b] < 0)[0]
+            free = self._free_slots(pt, l, b, lane_id)
             p = int(free[0]) if len(free) else \
                 self._evict_coldest(pool, fstate, l, b, lane_id,
                                     keep_gids=keep_gids, skip_gids=(gid,))
             if p is None:
                 return False
-            self._install_page(pool, fstate, l, b, p, key)
+            if self._install_page(pool, fstate, l, b, p, key):
+                self.n_thaw_remap += 1
+            else:
+                self.n_thaw_upload += 1
             self.n_thaw += 1
         return True
 
@@ -429,7 +520,7 @@ class PagedController:
         pt = pool["page_table"]
         ok = True
         for l in range(pt.shape[0]):
-            if (pt[l, b] < 0).any():
+            if len(self._free_slots(pt, l, b, lane_id)):
                 continue
             ok &= self._evict_coldest(pool, fstate, l, b, lane_id,
                                       keep_gids=keep_gids) is not None
@@ -452,15 +543,20 @@ class PagedController:
         return slots
 
     # ---- per-lane bookkeeping (continuous batching) ------------------- #
-    def alloc_tail_lane(self, pool: dict, lane: int,
-                        global_page: int) -> Optional[np.ndarray]:
+    def alloc_tail_lane(self, pool: dict, lane: int, global_page: int,
+                        lane_id: Optional[int] = None
+                        ) -> Optional[np.ndarray]:
         """Allocate a tail-page slot per layer for ONE batch lane (other
-        lanes' slots untouched).  Returns (L,) int32 or None if full."""
+        lanes' slots untouched); `lane_id` (default: same as `lane`) is
+        the global lane whose staging slots must be skipped.  Returns
+        (L,) int32 or None if full."""
+        if lane_id is None:
+            lane_id = lane
         pt = pool["page_table"]
         L = pt.shape[0]
         slots = np.full((L,), -1, np.int32)
         for l in range(L):
-            free = np.nonzero(pt[l, lane] < 0)[0]
+            free = self._free_slots(pt, l, lane, lane_id)
             if len(free) == 0:
                 return None
             slots[l] = free[0]
@@ -477,6 +573,7 @@ class PagedController:
         for key in stale:
             self.store.pop(key, None)
             self.frozen_meta.pop(key, None)
+            self.staged_keys.pop(key, None)
         return len(stale)
 
     def drop_pages_from(self, lane: int, first_gid: int) -> int:
@@ -490,6 +587,7 @@ class PagedController:
         for key in stale:
             self.store.pop(key, None)
             self.frozen_meta.pop(key, None)
+            self.staged_keys.pop(key, None)
         return len(stale)
 
     def stash(self, layer: int, lane: int, global_page: int,

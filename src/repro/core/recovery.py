@@ -101,7 +101,11 @@ def _ladder_step(rec: RecoveryState, logits: jnp.ndarray,
     new = RecoveryState(ema_entropy=ema, level=post_level, calm_steps=calm,
                         steps_seen=rec.steps_seen + 1)
     info = {"entropy": ent, "spike": spike, "level": level,
-            "rr_request": rr_request}
+            "rr_request": rr_request,
+            # the EMA baseline rides along so the host can compute the
+            # thaw-urgency trend (speculative thaw prefetch) without a
+            # second fetch
+            "ema_entropy": rec.ema_entropy}
     return new, spike, level, info
 
 
@@ -179,3 +183,30 @@ def thaw_priority(c, frozen_at):
     ranks eviction victims (coldest page out).  Works on scalars (host
     controller) and arrays alike."""
     return -1000.0 * c + frozen_at
+
+
+def thaw_urgency(level, entropy, ema_entropy):
+    """Priority *trend* score for speculative thaw prefetch: how close a
+    lane looks to raising an FR-level ``thaw_request``.
+
+    The ladder escalates one level per spike, and a spike fires when
+    entropy exceeds the absolute threshold or ``entropy_rel_factor`` x the
+    EMA baseline — so a lane already part-way up the ladder (``level``)
+    with entropy running above its baseline is trending toward FR.  The
+    serving engine starts copying that lane's top-priority stashed pages
+    (ranked by :func:`thaw_priority`) into device staging slots *before*
+    the request fires, turning the eventual thaw into a page-table remap
+    instead of a blocking host->device upload.
+
+    Returns ``level + max(relative-entropy-excess, 0)`` — higher means
+    closer to FR.  The engine currently stages lanes whose score is
+    ``>= WR`` (within one spike of FR) plus any lane with a thaw already
+    pending; looser gates buy little and cost a dispatch per staged page
+    (``PagedContinuousEngine._maybe_prefetch``).  Works on scalars and
+    numpy arrays alike (host-side, consumed from the telemetry ring).
+    """
+    import numpy as np
+    rel = (np.asarray(entropy, np.float32)
+           - np.asarray(ema_entropy, np.float32)) \
+        / np.maximum(np.asarray(ema_entropy, np.float32), 1e-3)
+    return np.asarray(level, np.float32) + np.maximum(rel, 0.0)

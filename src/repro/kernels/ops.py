@@ -42,7 +42,17 @@ def paged_decode_attention(q, k_pages, v_pages, slot_mask, page_table=None,
     `page_visible` (B,P) is the recovery ladder's thaw-aware visibility
     mask (``~frozen``): False pages are skipped like unmapped slots, and a
     just-thawed page re-enters attention + relevance accounting through
-    it; None means every mapped page is visible."""
+    it; None means every mapped page is visible.
+
+    Staging-slot contract (async DMA pipeline): the engine appends
+    ``speculative_slots`` extra physical slots per lane and uploads
+    likely-thaw pages into them *before* their page-table entries exist —
+    the K/V pool may therefore contain live data in slots whose
+    `page_table` entry is -1.  Unmapped slots MUST be excluded from the
+    softmax and report relevance 0 regardless of their K/V contents or
+    stale `slot_mask` bits (tests/test_async_pipeline.py::
+    TestStagingSlotVisibility pins this for both the reference and the
+    Pallas kernel)."""
     if _on_tpu():
         return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
                                              page_table, page_visible)

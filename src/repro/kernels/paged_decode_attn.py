@@ -18,6 +18,16 @@ On real TPU the page pool lives in HBM while the frozen store is in host
 memory; the kernel only ever touches the device pool — the bounded-memory
 guarantee of DESIGN.md §2.  Validated on CPU with interpret=True against
 kernels.ref.paged_decode_attention_ref (tests/test_kernels.py sweep).
+
+The scalar-prefetched page-table skip doubles as the async DMA pipeline's
+**staging-slot visibility** guarantee: the serving engine reserves extra
+physical slots per lane and speculatively uploads likely-thaw pages into
+them while their page-table entries are still -1, so the pool carries
+live K/V the sequence must not yet attend.  Because `mapped` is read from
+SMEM before any VMEM access, a staged slot costs zero MXU work and zero
+relevance until the host remaps it — at which point the same prefetch
+path makes it attendable with no kernel change
+(tests/test_async_pipeline.py::TestStagingSlotVisibility).
 """
 from __future__ import annotations
 

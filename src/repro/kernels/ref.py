@@ -29,7 +29,9 @@ def paged_decode_attention_ref(q, k_pages, v_pages, slot_mask,
     """Oracle for kernels.paged_decode_attn — (out, page_relevance).
     Unmapped page-table slots (< 0) and invisible pages (page_visible
     False — frozen and not thawed by the recovery ladder) are excluded
-    like empty pages."""
+    like empty pages.  Exclusion must hold regardless of the slots' K/V
+    payload: the async pipeline's staging slots carry speculatively
+    uploaded pages while still unmapped (see kernels/ops.py)."""
     return _paged_ref(q, k_pages, v_pages, slot_mask, page_table,
                       page_visible)
 

@@ -66,6 +66,17 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
+    ap.add_argument("--async", dest="async_pipeline",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="async DMA pipeline: the per-step token/telemetry "
+                         "fetch rides a double-buffered ring (consumed one "
+                         "step later), boundary-tick pool swaps batch into "
+                         "one transfer pair, and on --paged likely thaws "
+                         "are prefetched into device staging slots "
+                         "(--no-async = block on every step's fetch — the "
+                         "pre-pipeline baseline; identical decisions, and "
+                         "bit-identical tokens under a deterministic "
+                         "prefill-chunk schedule, see docs/serving.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch + ("-tiny" if args.tiny else ""))
@@ -91,12 +102,14 @@ def main():
                                     n_lanes=args.batch,
                                     max_active_pages=args.pages,
                                     enable_freeze=not args.no_freeze,
-                                    prefill_chunk=args.prefill_chunk)
+                                    prefill_chunk=args.prefill_chunk,
+                                    async_pipeline=args.async_pipeline)
         sched = Scheduler(eng)
     else:
         eng = ContinuousEngine(cfg, params, max_seq=args.max_seq,
                                n_lanes=args.batch,
-                               enable_freeze=not args.no_freeze)
+                               enable_freeze=not args.no_freeze,
+                               async_pipeline=args.async_pipeline)
         sched = Scheduler(eng)
     rng = np.random.RandomState(0)
     for _ in range(args.requests):
@@ -120,6 +133,15 @@ def main():
                   f"(peak {eng.peak_kv_bytes} incl. prefill scratch)  "
                   f"page swaps: {eng.ctl.n_swap_out} out / "
                   f"{eng.ctl.n_swap_in} in / {eng.ctl.n_thaw} thawed")
+            if eng.ctl.n_thaw:
+                print(f"thaw installs: {eng.ctl.n_thaw_remap} remap-only "
+                      f"(staged) / {eng.ctl.n_thaw_upload} uploaded")
+        s = eng.stats
+        print(f"dma: host-blocked {100 * s.host_blocked_fraction:.0f}% of "
+              f"steps ({s.blocked_steps}/{s.steps}; "
+              f"{'async' if args.async_pipeline else 'sync'} pipeline)  "
+              f"blocking {s.blocking_d2h} D2H / {s.blocking_h2d} H2D  "
+              f"async {s.async_d2h} D2H / {s.async_h2d} H2D")
         if args.recovery:
             rewinds = sum(r.telemetry.rewinds for r in sched.done.values()
                           if r.telemetry is not None)

@@ -78,16 +78,22 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, state, pos0):
     return T.lm_prefill_chunk(params, cfg, tokens, state, pos0)
 
 
-def init_paged_decode_state(cfg: ModelConfig, batch: int, max_active_pages: int):
+def init_paged_decode_state(cfg: ModelConfig, batch: int,
+                            max_active_pages: int, staging_slots: int = 0):
+    """`staging_slots` extra unmapped slots per lane hold speculative-thaw
+    prefetches (async DMA pipeline); pass the same count to
+    `decode_step_paged(reserved_slots=...)`."""
     assert not is_encdec(cfg), "paged long-context mode is decoder-only"
-    return T.init_paged_decode_state(cfg, batch, max_active_pages)
+    return T.init_paged_decode_state(cfg, batch, max_active_pages,
+                                     staging_slots)
 
 
 def decode_step_paged(params, cfg: ModelConfig, token, pos, step, tail_slot,
                       state, freeze_cfg=None, live=None,
-                      enable_freeze: bool = True):
+                      enable_freeze: bool = True, reserved_slots: int = 0):
     return T.lm_decode_step_paged(params, cfg, token, pos, step, tail_slot,
-                                  state, freeze_cfg, live, enable_freeze)
+                                  state, freeze_cfg, live, enable_freeze,
+                                  reserved_slots)
 
 
 def reset_paged_lane(cfg: ModelConfig, state, lane):

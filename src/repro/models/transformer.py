@@ -583,13 +583,21 @@ class PagedDecodeState(NamedTuple):
 
 
 def init_paged_decode_state(cfg: ModelConfig, batch: int,
-                            max_active_pages: int) -> PagedDecodeState:
+                            max_active_pages: int,
+                            staging_slots: int = 0) -> PagedDecodeState:
+    """``staging_slots`` extra physical slots per lane are allocated beyond
+    ``max_active_pages`` for the async DMA pipeline's speculative-thaw
+    staging: they stay unmapped (page table -1 — attention and the freeze
+    schedule skip them) until the host remaps a staged page in place.  The
+    jitted step must then be given ``reserved_slots=staging_slots`` so the
+    forced-freeze headroom math treats the pool as ``max_active_pages``
+    usable slots (see ``core.paging.page_freeze_update``)."""
     from repro.core.paging import init_page_freeze_state
     from repro.core.recovery import init_recovery_state
     dt = jnp.dtype(cfg.dtype)
     la = max(attn_layer_count(cfg), 1)
     lm = mamba_layer_count(cfg)
-    P, page = max_active_pages, cfg.freeze.page_size
+    P, page = max_active_pages + staging_slots, cfg.freeze.page_size
     kvh, hd = max(cfg.num_kv_heads, 1), cfg.head_dim
     di = cfg.mamba_expand * cfg.d_model
     fz = init_page_freeze_state(batch, P)
@@ -696,6 +704,7 @@ def lm_decode_step_paged(
     freeze_cfg: Optional[FreezeConfig] = None,
     live: Optional[jnp.ndarray] = None,   # (B,) bool; False lanes don't write
     enable_freeze: bool = True,
+    reserved_slots: int = 0,
 ) -> Tuple[jnp.ndarray, PagedDecodeState, Dict[str, jnp.ndarray]]:
     """Bounded-active decode: attention sees only the device-resident page
     pool; page-granular freeze feeds the host PagedController.
@@ -703,7 +712,12 @@ def lm_decode_step_paged(
     `pos` / `step` may be per-lane (B,) vectors and `tail_slot` a per-layer,
     per-lane (L_attn, B) table — continuous batching runs every lane at its
     own position, decode clock and tail page.  `live=False` lanes (idle or
-    mid-admission) skip the tail write so their pool never grows garbage."""
+    mid-admission) skip the tail write so their pool never grows garbage.
+    `reserved_slots` (static) is the per-lane count of speculative-thaw
+    staging slots the host keeps unmapped: attention already skips them
+    (page table -1), and the freeze schedule's forced-freeze headroom
+    subtracts them so a P + S pool with S reserved is step-for-step
+    identical to a plain P pool."""
     fcfg = freeze_cfg or cfg.freeze
     roles = unit_roles(cfg)
     B = token.shape[0]
@@ -782,7 +796,7 @@ def lm_decode_step_paged(
                 if enable_freeze:
                     fz, finfo = page_freeze_update(
                         fz, prel, xs_u["page_table"][ia], current_page, step,
-                        fcfg)
+                        fcfg, reserved_slots=reserved_slots)
                     nfro = nfro + jnp.sum(finfo["n_frozen"])
                 outs["k"].append(kp); outs["v"].append(vp)
                 outs["slot_mask"].append(sm); fz_out.append(fz)

@@ -33,11 +33,36 @@ Host-side responsibilities beyond the jitted step (all drivers):
     invalidates the rewound KV slots / pages on device
   * telemetry: active/frozen KV trajectory (paper Fig. 1), compression
     ratio (Table 1), entropy/recovery events — one append per lane-step
+
+**Async DMA pipeline** (both continuous engines, ``async_pipeline=True``):
+the per-step device->host fetch (sampled tokens + telemetry + recovery
+requests) is pushed into a double-buffered ring (``serving.dma.FetchRing``)
+right behind the jitted step and *consumed at the start of the next engine
+call* — the D2H copy overlaps the device compute and the host's
+post-dispatch work instead of stalling right after dispatch.  Host
+controller decisions (token commits, telemetry, thaw requests, rewinds,
+retirement, offload) therefore run one step behind the device — the same
+sliding-window slack the paper's schedule already tolerates — but in
+exactly the order the synchronous path applies them, so the two modes
+make identical host decisions (``async_pipeline=False`` runs the same
+code with a depth-0 ring: push immediately followed by a blocking pop).
+Output tokens are bit-identical whenever the prefill chunk split is
+deterministic (``burst_prefill=False``): the modes admit on different
+wall calls, and the load-adaptive burst split would change
+flash-attention summation order — float rounding, not decisions.  The
+paged engine additionally batches each boundary tick's pool slices into
+ONE device_get / device_put pair across all boundary lanes and layers
+(reused host staging buffers), pushes K/V back only when the tick actually
+wrote some (metadata-only push otherwise), and speculatively uploads the
+top-priority stashed pages into per-lane device *staging slots* so an
+entropy-driven thaw becomes a page-table remap instead of a blocking
+upload (``core.paging.PagedController.stage_slots`` / ``staged_keys``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -48,8 +73,9 @@ from repro.configs.base import FreezeConfig, ModelConfig
 from repro.core.cache import HostOffloadController, KVCache
 from repro.core.paging import PagedController, PageFreezeState
 from repro.models import model as MD
+from repro.serving.dma import FetchRing, HostStaging, TransferStats
 from repro.serving.sampling import (SamplingParams, params_arrays, sample,
-                                    sample_batched)
+                                    sample_batched_perlane)
 
 
 @dataclasses.dataclass
@@ -217,7 +243,8 @@ class _LaneEngineBase:
                  enable_freeze: bool = True,
                  pad_id: int = 0,
                  seed: int = 0,
-                 min_prompt_bucket: int = 8):
+                 min_prompt_bucket: int = 8,
+                 async_pipeline: bool = True):
         assert not cfg.is_encoder_decoder, \
             "continuous batching is decoder-only (enc-dec uses Engine)"
         self.cfg = cfg
@@ -228,7 +255,7 @@ class _LaneEngineBase:
         self.enable_freeze = enable_freeze
         self.pad_id = pad_id
         self.min_prompt_bucket = min_prompt_bucket
-        self._sample = jax.jit(sample_batched)
+        self._sample = jax.jit(sample_batched_perlane)
         self.lanes = [_Lane() for _ in range(n_lanes)]
         self.pos = np.zeros(n_lanes, np.int32)
         self.step = np.zeros(n_lanes, np.int32)
@@ -238,10 +265,32 @@ class _LaneEngineBase:
             np.array(a) for a in params_arrays([greedy] * n_lanes))
         self._lane_params_dev = None     # device mirror, refreshed on admit
         self.key = jax.random.PRNGKey(seed)
+        # order-invariant sampling randomness: the j-th *admission* gets a
+        # base key (fold of the engine seed with the admission counter)
+        # and every draw folds it with the lane's own decode clock — a
+        # lane's token at logical step k is therefore independent of
+        # which global dispatch carried it, which is what keeps the async
+        # pipeline (whose admit/step interleaving differs from the sync
+        # path's) token-for-token identical
+        self._admit_count = 0
+        self.lane_keys = np.array(
+            jax.random.split(jax.random.PRNGKey(seed), n_lanes), np.uint32)
         self.wall_step = 0          # number of jitted decode steps issued
         self.events: List[Dict[str, Any]] = []   # admit / finish log
         self.peak_kv_bytes = 0      # high-water device KV (incl. prefill
                                     # scratch) — the benchmark memory metric
+        # ---- async DMA pipeline (serving/dma.py) ---- #
+        # Depth-1 ring: step N's fetch is issued right behind the dispatch
+        # and consumed at the start of engine call N+1.  Depth 0 is the
+        # synchronous baseline (push + blocking pop in the same call);
+        # both modes drain entries in identical FIFO order, so their token
+        # streams and telemetry are bit-identical.
+        self.async_pipeline = async_pipeline
+        self.stats = TransferStats()
+        self.ring = FetchRing(self.stats, depth=1 if async_pipeline else 0)
+        self.staging = HostStaging()
+        self._retired_backlog: List[Request] = []   # retired during admit
+                                    # drains; reported by the next step_once
 
     @property
     def kv_device_bytes(self) -> int:       # subclasses override
@@ -318,6 +367,82 @@ class _LaneEngineBase:
         self.tok[lane] = l.history[-1][0] if l.history else l.generated[-1]
         self.step[lane] += 1
 
+    # ---------------- fetch-ring drain (shared pipeline) ---------------- #
+    def _drain_ring(self) -> List[Request]:
+        """Materialize every pending ring entry (FIFO) and apply the host
+        bookkeeping it carries: admit-token commits, per-step telemetry,
+        recovery servicing, token commits and retirement.  Runs at the
+        start of every ``step_once`` (and at the end too when the pipeline
+        is synchronous), so host decisions are applied in the same order
+        in both modes."""
+        finished: List[Request] = []
+        for meta, host in self.ring.drain():
+            if meta["kind"] == "admit":
+                finished.extend(self._commit_admit(meta, host))
+            else:
+                finished.extend(self._commit_step(meta, host))
+        return finished
+
+    def flush(self) -> List[Request]:
+        """Public drain: block until every in-flight fetch has landed and
+        its bookkeeping is applied.  Call before reading per-lane host
+        state (``pos`` / ``generated`` / telemetry) mid-run or before
+        mutating engine state from outside ``step_once``.  Requests that
+        retire during the flush are returned AND re-reported by the next
+        ``step_once`` (via the backlog), so a scheduler driving the
+        engine never misses one."""
+        out = self._drain_ring()
+        self._retired_backlog += out
+        return out
+
+    def _commit_admit(self, meta: Dict[str, Any], host: Dict[str, Any]
+                      ) -> List[Request]:
+        """Commit an admission's deferred first token (sampled from the
+        prefill logits on device; the old path blocked the admission on
+        ``int(np.asarray(...))`` of it).  The token enters ``generated``
+        one drain late, by which point the prefill compute and the D2H
+        copy have long overlapped other work."""
+        lane = meta["lane"]
+        l = self.lanes[lane]
+        if l.request is not meta["req"]:        # lane was reset meanwhile
+            return []
+        first = int(host["tok"][0])
+        self.tok[lane] = first
+        l.generated = [first]
+        if len(l.generated) >= l.request.n_tokens:
+            return [self._retire(lane)]
+        return []
+
+    def _commit_step(self, meta: Dict[str, Any], host: Dict[str, Any]
+                     ) -> List[Request]:
+        raise NotImplementedError
+
+    def _next_lane_key(self, lane: int):
+        """Assign the lane its admission-ordered sampling base key (the
+        admission sequence is identical in the sync and async pipelines,
+        so this is order-invariant where a global split-per-dispatch
+        stream would not be).  The first token folds in 2**31-1; decode
+        steps fold in the lane's own clock (always < 2**31-1)."""
+        self._admit_count += 1
+        base = jax.random.fold_in(self.key, self._admit_count)
+        self.lane_keys[lane] = np.asarray(base, np.uint32)
+        return base
+
+    def _push_admit_token(self, lane: int, req: Request, logits) -> None:
+        """Shared deferred first-token path: assign the lane's base key,
+        sample the admission token on device right behind the prefill
+        chain (never materializing it here — the old path blocked on
+        ``int(np.asarray(...))``), install the lane's sampling params and
+        push the token into the fetch ring for ``_commit_admit``.  Both
+        engines MUST use this helper — the 2**31-1 fold sentinel and the
+        entry shape are parity-critical with the base-class commit."""
+        base = self._next_lane_key(lane)
+        first_dev = sample(logits, jax.random.fold_in(base, 2**31 - 1),
+                           req.sampling)
+        self._set_lane_sampling(lane, req.sampling)
+        self.ring.push({"kind": "admit", "lane": lane, "req": req},
+                       {"tok": first_dev})
+
 
 class ContinuousEngine(_LaneEngineBase):
     """Continuous-batching generation: per-lane admission and retirement.
@@ -338,13 +463,19 @@ class ContinuousEngine(_LaneEngineBase):
                  offload_every: int = 8,
                  seed: int = 0,
                  min_prompt_bucket: int = 8,
-                 debug_lane_checks: bool = False):
+                 debug_lane_checks: bool = False,
+                 async_pipeline: bool = True):
         super().__init__(cfg, params, max_seq, n_lanes,
                          freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
                          pad_id=pad_id, seed=seed,
-                         min_prompt_bucket=min_prompt_bucket)
+                         min_prompt_bucket=min_prompt_bucket,
+                         async_pipeline=async_pipeline)
         self.max_rewinds = max_rewinds
         self.rewind_cooldown = rewind_cooldown
+        # legacy knob, no longer a wall-clock cadence: the freeze mask now
+        # rides the per-step fetch ring (~KBs) and `needs_sync` triggers
+        # the cache round-trip exactly when a page crosses fully-frozen —
+        # retained so existing callers keep constructing
         self.offload_every = offload_every
         self.debug_lane_checks = debug_lane_checks
         # donated decode state: the per-step KV/freeze buffers are reused in
@@ -384,6 +515,14 @@ class ContinuousEngine(_LaneEngineBase):
         decode state, which wholesale-resets its KV cache, freeze masks and
         recovery ladder; host-side page-offload bookkeeping for the lane's
         previous occupant is dropped."""
+        # drain first: a pending ring entry may reference state buffers
+        # (the folded-in offload freeze mask) that the admission scatter
+        # donates below — and the sync path processes step N before any
+        # later admission anyway, so ordering is unchanged.  This is also
+        # what lets _commit_step trust its entry wholesale: no ring entry
+        # ever spans an admission, so the lanes and freeze mask it carries
+        # always describe the current occupants
+        self._retired_backlog += self._drain_ring()
         if lane is None:
             lane = self._free_lane()
         l = self.lanes[lane]
@@ -412,41 +551,80 @@ class ContinuousEngine(_LaneEngineBase):
                 np.asarray(self.state.recovery.steps_seen)[lane])
         self.pos[lane] = sp
         self.step[lane] = 0
-        self.key, sub = jax.random.split(self.key)
-        first = int(np.asarray(sample(logits, sub, req.sampling))[0])
-        self.tok[lane] = first
-        self._set_lane_sampling(lane, req.sampling)
         l.request = req
-        l.generated = [first]
+        l.generated = []
         l.history = []
         l.rewinds = 0
         l.last_rewind_step = -10**9
         req.telemetry = GenerationResult([], [], [], [], [], [], [])
+        # first token deferred into the fetch ring: committed at the next
+        # drain, before the lane's first decode step is dispatched
+        self._push_admit_token(lane, req, logits)
         self.events.append(event)
+        if not self.async_pipeline:
+            self._retired_backlog += self._drain_ring()
         return lane
 
     # ---------------- stepping ---------------- #
     def step_once(self) -> List[Request]:
-        """Run one jitted decode step over all lanes; returns the requests
-        that retired this step (their lanes are immediately free)."""
+        """One engine call of the async pipeline: drain the previous
+        step's fetch-ring entry (applying its host bookkeeping), then
+        dispatch one jitted decode step over all lanes and push its fetch.
+        Returns the requests that retired during the drain (their lanes
+        are immediately free); with ``async_pipeline=False`` the entry is
+        drained in the same call, reproducing the synchronous timing."""
+        self.stats.begin_step()
+        finished = self._retired_backlog + self._drain_ring()
+        self._retired_backlog = []
         active = [i for i, l in enumerate(self.lanes) if l.request is not None]
         if not active:
-            return []
+            self.stats.cancel_step()
+            return finished
         self._note_kv_peak()
         logits, self.state, info = self._step(
             self.params, token=jnp.asarray(self.tok),
             pos=jnp.asarray(self.pos), step=jnp.asarray(self.step),
             state=self.state)
         self.wall_step += 1
-        # enqueue per-lane sampling right behind the step, then pull it and
-        # the telemetry in ONE device->host transfer (rewound lanes simply
-        # discard their draw)
-        self.key, sub = jax.random.split(self.key)
+        # enqueue per-lane sampling right behind the step, then start the
+        # async D2H of tokens + telemetry in ONE ring entry, materialized
+        # at the next drain (rewound lanes simply discard their draw)
         keys = ("n_active", "n_frozen", "entropy", "spike", "level",
                 "rr_request")
-        host = jax.device_get(dict(
+        arrays = dict(
             {k: info[k] for k in keys if k in info},
-            toks=self._sample(logits, sub, *self._lane_params())))
+            toks=self._sample(logits, jnp.asarray(self.lane_keys),
+                              jnp.asarray(self.step), *self._lane_params()))
+        offload = self.offloader is not None
+        if offload:
+            # fold the offload controller's freeze-mask read into the same
+            # async fetch (it used to be a second, blocking device pull of
+            # the whole token mask every `offload_every` steps), reduced
+            # to page granularity ON DEVICE first — page_size x less D2H,
+            # and all `sync` ever consumes.  Riding every step lets
+            # `needs_sync` gate the expensive cache round-trip instead of
+            # a wall-clock cadence, which also makes offload timing a
+            # pure function of each lane's own trajectory (async/sync
+            # pipeline parity).  The reduction output is a fresh array,
+            # so the ring entry never aliases the donated state buffers.
+            fz = self.state.freeze.frozen
+            pg = self.offloader.page_size
+            n_pages = fz.shape[2] // pg
+            arrays["frozen_pages"] = fz[:, :, :n_pages * pg].reshape(
+                fz.shape[0], fz.shape[1], n_pages, pg).all(axis=-1)
+        self.ring.push({"kind": "step", "active": active,
+                        "offload": offload}, arrays)
+        if not self.async_pipeline:
+            finished += self._drain_ring()
+        self.stats.end_step()
+        return finished
+
+    def _commit_step(self, meta: Dict[str, Any], host: Dict[str, Any]
+                     ) -> List[Request]:
+        """Apply one drained step entry: telemetry, rewinds, host offload,
+        token commits and retirement — the exact sequence (and order) the
+        synchronous path ran inline after its blocking fetch."""
+        active = meta["active"]
         get = host.get
         n_active, n_frozen = get("n_active"), get("n_frozen")
         entropy, spike, level = get("entropy"), get("spike"), get("level")
@@ -486,20 +664,32 @@ class ContinuousEngine(_LaneEngineBase):
                     rewound.add(i)
 
         # ---- page-batched host offload ----
-        if self.offloader is not None \
-                and self.wall_step % self.offload_every == 0:
-            frozen = np.asarray(self.state.freeze.frozen)
-            idle = [i for i, l in enumerate(self.lanes) if l.request is None]
+        if meta["offload"]:
+            # admit() drains the ring before scattering a new occupant, so
+            # this (page-reduced) mask always predates at most the
+            # retirements applied a few lines below — never a re-admission
+            frozen = host["frozen_pages"]
+            idle = [i for i, l in enumerate(self.lanes)
+                    if l.request is None]
             if idle:   # idle lanes decode garbage; never offload it
                 frozen = frozen.copy()
                 frozen[:, idle, :] = False
-            cache = KVCache(k=self.state.cache_k, v=self.state.cache_v)
-            cache = self.offloader.sync(cache, frozen)
-            self.state = self.state._replace(cache_k=cache.k, cache_v=cache.v)
-        for i in active:
-            self.lanes[i].request.telemetry.offloaded_tokens.append(
-                self.offloader.offloaded_tokens_lane(i)
-                if self.offloader else 0)
+            if self.offloader.needs_sync(frozen, reduced=True):
+                t0 = time.perf_counter()
+                cache = KVCache(k=self.state.cache_k, v=self.state.cache_v)
+                cache = self.offloader.sync(cache, frozen, reduced=True)
+                self.state = self.state._replace(cache_k=cache.k,
+                                                 cache_v=cache.v)
+                self.stats.note_blocking(
+                    cache.k.nbytes + cache.v.nbytes, d2h=True,
+                    seconds=time.perf_counter() - t0)
+        if self.offloader is not None:
+            for i in active:
+                self.lanes[i].request.telemetry.offloaded_tokens.append(
+                    self.offloader.offloaded_tokens_lane(i))
+        else:
+            for i in active:
+                self.lanes[i].request.telemetry.offloaded_tokens.append(0)
 
         # ---- commit sampled tokens, retire finished lanes ----
         finished = []
@@ -577,6 +767,20 @@ class PagedContinuousEngine(_LaneEngineBase):
       (`PagedController.write_lane`).  A long prompt therefore never
       head-of-line-blocks the batch.
 
+    * **Async DMA pipeline** (``async_pipeline=True``, the default) — the
+      per-step fetch rides the double-buffered ring (module docstring),
+      every boundary tick is ONE batched device_get/device_put pair with
+      metadata-only pushes when no K/V moved, and ``speculative_slots``
+      staging slots per (layer, lane) hold prefetched likely-thaw pages
+      (``thaw_urgency`` trend + ``thaw_priority`` ranking) so an FR thaw
+      installs as a page-table remap plus a device-side copy instead of a
+      blocking upload.  ``async_pipeline=False`` is the same code with a
+      depth-0 ring: identical host decisions, and bit-identical tokens
+      under a deterministic chunk split (``burst_prefill=False`` — see
+      the module docstring; the staging slots are subtracted from the
+      jitted step's headroom math, so a P+S pool with S reserved behaves
+      exactly like a plain P pool).
+
     Restricted to attention-only decoder stacks (chunked prefill would
     need cross-chunk recurrent-state threading for mamba/rwkv hybrids).
 
@@ -610,22 +814,43 @@ class PagedContinuousEngine(_LaneEngineBase):
                  rewind_cooldown: int = 32,
                  pad_id: int = 0,
                  seed: int = 0,
-                 min_prompt_bucket: int = 8):
+                 min_prompt_bucket: int = 8,
+                 async_pipeline: bool = True,
+                 speculative_thaw: Optional[bool] = None,
+                 speculative_slots: int = 3,
+                 burst_prefill: bool = True):
         super().__init__(cfg, params, max_seq, n_lanes,
                          freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
                          pad_id=pad_id, seed=seed,
-                         min_prompt_bucket=min_prompt_bucket)
+                         min_prompt_bucket=min_prompt_bucket,
+                         async_pipeline=async_pipeline)
         assert max_active_pages >= 3, "pool needs tail + swap headroom"
         assert prefill_chunk >= 1
-        self.P = max_active_pages
+        self.P = max_active_pages          # usable (allocator-visible) pool
         self.page = self.fcfg.page_size
         self.prefill_chunk = prefill_chunk
+        # load-adaptive burst chunks make the chunk split (and with it the
+        # flash-attention summation order) depend on engine busyness;
+        # disable for runs that must be bit-reproducible across pipelines
+        self.burst_prefill = burst_prefill
         self.max_rewinds = max_rewinds
         self.rewind_cooldown = rewind_cooldown
         self.pending_thaws: set = set()   # lanes owed a host thaw (FR level)
+        # speculative-thaw staging: S extra physical slots per (layer, lane)
+        # hold prefetched stashed pages so a thaw is a page-table remap.
+        # The jitted step subtracts them from its headroom math
+        # (reserved_slots), so a P+S pool with S reserved is step-for-step
+        # identical to a plain P pool — async and sync arms stay
+        # token-parity even though only the async arm stages.
+        if speculative_thaw is None:
+            speculative_thaw = async_pipeline
+        self.S_stage = speculative_slots if (speculative_thaw
+                                             and enable_freeze) else 0
+        self.P_total = self.P + self.S_stage
         self._step = jax.jit(functools.partial(
             MD.decode_step_paged, cfg=cfg, freeze_cfg=self.fcfg,
-            enable_freeze=enable_freeze), donate_argnames=("state",))
+            enable_freeze=enable_freeze, reserved_slots=self.S_stage),
+            donate_argnames=("state",))
         self._rewind = jax.jit(
             functools.partial(MD.rewind_paged_lane, cfg, page=self.page),
             donate_argnames=("state",))
@@ -633,17 +858,47 @@ class PagedContinuousEngine(_LaneEngineBase):
                               donate_argnames=("state",))
         self._reset_lane = jax.jit(functools.partial(MD.reset_paged_lane, cfg),
                                    donate_argnames=("state",))
-        self._lane_read = jax.jit(
-            lambda arrs, lane: tuple(
-                jax.lax.dynamic_slice_in_dim(a, lane, 1, axis=1)
-                for a in arrs))
-        self._lane_write = jax.jit(
-            lambda arrs, lane, lane_arrs: tuple(
-                jax.lax.dynamic_update_slice_in_dim(
-                    big, small.astype(big.dtype), lane, axis=1)
-                for big, small in zip(arrs, lane_arrs)),
+        # batched boundary-tick DMA: ONE gather + device_get pulls every
+        # boundary lane's pool slice (all layers stacked), ONE scatter +
+        # device_put pushes them back.  The lane-index vector is padded to
+        # n_lanes (repeating the first lane) so each tuple shape compiles
+        # exactly once; duplicate scatter indices write identical columns.
+        self._gather_lanes = jax.jit(
+            lambda arrs, idx: tuple(jnp.take(a, idx, axis=1) for a in arrs))
+        self._scatter_lanes = jax.jit(
+            lambda arrs, idx, vals: tuple(
+                a.at[:, idx].set(v.astype(a.dtype))
+                for a, v in zip(arrs, vals)),
             donate_argnums=(0,))
-        self.state = MD.init_paged_decode_state(cfg, n_lanes, max_active_pages)
+        # speculative staging write: scatter one page of K/V per layer into
+        # the lane's staging slots (valid=False layers are a no-op)
+        def _stage_write_fn(state, lane, slots, new_k, new_v, valid):
+            li = jnp.arange(state.k.shape[0])
+            slots = jnp.maximum(slots, 0)
+            sel = valid[:, None, None, None]
+            cur_k = state.k[li, lane, slots]
+            cur_v = state.v[li, lane, slots]
+            k = state.k.at[li, lane, slots].set(
+                jnp.where(sel, new_k.astype(state.k.dtype), cur_k))
+            v = state.v.at[li, lane, slots].set(
+                jnp.where(sel, new_v.astype(state.v.dtype), cur_v))
+            return state._replace(k=k, v=v)
+        self._stage_write = jax.jit(_stage_write_fn,
+                                    donate_argnames=("state",))
+        # staged installs: ONE device-side batched copy staging slots ->
+        # target slots per tick (padded to a fixed width so it compiles
+        # once; padding rows copy slot 0 onto itself — a no-op)
+        def _remap_copy_fn(state, layers, lanes, srcs, dsts):
+            k = state.k.at[layers, lanes, dsts].set(
+                state.k[layers, lanes, srcs])
+            v = state.v.at[layers, lanes, dsts].set(
+                state.v[layers, lanes, srcs])
+            return state._replace(k=k, v=v)
+        self._remap_copy = jax.jit(_remap_copy_fn,
+                                   donate_argnames=("state",))
+        self._remap_width = 8
+        self.state = MD.init_paged_decode_state(
+            cfg, n_lanes, max_active_pages, staging_slots=self.S_stage)
         self.L_attn = max(self.state.page_table.shape[0], 1)
         assert self.state.page_table.shape[0] == cfg.num_layers, \
             "paged continuous batching requires an attention-only stack"
@@ -651,6 +906,10 @@ class PagedContinuousEngine(_LaneEngineBase):
                                    max_active_pages=max_active_pages)
         self.tail_slot = np.zeros((self.L_attn, n_lanes), np.int32)
         self.prefills: Dict[int, _PendingPrefill] = {}
+        self._urgency = np.zeros(n_lanes, np.float32)   # thaw trend / lane
+        self.n_boundary_ticks = 0   # boundary maintenance passes (each one
+                                    # batched pull + one push)
+        self.n_kv_pushes = 0        # pushes that had to carry pool K/V
 
     @property
     def kv_device_bytes(self) -> int:
@@ -667,39 +926,78 @@ class PagedContinuousEngine(_LaneEngineBase):
                    for pp in self.prefills.values())
 
     # ---------------- device <-> host pool transfer ---------------- #
-    # Only the affected lanes' pool slices cross the host<->device boundary:
-    # page maintenance is per-lane, so a 1-lane page boundary moves
-    # (L, 1, P, page) arrays, not the whole (L, n_lanes, ...) pool.  The
-    # write path is a donated dynamic_update_slice — in place on backends
-    # with donation, a contiguous copy elsewhere.
+    # Only the affected lanes' pool slices cross the host<->device boundary
+    # — and they cross it BATCHED: a boundary tick with any number of lanes
+    # issues exactly one device_get (a jitted gather over the padded
+    # lane-index vector stacks all lanes and layers) and one device_put
+    # (a donated scatter).  Pulled data lands in reused host staging
+    # buffers (pinned memory on a real TPU); the push carries K/V only
+    # when the controller actually wrote some (kv_dirty) — a tick that
+    # only flipped metadata (page-table remaps, freeze counters) moves a
+    # few KB, not the pool.
     _POOL_FIELDS = ("k", "v", "page_table", "slot_mask")
     _FZ_FIELDS = ("c", "d", "frozen", "frozen_at")
+    _META_FIELDS = ("page_table", "slot_mask") + _FZ_FIELDS
 
-    def _state_arrs(self):
+    def _state_arrs(self, fields=None):
         st = self.state
-        return tuple(getattr(st, f) for f in self._POOL_FIELDS) + \
-            tuple(st.freeze)
+        fields = fields or (self._POOL_FIELDS + self._FZ_FIELDS)
+        return tuple(getattr(st, f) if hasattr(st, f)
+                     else getattr(st.freeze, f) for f in fields)
+
+    def _padded_idx(self, lanes: List[int]) -> np.ndarray:
+        idx = np.full(self.n_lanes, lanes[0], np.int32)
+        idx[:len(lanes)] = lanes
+        return idx
 
     def _pull_lanes(self, lanes: List[int]) -> Tuple[dict, dict]:
-        cols = [jax.device_get(self._lane_read(self._state_arrs(),
-                                               jnp.int32(lane)))
-                for lane in lanes]
-        cat = lambda i: np.concatenate([c[i] for c in cols], axis=1)
-        pool = {f: cat(i) for i, f in enumerate(self._POOL_FIELDS)}
-        fstate = {f: cat(len(self._POOL_FIELDS) + i)
-                  for i, f in enumerate(self._FZ_FIELDS)}
-        return pool, fstate
+        m = len(lanes)
+        dev = self._gather_lanes(self._state_arrs(),
+                                 jnp.asarray(self._padded_idx(lanes)))
+        t0 = time.perf_counter()
+        host = jax.device_get(dev)          # ONE D2H for all lanes + layers
+        dt = time.perf_counter() - t0
+        names = self._POOL_FIELDS + self._FZ_FIELDS
+        out = {}
+        for name, arr in zip(names, host):
+            out[name] = self.staging.put(f"pull_{name}_{m}", arr[:, :m])
+        self.stats.note_blocking(sum(a.nbytes for a in out.values()),
+                                 d2h=True, seconds=dt)
+        return ({f: out[f] for f in self._POOL_FIELDS},
+                {f: out[f] for f in self._FZ_FIELDS})
 
-    def _push_lanes(self, pool: dict, fstate: dict, lanes: List[int]) -> None:
-        arrs = self._state_arrs()
-        for j, lane in enumerate(lanes):
-            sl = [pool[f][:, j:j + 1] for f in self._POOL_FIELDS] + \
-                 [fstate[f][:, j:j + 1] for f in self._FZ_FIELDS]
-            arrs = self._lane_write(arrs, jnp.int32(lane),
-                                    tuple(jnp.asarray(s) for s in sl))
+    def _push_lanes(self, pool: dict, fstate: dict, lanes: List[int],
+                    kv: bool = True) -> None:
+        m = len(lanes)
+        idx = self._padded_idx(lanes)
+        if kv:
+            self.n_kv_pushes += 1
+        fields = (self._POOL_FIELDS + self._FZ_FIELDS) if kv \
+            else self._META_FIELDS
+        vals = []
+        nbytes = 0
+        for f in fields:
+            src = pool[f] if f in pool else fstate[f]
+            buf = self.staging.buf(f"push_{f}", (src.shape[0], self.n_lanes)
+                                   + src.shape[2:], src.dtype)
+            buf[:, :m] = src
+            if m < self.n_lanes:        # duplicate scatter columns must
+                buf[:, m:] = src[:, :1]  # carry identical data
+            vals.append(buf)
+            nbytes += src.nbytes
+        arrs = self._scatter_lanes(self._state_arrs(fields),
+                                   jnp.asarray(idx),
+                                   tuple(jnp.asarray(v) for v in vals))
+        upd = dict(zip(fields, arrs))
+        fz = PageFreezeState(*(upd.get(f, getattr(self.state.freeze, f))
+                               for f in self._FZ_FIELDS))
         self.state = self.state._replace(
-            **dict(zip(self._POOL_FIELDS, arrs[:4])),
-            freeze=PageFreezeState(*arrs[4:]))
+            freeze=fz, **{f: upd[f] for f in self._POOL_FIELDS
+                          if f in upd})
+        # the K/V of a metadata-only push never crossed the bus: remapped
+        # staging slots already hold their page data on device
+        self.stats.note_blocking(nbytes, d2h=False) if kv else \
+            self.stats.note_async(nbytes, d2h=False)
 
     # ---------------- admission (chunked) ---------------- #
     def admit(self, req: Request, lane: Optional[int] = None) -> int:
@@ -781,7 +1079,7 @@ class PagedContinuousEngine(_LaneEngineBase):
         self._note_kv_peak(self._scratch_bytes())
         rem = pp.sp - pp.done
         c = self.prefill_chunk
-        if not busy:
+        if not busy and self.burst_prefill:
             while c * 2 <= rem:
                 c *= 2
         c = min(c, rem)
@@ -803,6 +1101,7 @@ class PagedContinuousEngine(_LaneEngineBase):
         `PagedController.write_lane` wholesale-resets exactly this lane."""
         pp = self.prefills.pop(lane)
         sp, page, P, L = pp.sp, self.page, self.P, self.L_attn
+        P_total = self.P_total
         # wholesale lane reset first: beyond the pool fields the push below
         # overwrites, this clears the lane's recovery ladder — the decode
         # steps that ran while this admission was in flight advanced the
@@ -827,14 +1126,14 @@ class PagedContinuousEngine(_LaneEngineBase):
         # host-side instead of pulling the stale device copy first
         kvh, hd = ck.shape[-2:]
         dt = np.dtype(self.state.k.dtype)
-        pool = {"k": np.zeros((L, 1, P, page, kvh, hd), dt),
-                "v": np.zeros((L, 1, P, page, kvh, hd), dt),
-                "page_table": np.full((L, 1, P), -1, np.int32),
-                "slot_mask": np.zeros((L, 1, P, page), bool)}
-        fstate = {"c": np.zeros((L, 1, P), np.int32),
-                  "d": np.zeros((L, 1, P), np.int32),
-                  "frozen": np.zeros((L, 1, P), bool),
-                  "frozen_at": np.zeros((L, 1, P), np.int32)}
+        pool = {"k": np.zeros((L, 1, P_total, page, kvh, hd), dt),
+                "v": np.zeros((L, 1, P_total, page, kvh, hd), dt),
+                "page_table": np.full((L, 1, P_total), -1, np.int32),
+                "slot_mask": np.zeros((L, 1, P_total, page), bool)}
+        fstate = {"c": np.zeros((L, 1, P_total), np.int32),
+                  "d": np.zeros((L, 1, P_total), np.int32),
+                  "frozen": np.zeros((L, 1, P_total), bool),
+                  "frozen_at": np.zeros((L, 1, P_total), np.int32)}
         # write_lane drops the lane's host store, so overflow pages must be
         # stashed AFTER it or they'd be deleted before decode ever starts
         self.ctl.write_lane(pool, fstate, 0,
@@ -847,16 +1146,22 @@ class PagedContinuousEngine(_LaneEngineBase):
             for layer in range(L):
                 self.ctl.stash(layer, lane, gp, ck[layer, gp], cv[layer, gp],
                                d=1)
+        # the last S_stage physical slots start out as the lane's staging
+        # slots (write_lane only ever fills slots 0..P-1); drop_lane inside
+        # write_lane already forgot any staged keys of the lane's previous
+        # occupant
+        for layer in range(L):
+            self.ctl.stage_slots[(layer, lane)] = \
+                list(range(self.P, P_total))
         self._push_lanes(pool, fstate, [lane])
         if sp % page:                       # partial tail page is resident
             self.tail_slot[:, lane] = r - 1
         self.pos[lane] = sp                 # sp % page == 0 -> the boundary
         self.step[lane] = 0                 # alloc runs before the next step
-        self.key, sub = jax.random.split(self.key)
-        first = int(np.asarray(sample(pp.logits, sub, pp.req.sampling))[0])
-        self.tok[lane] = first
-        self._set_lane_sampling(lane, pp.req.sampling)
-        self.lanes[lane].generated = [first]
+        # first token deferred into the fetch ring: sampling stays on
+        # device behind the last prefill chunk; the host commits the
+        # value at the next drain, before the first decode dispatch
+        self._push_admit_token(lane, pp.req, pp.logits)
         self.events.append({"event": "admit", "uid": pp.req.uid,
                             "lane": lane, "wall_step": self.wall_step})
 
@@ -870,47 +1175,24 @@ class PagedContinuousEngine(_LaneEngineBase):
         return tuple(range(max(0, cp - window_pages), cp + 1))
 
     def step_once(self) -> List[Request]:
-        """One engine step: per-lane page-boundary maintenance (host swap
-        tick, pending recovery thaws, tail allocation), a jitted paged
-        decode step over the resident lanes, recovery servicing (page
-        rewinds), then one prefill chunk for every admission in flight.
-        Returns retired requests."""
+        """One engine call of the async pipeline: drain the previous
+        step's fetch-ring entry (telemetry, thaw requests, page rewinds,
+        token commits, retirement), then per-lane page-boundary
+        maintenance (ONE batched pull, host swap tick, pending thaws, tail
+        allocation, ONE batched push — metadata-only if no K/V moved), a
+        jitted paged decode step over the resident lanes with its fetch
+        pushed asynchronously behind it, speculative thaw staging, and one
+        prefill chunk for every admission in flight.  Returns retired
+        requests (from the drain; same-call with ``async_pipeline=False``)."""
+        self.stats.begin_step()
+        finished = self._retired_backlog + self._drain_ring()
+        self._retired_backlog = []
         decode_lanes = [i for i, l in enumerate(self.lanes)
                         if l.request is not None and i not in self.prefills]
-        finished: List[Request] = []
         if decode_lanes:
             boundary = [i for i in decode_lanes if self.pos[i] % self.page == 0]
             if boundary:
-                pool, fstate = self._pull_lanes(boundary)
-                keep = {bi: self._keep_gids(i)
-                        for bi, i in enumerate(boundary)}
-                thaw = tuple(bi for bi, i in enumerate(boundary)
-                             if i in self.pending_thaws)
-                self.ctl.tick(pool, fstate, step=self.wall_step,
-                              lane_ids=tuple(boundary),
-                              thaw_lanes=thaw, keep_gids=keep)
-                self.pending_thaws -= set(boundary)
-                for bi, i in enumerate(boundary):
-                    slots = self.ctl.alloc_tail_lane(
-                        pool, bi, int(self.pos[i]) // self.page)
-                    if slots is None and self.enable_freeze:
-                        # recovery may have un-frozen every page the timer
-                        # pass would have swapped out; the host is the
-                        # bound's enforcer of last resort — stash the
-                        # coldest page and retry
-                        self.ctl.force_free_slot(pool, fstate, bi, i,
-                                                 keep_gids=keep[bi])
-                        slots = self.ctl.alloc_tail_lane(
-                            pool, bi, int(self.pos[i]) // self.page)
-                    if slots is None:
-                        raise RuntimeError(
-                            f"lane {i}: page pool exhausted"
-                            + (" (forced freeze should have kept headroom)"
-                               if self.enable_freeze else
-                               " — freezing is disabled, so nothing swaps "
-                               "out; admission should have rejected this"))
-                    self.tail_slot[:, i] = slots
-                self._push_lanes(pool, fstate, boundary)
+                self._boundary_tick(boundary)
             live = np.zeros(self.n_lanes, bool)
             live[decode_lanes] = True
             self._note_kv_peak(self._scratch_bytes())
@@ -920,73 +1202,259 @@ class PagedContinuousEngine(_LaneEngineBase):
                 tail_slot=jnp.asarray(self.tail_slot), state=self.state,
                 live=jnp.asarray(live))
             self.wall_step += 1
-            self.key, sub = jax.random.split(self.key)
             keys = ("n_active_slots_lane", "n_frozen_pages_lane", "entropy",
-                    "spike", "level", "rr_request", "thaw_request")
-            host = jax.device_get(dict(
+                    "spike", "level", "ema_entropy", "rr_request",
+                    "thaw_request")
+            arrays = dict(
                 {k: info[k] for k in keys if k in info},
-                toks=self._sample(logits, sub, *self._lane_params())))
-            toks = host["toks"]
-            get = host.get
-            act, fro = get("n_active_slots_lane"), get("n_frozen_pages_lane")
-            entropy, spike, level = get("entropy"), get("spike"), get("level")
-            rr, thaw_req = get("rr_request"), get("thaw_request")
-
-            for i in decode_lanes:
-                res = self.lanes[i].request.telemetry
-                if act is not None:
-                    res.active_kv.append(float(act[i]) / self.L_attn)
-                    res.frozen_kv.append(
-                        float(fro[i]) * self.page / self.L_attn)
-                else:
-                    res.active_kv.append(float(self.pos[i] + 1))
-                    res.frozen_kv.append(0.0)
-                res.total_kv.append(int(self.pos[i]) + 1)
-                res.offloaded_tokens.append(self._offloaded_tokens_lane(i))
-                if entropy is not None:
-                    res.entropy.append(float(entropy[i]))
-                    if spike is not None and bool(spike[i]):
-                        res.recovery_events.append({
-                            "step": int(self.step[i]),
-                            "level": int(level[i]),
-                            "entropy": float(entropy[i]),
-                        })
-
-            # ---- recovery servicing: host thaws + page-aware rewinds ----
-            if thaw_req is not None:
-                for i in decode_lanes:
-                    if bool(thaw_req[i]):
-                        # serviced by PagedController.thaw_lane at the
-                        # lane's next page-boundary tick
-                        self.pending_thaws.add(i)
-            rewound = set()
-            if rr is not None:
-                for i in decode_lanes:
-                    l = self.lanes[i]
-                    if bool(rr[i]) and len(l.history) >= self.fcfg.rewalk_tokens \
-                            and l.rewinds < self.max_rewinds \
-                            and int(self.step[i]) - l.last_rewind_step \
-                                >= self.rewind_cooldown \
-                            and self._rewind_lane(i):
-                        rewound.add(i)
-
-            for i in decode_lanes:
-                if i in rewound:
-                    continue
-                l = self.lanes[i]
-                t = int(toks[i])
-                l.history.append((t, int(self.pos[i])))
-                l.generated.append(t)
-                self.tok[i] = t
-                self.pos[i] += 1
-                self.step[i] += 1
-                if len(l.generated) >= l.request.n_tokens:
-                    finished.append(self._retire(i))
+                toks=self._sample(logits, jnp.asarray(self.lane_keys),
+                                  jnp.asarray(self.step),
+                                  *self._lane_params()))
+            self.ring.push({"kind": "step", "active": list(decode_lanes)},
+                           arrays)
+            # start copying likely-thaw pages into the staging slots while
+            # the step computes — by the time an FR thaw fires at a
+            # boundary tick, its pages install as a page-table remap
+            self._maybe_prefetch(decode_lanes)
 
         # ---- chunked prefill: one chunk per admission in flight ---- #
         for lane in list(self.prefills):
             self._prefill_tick(lane, busy=bool(decode_lanes))
+        if not self.async_pipeline:
+            finished += self._drain_ring()
+        if decode_lanes:
+            self.stats.end_step()
+        else:
+            self.stats.cancel_step()
         return finished
+
+    def _boundary_tick(self, boundary: List[int]) -> None:
+        """Page-boundary maintenance for `boundary` lanes: one batched
+        pull, the host controller pass (timer swaps, pending thaws, tail
+        allocation with the force-free backstop), one batched push, then
+        the queued device-side staging remaps."""
+        self.n_boundary_ticks += 1
+        self.ctl.begin_tick()
+        self._prune_staged()
+        pool, fstate = self._pull_lanes(boundary)
+        keep = {bi: self._keep_gids(i) for bi, i in enumerate(boundary)}
+        thaw = tuple(bi for bi, i in enumerate(boundary)
+                     if i in self.pending_thaws)
+        self.ctl.tick(pool, fstate, step=self.wall_step,
+                      lane_ids=tuple(boundary),
+                      thaw_lanes=thaw, keep_gids=keep)
+        self.pending_thaws -= set(boundary)
+        for bi, i in enumerate(boundary):
+            slots = self.ctl.alloc_tail_lane(
+                pool, bi, int(self.pos[i]) // self.page, lane_id=i)
+            if slots is None and self.enable_freeze:
+                # recovery may have un-frozen every page the timer
+                # pass would have swapped out; the host is the
+                # bound's enforcer of last resort — stash the
+                # coldest page and retry
+                self.ctl.force_free_slot(pool, fstate, bi, i,
+                                         keep_gids=keep[bi])
+                slots = self.ctl.alloc_tail_lane(
+                    pool, bi, int(self.pos[i]) // self.page, lane_id=i)
+            if slots is None:
+                raise RuntimeError(
+                    f"lane {i}: page pool exhausted"
+                    + (" (forced freeze should have kept headroom)"
+                       if self.enable_freeze else
+                       " — freezing is disabled, so nothing swaps "
+                       "out; admission should have rejected this"))
+            self.tail_slot[:, i] = slots
+        self._push_lanes(pool, fstate, boundary, kv=self.ctl.kv_dirty)
+        self._run_remaps()
+
+    def _commit_step(self, meta: Dict[str, Any], host: Dict[str, Any]
+                     ) -> List[Request]:
+        """Apply one drained paged-step entry — the exact sequence (and
+        order) the synchronous path ran inline after its blocking fetch:
+        telemetry, thaw requests, page-aware rewinds, token commits,
+        retirement."""
+        decode_lanes = meta["active"]
+        get = host.get
+        toks = host["toks"]
+        act, fro = get("n_active_slots_lane"), get("n_frozen_pages_lane")
+        entropy, spike, level = get("entropy"), get("spike"), get("level")
+        rr, thaw_req = get("rr_request"), get("thaw_request")
+
+        for i in decode_lanes:
+            res = self.lanes[i].request.telemetry
+            if act is not None:
+                res.active_kv.append(float(act[i]) / self.L_attn)
+                res.frozen_kv.append(
+                    float(fro[i]) * self.page / self.L_attn)
+            else:
+                res.active_kv.append(float(self.pos[i] + 1))
+                res.frozen_kv.append(0.0)
+            res.total_kv.append(int(self.pos[i]) + 1)
+            res.offloaded_tokens.append(self._offloaded_tokens_lane(i))
+            if entropy is not None:
+                res.entropy.append(float(entropy[i]))
+                if spike is not None and bool(spike[i]):
+                    res.recovery_events.append({
+                        "step": int(self.step[i]),
+                        "level": int(level[i]),
+                        "entropy": float(entropy[i]),
+                    })
+        # thaw-urgency trend for the speculative prefetcher (only the
+        # escalation level and the entropy-vs-baseline ratio matter, both
+        # of which ride the same ring entry)
+        if entropy is not None and get("ema_entropy") is not None:
+            from repro.core.recovery import thaw_urgency
+            urg = thaw_urgency(level, entropy, get("ema_entropy"))
+            for i in decode_lanes:
+                self._urgency[i] = urg[i]
+
+        # ---- recovery servicing: host thaws + page-aware rewinds ----
+        if thaw_req is not None:
+            for i in decode_lanes:
+                if bool(thaw_req[i]):
+                    # serviced by PagedController.thaw_lane at the
+                    # lane's next page-boundary tick
+                    self.pending_thaws.add(i)
+        rewound = set()
+        if rr is not None:
+            for i in decode_lanes:
+                l = self.lanes[i]
+                if bool(rr[i]) and len(l.history) >= self.fcfg.rewalk_tokens \
+                        and l.rewinds < self.max_rewinds \
+                        and int(self.step[i]) - l.last_rewind_step \
+                            >= self.rewind_cooldown \
+                        and self._rewind_lane(i):
+                    rewound.add(i)
+
+        finished = []
+        for i in decode_lanes:
+            if i in rewound:
+                continue
+            l = self.lanes[i]
+            t = int(toks[i])
+            l.history.append((t, int(self.pos[i])))
+            l.generated.append(t)
+            self.tok[i] = t
+            self.pos[i] += 1
+            self.step[i] += 1
+            if len(l.generated) >= l.request.n_tokens:
+                finished.append(self._retire(i))
+        return finished
+
+    # ---------------- speculative thaw staging ---------------- #
+    def _prune_staged(self) -> None:
+        """Forget staged copies whose host page vanished (rewind drop,
+        lane reset) — their staging slots become available again."""
+        stale = [k for k in self.ctl.staged_keys
+                 if k not in self.ctl.frozen_meta]
+        for k in stale:
+            del self.ctl.staged_keys[k]
+
+    def _run_remaps(self) -> None:
+        """Execute the controller's queued staging-slot remaps as ONE
+        batched device-side page copy (staging slot -> the install's
+        target slot).  Nothing crosses the host<->device boundary — this
+        is what makes a staged thaw "remap-only" — and the consumed
+        staging slots are immediately reusable for the next prefetch."""
+        remaps = self.ctl.pending_remaps
+        self.ctl.pending_remaps = []
+        W = self._remap_width
+        for i in range(0, len(remaps), W):
+            chunk = remaps[i:i + W]
+            ls, lanes = np.zeros(W, np.int32), np.zeros(W, np.int32)
+            # padding rows self-copy a staging slot — never a real remap's
+            # destination, so the batched scatter stays conflict-free
+            srcs = np.full(W, self.P, np.int32)
+            dsts = np.full(W, self.P, np.int32)
+            for j, (l, lane, src, dst) in enumerate(chunk):
+                ls[j], lanes[j], srcs[j], dsts[j] = l, lane, src, dst
+            self.state = self._remap_copy(
+                self.state, jnp.asarray(ls), jnp.asarray(lanes),
+                jnp.asarray(srcs), jnp.asarray(dsts))
+
+    def _maybe_prefetch(self, decode_lanes: List[int]) -> None:
+        """Dispatch speculative staging uploads for lanes trending toward
+        an FR thaw: the highest-urgency lane's top thaw candidates (by
+        ``recovery.thaw_priority`` — the exact ranking ``thaw_lane`` will
+        use) are copied into its staging slots.  Budget: at most
+        ``S_stage`` staged *pages* (gids) per step; each is ONE batched
+        dispatch carrying that page's K/V for every attention layer that
+        has it stashed, i.e. up to ``S_stage * L_attn`` page-sized
+        uploads per step on a deep stack.  The H2D copies are dispatched
+        asynchronously behind the decode step; they never change page
+        tables, so a misprediction costs bandwidth, not correctness."""
+        if not self.S_stage:
+            return
+        # stage for lanes that WILL thaw (request pending, boundary tick
+        # not yet reached) and for lanes trending within one spike of FR
+        # (urgency >= WR) — looser gating buys little and costs a state
+        # dispatch per staged page
+        from repro.core.recovery import WR
+        cands = [i for i in decode_lanes
+                 if i in self.pending_thaws or self._urgency[i] >= WR]
+        cands.sort(key=lambda i: (i not in self.pending_thaws,
+                                  -self._urgency[i]))
+        budget = self.S_stage
+        for lane in cands:
+            while budget and self._prefetch_lane(lane):
+                budget -= 1
+            if not budget:
+                return
+
+    def _prefetch_lane(self, lane: int) -> bool:
+        from repro.core.recovery import thaw_priority
+        metas = [(key, m) for key, m in self.ctl.frozen_meta.items()
+                 if key[1] == lane]
+        if not metas:
+            return False
+        gid_score: Dict[int, float] = {}
+        for (l, _, gid), m in metas:
+            s = thaw_priority(m["c"], m["frozen_at"])
+            gid_score[gid] = max(gid_score.get(gid, -np.inf), s)
+        staged_gids = {k[2] for k in self.ctl.staged_keys if k[1] == lane}
+        occupied = {}
+        for k, slot in self.ctl.staged_keys.items():
+            if k[1] == lane:
+                occupied.setdefault(k[0], set()).add(slot)
+        want = sorted(gid_score, key=lambda g: -gid_score[g])[:self.S_stage]
+        page, kvh, hd = self.state.k.shape[3:]
+        for gid in want:
+            if gid in staged_gids:
+                continue
+            slots = np.full(self.L_attn, -1, np.int32)
+            valid = np.zeros(self.L_attn, bool)
+            k_buf = self.staging.buf("stage_k",
+                                     (self.L_attn, page, kvh, hd),
+                                     np.dtype(self.state.k.dtype))
+            v_buf = self.staging.buf("stage_v",
+                                     (self.L_attn, page, kvh, hd),
+                                     np.dtype(self.state.v.dtype))
+            for l in range(self.L_attn):
+                key = (l, lane, gid)
+                if key not in self.ctl.frozen_meta:
+                    continue
+                avail = [s for s in self.ctl.stage_slots.get((l, lane), [])
+                         if s not in occupied.get(l, ())]
+                if not avail:
+                    continue
+                kk, vv = self.ctl.store[key]
+                k_buf[l] = kk
+                v_buf[l] = vv
+                slots[l] = avail[0]
+                valid[l] = True
+            if not valid.any():
+                continue
+            self.state = self._stage_write(
+                self.state, jnp.int32(lane), jnp.asarray(slots),
+                jnp.asarray(k_buf), jnp.asarray(v_buf), jnp.asarray(valid))
+            for l in range(self.L_attn):
+                if valid[l]:
+                    self.ctl.staged_keys[(l, lane, gid)] = int(slots[l])
+            self.stats.note_async(
+                int(valid.sum()) * (k_buf[0].nbytes + v_buf[0].nbytes),
+                d2h=False)
+            return True
+        return False
 
     def _rewind_lane(self, lane: int) -> bool:
         """Rewalk Regeneration on the paged path: rewind ``rewalk_tokens``,
@@ -1009,6 +1477,8 @@ class PagedContinuousEngine(_LaneEngineBase):
             # mid-page landing: the tail page must be resident + un-frozen
             # in every layer before decode resumes (it may have been
             # frozen or even stashed if the freeze window is one page)
+            self.ctl.begin_tick()
+            self._prune_staged()
             pool, fstate = self._pull_lanes([lane])
             ok = self.ctl.ensure_resident(pool, fstate, 0, lane, gid_t,
                                           keep_gids=keep)
@@ -1016,7 +1486,8 @@ class PagedContinuousEngine(_LaneEngineBase):
             # mutated both the pulled copies and the controller's host
             # bookkeeping, and dropping the copies would desynchronize
             # them (duplicate swap-ins / unreachable host pages)
-            self._push_lanes(pool, fstate, [lane])
+            self._push_lanes(pool, fstate, [lane], kv=self.ctl.kv_dirty)
+            self._run_remaps()
             if not ok:
                 return False
             for lyr in range(self.L_attn):
@@ -1042,10 +1513,11 @@ class PagedContinuousEngine(_LaneEngineBase):
         l.generated = []
         l.history = []
         # unmap the lane's pages on device (attention skips them), drop its
-        # host store and any pending thaw so nothing leaks into the lane's
-        # next occupant
+        # host store, staged prefetches and any pending thaw so nothing
+        # leaks into the lane's next occupant
         self.state = self._reset_lane(state=self.state, lane=jnp.int32(lane))
         self.ctl.drop_lane(lane)
         self.pending_thaws.discard(lane)
+        self._urgency[lane] = 0.0
         self._set_lane_sampling(lane, SamplingParams.greedy())
         return req

@@ -52,6 +52,27 @@ def params_arrays(params: Sequence[SamplingParams]):
             jnp.asarray([p.top_p for p in params], jnp.float32))
 
 
+def sample_batched_perlane(logits: jnp.ndarray,
+                           lane_keys: jnp.ndarray,    # (B, 2) uint32 bases
+                           step: jnp.ndarray,         # (B,) i32 lane clocks
+                           temperature: jnp.ndarray,
+                           top_k: jnp.ndarray,
+                           top_p: jnp.ndarray) -> jnp.ndarray:
+    """`sample_batched` with order-invariant per-lane randomness: each
+    lane's draw uses ``fold_in(lane_key, step)`` of its own base key and
+    its own decode clock, so the token a lane samples at logical step k
+    does not depend on which global dispatch the step rode in.  This is
+    what makes the async DMA pipeline token-identical to the synchronous
+    path: the two interleave admissions and steps differently, and a
+    single split-per-dispatch key stream would diverge between them."""
+    keys = jax.vmap(jax.random.fold_in)(lane_keys, step)
+    masked = _mask_logits(logits, temperature, top_k, top_p)
+    toks = jax.vmap(lambda k, row: jax.random.categorical(k, row))(
+        keys, masked)
+    greedy = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.where(temperature <= 0.0, greedy, toks).astype(jnp.int32)
+
+
 def sample_batched(logits: jnp.ndarray, key: jax.Array,
                    temperature: jnp.ndarray,   # (B,) f32; <=0 -> greedy
                    top_k: jnp.ndarray,         # (B,) i32; <=0 -> disabled
@@ -64,23 +85,29 @@ def sample_batched(logits: jnp.ndarray, key: jax.Array,
     Row-wise equivalent of `sample`: greedy rows take the argmax; top-k is
     a rank mask (rank < k); top-p keeps everything above the nucleus
     cutoff of the sorted distribution."""
+    greedy = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    masked = _mask_logits(logits, temperature, top_k, top_p)
+    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def _mask_logits(logits: jnp.ndarray, temperature: jnp.ndarray,
+                 top_k: jnp.ndarray, top_p: jnp.ndarray) -> jnp.ndarray:
+    """Shared per-lane masking: temperature scaling, top-k as a rank mask
+    (k is traced, so lax.top_k's static k won't do), then the top-p
+    nucleus over the top-k-renormalized distribution (matching `sample`,
+    which applies top-k before top-p); p>=1 rows keep everything (cutoff
+    clamps to the min row value)."""
     B, V = logits.shape
     lf = logits.astype(jnp.float32)
-    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
     scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
-    # top-k as a rank mask (k is traced, so lax.top_k's static k won't do)
     ranks = jnp.argsort(jnp.argsort(-scaled, axis=-1), axis=-1)   # 0 = max
     k_eff = jnp.where(top_k > 0, top_k, V)[:, None]
     masked = jnp.where(ranks < k_eff, scaled, -jnp.inf)
-    # top-p nucleus over the top-k-renormalized distribution (matching
-    # `sample`, which applies top-k before top-p); p>=1 rows keep
-    # everything (cutoff clamps to the min row value)
     sorted_desc = jnp.sort(masked, axis=-1)[:, ::-1]
     cum = jnp.cumsum(jax.nn.softmax(sorted_desc, axis=-1), axis=-1)
     p_eff = jnp.where(top_p >= 1.0, 2.0, top_p)[:, None]
     cutoff_idx = jnp.minimum(jnp.sum(cum < p_eff, axis=-1, keepdims=True),
                              V - 1)
     cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, axis=-1)
-    masked = jnp.where(masked >= cutoff, masked, -jnp.inf)
-    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
-    return jnp.where(temperature <= 0.0, greedy, sampled)
+    return jnp.where(masked >= cutoff, masked, -jnp.inf)

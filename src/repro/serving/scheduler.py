@@ -10,6 +10,12 @@ engine; the scheduler only sees lanes becoming free.  A recovery rewind
 keeps its lane busy longer (the request replays ``rewalk_tokens``), which
 to the scheduler is indistinguishable from a longer generation.
 
+Both engines default to the async DMA pipeline (serving/dma.py): a
+request may retire one ``step_once`` call after its final token was
+computed — the scheduler's admit-on-free loop is agnostic to that lag,
+and completions are never lost (``step_once`` reports every retirement
+exactly when the host commits it).
+
 ``StaticScheduler`` keeps the pre-continuous-batching (pre-PR-1)
 fixed-batch FIFO behaviour — pad a batch, run everyone for max(n_tokens)
 steps, only then admit more — as the comparison baseline for

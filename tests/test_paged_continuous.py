@@ -210,8 +210,12 @@ class TestRecovery:
         prompt = rng.randint(0, cfg.vocab_size, size=14).astype(np.int32)
 
         def run(rewind):
+            # sync pipeline: the test injects _rewind_lane mid-run, which
+            # requires the host bookkeeping to be current at the injection
+            # point (the async ring defers it by one step)
             eng = PagedContinuousEngine(cfg, params, max_seq=96, n_lanes=1,
-                                        max_active_pages=10, prefill_chunk=8)
+                                        max_active_pages=10, prefill_chunk=8,
+                                        async_pipeline=False)
             req = Request(1, prompt, 30, SamplingParams.greedy())
             eng.admit(req)
             while eng.prefills:
