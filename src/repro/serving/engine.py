@@ -72,9 +72,11 @@ import numpy as np
 from repro.configs.base import FreezeConfig, ModelConfig
 from repro.core.cache import HostOffloadController, KVCache
 from repro.core.paging import PagedController, PageFreezeState
+from repro.core.recovery import RecoveryState
 from repro.models import model as MD
 from repro.serving.dma import FetchRing, HostStaging, TransferStats
-from repro.serving.sampling import (SamplingParams, params_arrays, sample,
+from repro.serving.sampling import (SamplingParams, lane_base_key,
+                                    params_arrays, sample,
                                     sample_batched_perlane)
 
 
@@ -100,13 +102,67 @@ class GenerationResult:
 
 @dataclasses.dataclass
 class Request:
-    """One generation request, as seen by the scheduler and lane manager."""
+    """One generation request, as seen by the scheduler and lane manager.
+
+    ``priority`` is a strict class (0 = most important; the scheduler never
+    runs a class while a higher one is runnable and may *preempt* running
+    lanes for it).  ``deadline_ms`` (relative to submission) and
+    ``slo_tokens_per_s`` (a decode-rate SLO the scheduler converts into a
+    completion deadline) order requests within a class — earliest deadline
+    first.  All three default to "no SLO", under which the scheduler
+    degrades to plain FIFO."""
     uid: int
     prompt: np.ndarray            # (S,) int32
     n_tokens: int
     sampling: SamplingParams = SamplingParams()
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+    slo_tokens_per_s: Optional[float] = None
     result: Optional[np.ndarray] = None
     telemetry: Optional[GenerationResult] = None
+
+
+@dataclasses.dataclass
+class LaneSnapshot:
+    """Resumable mid-generation state of a preempted lane.
+
+    Produced by ``suspend_lane`` and consumed by ``resume_lane`` (possibly
+    on a *different* lane slot).  The host-side fields (tokens, clocks,
+    rewind budget, the snapshot-stable sampling base key) are common to
+    both engines; the paged engine additionally carries the lane's entire
+    pool slice + freeze state + recovery-ladder scalars and owns the
+    lane's host-stashed pages, so resume restores a byte-identical device
+    layout and the continuation is token-identical to the uninterrupted
+    run.  The contiguous engine carries no KV (a dense lane slice is the
+    whole ``max_seq`` cache) — it resumes by re-prefilling prompt +
+    generated tokens, an approximate (freeze state restarts) but cheap
+    fallback.
+
+    A snapshot with ``generated == []`` marks an admission that was
+    cancelled before its first token (e.g. mid-chunked-prefill): resume is
+    a plain re-admit."""
+    req: Request
+    generated: List[int]
+    history: List[Tuple[int, int]]
+    pos: int
+    step: int                      # decode clock (sampling folds it in)
+    tok: int                       # next step's input token
+    rewinds: int
+    last_rewind_step: int
+    lane_key: Optional[np.ndarray] = None    # (2,) uint32 sampling base
+    # ---- paged-path payload (None on the contiguous fallback) ---- #
+    pool: Optional[Dict[str, np.ndarray]] = None     # (L, 1, P_total, ...)
+    fstate: Optional[Dict[str, np.ndarray]] = None
+    recovery: Optional[Dict[str, Any]] = None        # ladder scalars
+    tail_slot: Optional[np.ndarray] = None           # (L,) int32
+    stashed: Optional[Dict[Tuple[int, int], Any]] = None  # host-store pages
+    pending_thaw: bool = False
+    urgency: float = 0.0
+
+    @property
+    def started(self) -> bool:
+        """Whether any decode progress exists (False = resume re-admits)."""
+        return bool(self.generated)
 
 
 class Engine:
@@ -291,6 +347,9 @@ class _LaneEngineBase:
         self.staging = HostStaging()
         self._retired_backlog: List[Request] = []   # retired during admit
                                     # drains; reported by the next step_once
+        self._suspended: List[LaneSnapshot] = []    # victims of deferred
+                                    # (install-time) preemption, awaiting
+                                    # pickup via drain_suspended()
 
     @property
     def kv_device_bytes(self) -> int:       # subclasses override
@@ -422,11 +481,62 @@ class _LaneEngineBase:
         admission sequence is identical in the sync and async pipelines,
         so this is order-invariant where a global split-per-dispatch
         stream would not be).  The first token folds in 2**31-1; decode
-        steps fold in the lane's own clock (always < 2**31-1)."""
+        steps fold in the lane's own clock (always < 2**31-1).  A
+        *resumed* lane restores its snapshot's key instead of consuming a
+        fresh admission index (``sampling.lane_base_key``)."""
         self._admit_count += 1
-        base = jax.random.fold_in(self.key, self._admit_count)
+        base = lane_base_key(self.key, self._admit_count)
         self.lane_keys[lane] = np.asarray(base, np.uint32)
         return base
+
+    # ---------------- preemption (suspend / resume) ---------------- #
+    def _snap_host(self, lane: int) -> LaneSnapshot:
+        """Capture the lane's host-side bookkeeping into a snapshot (the
+        fields both engines share); the caller adds any engine-specific
+        payload.  Must run after ``flush()`` — pending ring entries carry
+        exactly this state."""
+        l = self.lanes[lane]
+        return LaneSnapshot(
+            req=l.request, generated=list(l.generated),
+            history=list(l.history), pos=int(self.pos[lane]),
+            step=int(self.step[lane]), tok=int(self.tok[lane]),
+            rewinds=l.rewinds, last_rewind_step=l.last_rewind_step,
+            lane_key=self.lane_keys[lane].copy())
+
+    def _restore_host(self, snap: LaneSnapshot, lane: int) -> None:
+        """Inverse of ``_snap_host``: reinstall the shared host-side lane
+        bookkeeping (clocks, tokens, rewind budget, the snapshot-stable
+        sampling key and per-lane sampling params)."""
+        l = self.lanes[lane]
+        l.request = snap.req
+        l.generated = list(snap.generated)
+        l.history = list(snap.history)
+        l.rewinds = snap.rewinds
+        l.last_rewind_step = snap.last_rewind_step
+        self.pos[lane] = snap.pos
+        self.step[lane] = snap.step
+        self.tok[lane] = snap.tok
+        self.lane_keys[lane] = np.asarray(snap.lane_key, np.uint32)
+        self._set_lane_sampling(lane, snap.req.sampling)
+
+    def _park_lane(self, lane: int) -> None:
+        """Leave a just-vacated lane idle: greedy sampling so the garbage
+        it decodes is cheap, position clamped in-bounds."""
+        l = self.lanes[lane]
+        l.request = None
+        l.generated = []
+        l.history = []
+        self._set_lane_sampling(lane, SamplingParams.greedy())
+        self.pos[lane] = min(int(self.pos[lane]), self.max_seq - 1)
+
+    def drain_suspended(self) -> List[LaneSnapshot]:
+        """Collect (and clear) the snapshots of lanes the engine suspended
+        on its own — currently only the paged engine's install-time
+        preemption (``admit_over``).  A scheduler driving the engine must
+        call this after every ``step_once`` and requeue the snapshots, or
+        the victims' requests are lost."""
+        out, self._suspended = self._suspended, []
+        return out
 
     def _push_admit_token(self, lane: int, req: Request, logits) -> None:
         """Shared deferred first-token path: assign the lane's base key,
@@ -714,17 +824,87 @@ class ContinuousEngine(_LaneEngineBase):
         req.telemetry.tokens = req.result[None, :]
         self.events.append({"event": "finish", "uid": req.uid, "lane": lane,
                             "wall_step": self.wall_step})
-        l.request = None
-        l.generated = []
-        l.history = []
-        # park the idle lane: greedy sampling, position clamped in-bounds,
-        # and the retired request's offloaded pages released right away
-        # (offload sync also masks idle lanes, so no churn until re-admit)
-        self._set_lane_sampling(lane, SamplingParams.greedy())
-        self.pos[lane] = min(int(self.pos[lane]), self.max_seq - 1)
+        # park the idle lane; the retired request's offloaded pages are
+        # released right away (offload sync also masks idle lanes, so no
+        # churn until re-admit)
+        self._park_lane(lane)
         if self.offloader is not None:
             self.offloader.drop_lane(lane)
         return req
+
+    # ---------------- preemption (suspend / resume) ---------------- #
+    def suspend_lane(self, lane: int) -> Optional[LaneSnapshot]:
+        """Preempt the lane's request mid-generation and free the lane.
+
+        The contiguous engine has no page-granular stash, so the snapshot
+        carries only host bookkeeping (prompt, generated tokens, clocks,
+        sampling key); ``resume_lane`` re-prefills prompt + generated —
+        cheaper than regenerating but not byte-identical (the freeze /
+        recovery state restarts at the resume point; the paged engine's
+        stash/restore path is the exact one).  Returns None when the
+        request retired while the in-flight fetch drained (its lane is
+        already free and the retirement is re-reported by the next
+        ``step_once``)."""
+        self.flush()
+        l = self.lanes[lane]
+        if l.request is None:
+            return None
+        snap = self._snap_host(lane)
+        self.events.append({"event": "suspend", "uid": snap.req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "generated": len(snap.generated)})
+        self._park_lane(lane)
+        if self.offloader is not None:
+            self.offloader.drop_lane(lane)
+        return snap
+
+    def resume_lane(self, snap: LaneSnapshot,
+                    lane: Optional[int] = None) -> int:
+        """Re-admit a suspended request from its snapshot.
+
+        Re-prefills the left-padded prompt plus the already-generated
+        tokens (all but the uncommitted input token, whose KV the original
+        run had not written yet) into a free lane, then restores the
+        host bookkeeping — decode clock, rewind budget and the
+        snapshot-stable sampling key — so the continuation draws the same
+        sampling stream the uninterrupted run would have.  The re-prefill
+        length is re-bucketed to a power of two (extra left-padding,
+        exactly like admission's prompt bucketing) so resumes compile
+        O(log max_seq) prefill shapes, not one per suspension point; the
+        lane's ``pos`` shifts right by the padding, which this approximate
+        path tolerates (the paged engine's restore is the exact one)."""
+        if not snap.started:
+            return self.admit(snap.req, lane)
+        self._retired_backlog += self._drain_ring()   # mirror admit's drain
+        if lane is None:
+            lane = self._free_lane()
+        l = self.lanes[lane]
+        assert l.request is None, f"lane {lane} is busy"
+        prompt = np.asarray(snap.req.prompt, np.int32)
+        sp = self._bucket(len(prompt), snap.req.n_tokens)
+        assert snap.pos == sp + len(snap.generated) - 1, \
+            "snapshot clocks are inconsistent with its token count"
+        remaining = snap.req.n_tokens - len(snap.generated) + 1
+        sb = self._bucket(snap.pos, remaining)
+        toks = np.full((1, sb), self.pad_id, np.int32)
+        off = sb - snap.pos                  # re-bucketing pad shift
+        toks[0, off + sp - len(prompt):off + sp] = prompt
+        toks[0, off + sp:] = snap.generated[:-1]
+        lane_state = MD.init_decode_state(self.cfg, 1, self.max_seq)
+        self._note_kv_peak(lane_state.cache_k.nbytes
+                           + lane_state.cache_v.nbytes)
+        _, lane_state = self._prefill(
+            self.params, batch={"tokens": jnp.asarray(toks)},
+            state=lane_state)
+        self.state = self._write_lane(self.state, lane_state,
+                                      jnp.int32(lane))
+        if self.offloader is not None:
+            self.offloader.drop_lane(lane)
+        self._restore_host(snap, lane)
+        self.pos[lane] = sb                  # snap.pos plus the pad shift
+        self.events.append({"event": "resume", "uid": snap.req.uid,
+                            "lane": lane, "wall_step": self.wall_step})
+        return lane
 
 
 # ===================================================================== #
@@ -735,13 +915,21 @@ class _PendingPrefill:
     """An admission in flight: the prompt is prefilled chunk-by-chunk into a
     contiguous single-lane scratch cache, interleaved with decode steps of
     the resident lanes; on completion the scratch is repacked into pages
-    and installed into the lane."""
+    and installed into the lane.
+
+    ``over=True`` is the preemption variant (``admit_over``): the lane's
+    current occupant — the preemption victim — KEEPS DECODING while this
+    prefill runs in its scratch, because the scratch never touches the
+    lane's page pool.  The victim is suspended only at install time, so a
+    preemption costs the victim zero decode opportunity during the
+    preemptor's prefill."""
     req: Request
     toks: np.ndarray          # (1, sp) left-padded prompt
     scratch: Any              # contiguous DecodeState (B=1, S=sp)
     sp: int                   # padded prompt length
     done: int = 0             # tokens prefilled so far
     logits: Any = None        # chunk-final logits (valid once done == sp)
+    over: bool = False        # preempting the lane's current occupant
 
 
 class PagedContinuousEngine(_LaneEngineBase):
@@ -897,6 +1085,18 @@ class PagedContinuousEngine(_LaneEngineBase):
         self._remap_copy = jax.jit(_remap_copy_fn,
                                    donate_argnames=("state",))
         self._remap_width = 8
+        # preemption resume: the pool slice rides _push_lanes, but the
+        # recovery ladder is per-lane (B,) state outside the pool fields —
+        # restore one lane's scalars with a tiny donated scatter
+        def _set_rec_fn(state, lane, ema, level, calm, seen):
+            r = state.recovery
+            return state._replace(recovery=RecoveryState(
+                ema_entropy=r.ema_entropy.at[lane].set(ema),
+                level=r.level.at[lane].set(level),
+                calm_steps=r.calm_steps.at[lane].set(calm),
+                steps_seen=r.steps_seen.at[lane].set(seen)))
+        self._set_recovery = jax.jit(_set_rec_fn,
+                                     donate_argnames=("state",))
         self.state = MD.init_paged_decode_state(
             cfg, n_lanes, max_active_pages, staging_slots=self.S_stage)
         self.L_attn = max(self.state.page_table.shape[0], 1)
@@ -1000,14 +1200,21 @@ class PagedContinuousEngine(_LaneEngineBase):
             self.stats.note_async(nbytes, d2h=False)
 
     # ---------------- admission (chunked) ---------------- #
-    def admit(self, req: Request, lane: Optional[int] = None) -> int:
-        """Begin a chunked admission: reserves a lane and queues the prompt
-        for chunk-by-chunk prefill.  Returns immediately — resident lanes
-        keep decoding while `step_once` advances the prefill."""
-        if lane is None:
-            lane = self._free_lane()
-        l = self.lanes[lane]
-        assert l.request is None, f"lane {lane} is busy"
+    @property
+    def has_free_lane(self) -> bool:
+        # a lane mid-over-prefill whose victim already retired holds no
+        # request, but its slot is spoken for — never hand it out twice
+        return any(l.request is None and i not in self.prefills
+                   for i, l in enumerate(self.lanes))
+
+    def _free_lane(self) -> int:
+        for i, l in enumerate(self.lanes):
+            if l.request is None and i not in self.prefills:
+                return i
+        raise RuntimeError("no free lane")
+
+    def _queue_prefill(self, req: Request, lane: int,
+                       over: bool = False) -> None:
         prompt = np.asarray(req.prompt, np.int32)
         sp = self._bucket(len(prompt), req.n_tokens)
         if not self.enable_freeze:
@@ -1022,16 +1229,52 @@ class PagedContinuousEngine(_LaneEngineBase):
                     f"out); enable freezing or raise max_active_pages")
         self.prefills[lane] = _PendingPrefill(
             req=req, toks=self._left_padded(prompt, sp),
-            scratch=MD.init_decode_state(self.cfg, 1, sp), sp=sp)
+            scratch=MD.init_decode_state(self.cfg, 1, sp), sp=sp, over=over)
+        self.events.append({"event": "admit_start", "uid": req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "prompt_len": len(prompt), "bucket": sp,
+                            **({"over": True} if over else {})})
+
+    def _assign_lane(self, req: Request, lane: int) -> None:
+        l = self.lanes[lane]
         l.request = req
         l.generated = []
         l.history = []
         l.rewinds = 0
         l.last_rewind_step = -10**9
         req.telemetry = GenerationResult([], [], [], [], [], [], [])
-        self.events.append({"event": "admit_start", "uid": req.uid,
-                            "lane": lane, "wall_step": self.wall_step,
-                            "prompt_len": len(prompt), "bucket": sp})
+
+    def admit(self, req: Request, lane: Optional[int] = None) -> int:
+        """Begin a chunked admission: reserves a lane and queues the prompt
+        for chunk-by-chunk prefill.  Returns immediately — resident lanes
+        keep decoding while `step_once` advances the prefill."""
+        if lane is None:
+            lane = self._free_lane()
+        l = self.lanes[lane]
+        assert l.request is None, f"lane {lane} is busy"
+        assert lane not in self.prefills, f"lane {lane} has a prefill queued"
+        self._queue_prefill(req, lane)
+        self._assign_lane(req, lane)
+        return lane
+
+    def admit_over(self, req: Request, lane: int) -> int:
+        """Preempting admission: queue `req`'s chunked prefill against a
+        lane whose current occupant keeps decoding.  The prefill runs in a
+        scratch cache that never touches the lane's page pool, so the
+        victim loses nothing while the preemptor's prompt is processed; at
+        install time the victim is suspended (``suspend_lane`` semantics —
+        full stash/restore snapshot, surfaced via ``drain_suspended``) and
+        the preemptor takes the lane.  This is what makes preemption
+        throughput-neutral: the only lane-time the victim ever gives up is
+        time the preemptor is actually decoding.  If the victim retires
+        before the prefill completes, the install degenerates to a normal
+        admission and no snapshot is produced."""
+        l = self.lanes[lane]
+        assert l.request is not None, \
+            f"lane {lane} is free — use admit(), not admit_over()"
+        assert lane not in self.prefills, \
+            f"lane {lane} already has a prefill queued"
+        self._queue_prefill(req, lane, over=True)
         return lane
 
     def _chunk_sizes(self, sp: int) -> List[int]:
@@ -1100,6 +1343,16 @@ class PagedContinuousEngine(_LaneEngineBase):
         are stashed in the host store (returning as slots free up), and
         `PagedController.write_lane` wholesale-resets exactly this lane."""
         pp = self.prefills.pop(lane)
+        if pp.over:
+            # install-time preemption: the victim decoded right through the
+            # preemptor's prefill; suspend it now (full stash/restore
+            # snapshot, picked up via drain_suspended) — unless it already
+            # retired, in which case this is a normal install
+            if self.lanes[lane].request is not None:
+                snap = self._suspend_decode(lane)
+                if snap is not None:
+                    self._suspended.append(snap)
+            self._assign_lane(pp.req, lane)
         sp, page, P, L = pp.sp, self.page, self.P, self.L_attn
         P_total = self.P_total
         # wholesale lane reset first: beyond the pool fields the push below
@@ -1188,7 +1441,8 @@ class PagedContinuousEngine(_LaneEngineBase):
         finished = self._retired_backlog + self._drain_ring()
         self._retired_backlog = []
         decode_lanes = [i for i, l in enumerate(self.lanes)
-                        if l.request is not None and i not in self.prefills]
+                        if l.request is not None
+                        and (i not in self.prefills or self.prefills[i].over)]
         if decode_lanes:
             boundary = [i for i in decode_lanes if self.pos[i] % self.page == 0]
             if boundary:
@@ -1501,6 +1755,124 @@ class PagedContinuousEngine(_LaneEngineBase):
                             "lane": lane, "wall_step": self.wall_step,
                             "new_pos": new_pos})
         return True
+
+    # ---------------- preemption (suspend / resume) ---------------- #
+    def suspend_lane(self, lane: int) -> Optional[LaneSnapshot]:
+        """Freeze-native preemption: force-stash the lane's entire device
+        residency and free the lane without losing any decode progress.
+
+        The snapshot owns (1) the lane's full pool slice — K/V pages,
+        page table, slot masks and page-freeze counters, pulled in the
+        same ONE batched transfer a boundary tick uses — (2) the lane's
+        recovery-ladder scalars, and (3) every host-stashed page, *moved
+        out of* the ``PagedController`` store (``export_lane``) so
+        reassigning the lane cannot ``drop_lane`` them.  ``resume_lane``
+        pushes the slice back verbatim (possibly into a different lane),
+        so the continuation is **token-identical** to the uninterrupted
+        run — preemption costs two pool-slice transfers, never a
+        re-prefill.
+
+        An admission still mid-chunked-prefill is cancelled instead (no
+        decode progress exists yet): the snapshot re-admits from scratch.
+        On a lane mid-``admit_over`` this suspends the decoding VICTIM and
+        leaves the preemptor's prefill queued (it then installs into the
+        freed lane as a normal admission).  Returns None when the request
+        retired while the in-flight fetch drained (the retirement is
+        re-reported by the next ``step_once``)."""
+        self.flush()
+        l = self.lanes[lane]
+        pp = self.prefills.get(lane)
+        if pp is not None and not pp.over:
+            if l.request is None:
+                return None
+            self.prefills.pop(lane)
+            snap = LaneSnapshot(req=pp.req, generated=[], history=[],
+                                pos=0, step=0, tok=self.pad_id,
+                                rewinds=0, last_rewind_step=-10**9)
+            self.events.append({"event": "suspend", "uid": pp.req.uid,
+                                "lane": lane, "wall_step": self.wall_step,
+                                "generated": 0})
+            self.ctl.drop_lane(lane)
+            self._park_lane(lane)
+            return snap
+        return self._suspend_decode(lane)
+
+    def _suspend_decode(self, lane: int) -> Optional[LaneSnapshot]:
+        """The decode-lane suspension core shared by ``suspend_lane`` and
+        the install-time preemption of ``admit_over``: flush, snapshot,
+        stash, free."""
+        self.flush()
+        l = self.lanes[lane]
+        if l.request is None:
+            return None
+        snap = self._snap_host(lane)
+        # speculative staged copies are device bytes in THIS lane's staging
+        # slots — they don't survive the lane changing hands; forget them
+        # (a misprediction-grade loss: re-prefetch is cheap)
+        for key in [k for k in self.ctl.staged_keys if k[1] == lane]:
+            del self.ctl.staged_keys[key]
+        pool, fstate = self._pull_lanes([lane])
+        # deep-copy out of the reused staging buffers — the next pull
+        # overwrites them, the snapshot may outlive many ticks
+        snap.pool = {f: a.copy() for f, a in pool.items()}
+        snap.fstate = {f: a.copy() for f, a in fstate.items()}
+        rec = jax.device_get(self.state.recovery)
+        snap.recovery = {f: np.asarray(a)[lane].item()
+                         for f, a in zip(RecoveryState._fields, rec)}
+        snap.tail_slot = self.tail_slot[:, lane].copy()
+        snap.stashed = self.ctl.export_lane(lane)
+        snap.pending_thaw = lane in self.pending_thaws
+        snap.urgency = float(self._urgency[lane])
+        self.events.append({"event": "suspend", "uid": snap.req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "generated": len(snap.generated),
+                            "stashed_pages": len(snap.stashed)})
+        # free the lane: unmap on device, clear host bookkeeping
+        self.state = self._reset_lane(state=self.state, lane=jnp.int32(lane))
+        self.ctl.drop_lane(lane)
+        self.pending_thaws.discard(lane)
+        self._urgency[lane] = 0.0
+        self._park_lane(lane)
+        return snap
+
+    def resume_lane(self, snap: LaneSnapshot,
+                    lane: Optional[int] = None) -> int:
+        """Re-admit a suspended request via the stash/restore path — no
+        re-prefill.  The snapshot's host-store pages are rekeyed to the
+        destination lane (``import_lane``), its pool slice is pushed back
+        byte-identical (same physical slot layout → same float summation
+        order downstream → token parity with the uninterrupted run), and
+        the recovery-ladder scalars, tail slots, clocks and the
+        snapshot-stable sampling key are restored."""
+        if not snap.started:
+            return self.admit(snap.req, lane)
+        self._retired_backlog += self._drain_ring()
+        if lane is None:
+            lane = self._free_lane()
+        l = self.lanes[lane]
+        assert l.request is None, f"lane {lane} is busy"
+        assert lane not in self.prefills, f"lane {lane} has a prefill queued"
+        # host store first: thaw/swap bookkeeping must see the pages the
+        # pushed page table expects to find stashed
+        self.ctl.import_lane(lane, snap.stashed)
+        self._push_lanes(snap.pool, snap.fstate, [lane])
+        for lyr in range(self.L_attn):
+            self.ctl.stage_slots[(lyr, lane)] = \
+                list(range(self.P, self.P_total))
+        r = snap.recovery
+        self.state = self._set_recovery(
+            self.state, jnp.int32(lane),
+            jnp.float32(r["ema_entropy"]), jnp.int32(r["level"]),
+            jnp.int32(r["calm_steps"]), jnp.int32(r["steps_seen"]))
+        self.tail_slot[:, lane] = snap.tail_slot
+        self._restore_host(snap, lane)
+        if snap.pending_thaw:
+            self.pending_thaws.add(lane)
+        self._urgency[lane] = snap.urgency
+        self.events.append({"event": "resume", "uid": snap.req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "stashed_pages": len(snap.stashed)})
+        return lane
 
     def _retire(self, lane: int) -> Request:
         l = self.lanes[lane]

@@ -25,6 +25,26 @@ class SamplingParams:
         return cls(temperature=0.0, top_k=0, top_p=1.0)
 
 
+def lane_base_key(engine_key: jax.Array, admit_index) -> jax.Array:
+    """Admission-ordered per-lane sampling base key.
+
+    The j-th *admission* of an engine gets ``fold_in(engine_key, j)``;
+    every draw then folds in the lane's own decode clock
+    (`sample_batched_perlane`), so a lane's token at logical step k is a
+    pure function of (engine seed, admission index, step) — independent of
+    which global dispatch carried it, which lane slot it occupies, and how
+    many other lanes were admitted in between.
+
+    That purity is what makes the key **snapshot-stable**: a preempted
+    lane's base key can be stashed in a ``LaneSnapshot`` and restored on
+    resume — possibly into a *different* lane slot — and the continuation
+    samples exactly the tokens the uninterrupted run would have (the
+    preemption parity guarantee of serving/scheduler.py).  A resumed lane
+    must restore its original admission's key, never consume a fresh
+    admission index."""
+    return jax.random.fold_in(engine_key, admit_index)
+
+
 def sample(logits: jnp.ndarray, key: jax.Array,
            params: SamplingParams) -> jnp.ndarray:
     """logits: (B, V) -> token ids (B,) int32."""

@@ -1,20 +1,44 @@
-"""Request scheduling over the serving engines.
+"""SLO-aware request scheduling over the serving engines.
 
-``Scheduler`` is a thin admission queue over ``ContinuousEngine`` or
-``PagedContinuousEngine``: it holds pending requests and feeds one into a
-lane the moment that lane retires — mid-generation — so short requests
-never wait for a long co-batched one (no head-of-line blocking).  All
-batching mechanics (per-lane prefill — whole-prompt or chunked — freeze
-state reset, entropy-guided recovery servicing, retirement) live in the
-engine; the scheduler only sees lanes becoming free.  A recovery rewind
-keeps its lane busy longer (the request replays ``rewalk_tokens``), which
-to the scheduler is indistinguishable from a longer generation.
+``Scheduler`` (PR 5) replaces the thin FIFO admission queue with a
+deadline/priority-aware policy built on the freeze machinery's cheapest
+primitive: suspending a lane.  Requests carry a strict ``priority`` class
+(0 = most important) and optionally a ``deadline_ms`` or an
+``slo_tokens_per_s`` decode-rate SLO (converted to a completion
+deadline).  The pending queue is a priority heap ordered **strictly
+across classes and earliest-deadline-first (EDF) within a class**, with
+submission order as the final tie-break — so a trace with no priorities
+and no deadlines degrades to exactly the old FIFO behaviour.
+
+**Freeze-native preemption.**  When the best pending request would miss
+its deadline waiting for a lane to free naturally, and a strictly
+lower-priority request is running, the scheduler preempts.  On the paged
+engine it uses install-time preemption (``engine.admit_over``): the
+preemptor's chunked prefill runs in scratch while the victim keeps
+decoding, and only at install is the victim suspended — its entire
+device residency force-stashes to the host store in one batched
+transfer, and the continuation is *token-identical* on resume.  The
+contiguous engine (and resuming a snapshot, whose pool slice must push
+back into a free lane) falls back to immediate ``suspend_lane``;
+contiguous resume re-prefills prompt + generated tokens from the
+snapshot.  Either way the victim's ``LaneSnapshot`` re-enters the queue
+under its own priority/deadline and original submission order, resuming
+when capacity returns.  Suspending a lane is nearly free precisely
+because the paged engine already treats "this KV lives on the host right
+now" as a normal state of the world (ARKV's memory-budget framing;
+FreeKV-style retrieval-on-demand makes policy on top of it cheap).
+
+The miss prediction is deliberately simple: an EMA of observed engine
+step time, the shortest remaining work across running lanes as the
+time-to-free estimate, and chunk-count + decode-length as the service
+estimate.  It only gates *when* a preemption fires; correctness never
+depends on it.
 
 Both engines default to the async DMA pipeline (serving/dma.py): a
 request may retire one ``step_once`` call after its final token was
-computed — the scheduler's admit-on-free loop is agnostic to that lag,
-and completions are never lost (``step_once`` reports every retirement
-exactly when the host commits it).
+computed — the admit-on-free loop is agnostic to that lag, and
+``suspend_lane`` flushes the ring first, so preemption decisions act on
+committed state.
 
 ``StaticScheduler`` keeps the pre-continuous-batching (pre-PR-1)
 fixed-batch FIFO behaviour — pad a batch, run everyone for max(n_tokens)
@@ -23,59 +47,273 @@ steps, only then admit more — as the comparison baseline for
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Union
+import heapq
+import math
+import time
+from typing import Any, Dict, List, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import (ContinuousEngine, Engine,
+from repro.serving.engine import (ContinuousEngine, Engine, LaneSnapshot,
                                   PagedContinuousEngine, Request)
 from repro.serving.sampling import SamplingParams
 
+_INF = float("inf")
+
 
 class Scheduler:
-    """FIFO admission queue over a continuous-batching engine (contiguous
-    or paged — both expose the same admit/step_once lane lifecycle)."""
+    """Deadline/priority-aware admission (strict classes, EDF within a
+    class) with freeze-native lane preemption, over a continuous-batching
+    engine (contiguous or paged — both expose the same
+    admit/step_once/suspend_lane/resume_lane lane lifecycle).
+
+    ``policy="fifo"`` ignores priorities and deadlines entirely (pure
+    submission order, no preemption) — the pre-PR-5 behaviour, kept as
+    the benchmark baseline.  ``clock`` is injectable for deterministic
+    tests; it must be monotone seconds."""
 
     def __init__(self,
                  engine: Union[Engine, ContinuousEngine,
                                PagedContinuousEngine],
-                 batch_size: Optional[int] = None, pad_id: int = 0, **kw):
+                 batch_size: Optional[int] = None, pad_id: int = 0,
+                 policy: str = "slo",
+                 preemption: bool = True,
+                 clock=time.monotonic, **kw):
         if isinstance(engine, (ContinuousEngine, PagedContinuousEngine)):
             self.engine = engine
         else:
             self.engine = ContinuousEngine.from_engine(
                 engine, n_lanes=batch_size or 1, pad_id=pad_id, **kw)
-        self.queue: List[Request] = []
+        assert policy in ("slo", "fifo"), policy
+        self.policy = policy
+        self.preemption = preemption and policy == "slo"
+        self.clock = clock
+        # heap of (priority, deadline_t, seq, item); item is a Request or
+        # a LaneSnapshot (a preempted victim awaiting resume).  Under
+        # policy="fifo" the first two components are constants, reducing
+        # the order to the seq counter — plain submission order.
+        self.queue: List[tuple] = []
+        self._seq = 0
         self.done: Dict[int, Request] = {}
         self._uid = 0
+        # per-uid SLO bookkeeping (wall times are scheduler-relative)
+        self.metrics: Dict[int, Dict[str, Any]] = {}
+        self.n_preemptions = 0
+        self._step_s: Optional[float] = None   # EMA of engine step time
+
+    # ---------------- queue plumbing ---------------- #
+    def _deadline_t(self, uid: int) -> Optional[float]:
+        return self.metrics[uid]["deadline_t"]
+
+    def _push(self, item: Union[Request, LaneSnapshot]) -> None:
+        # the tie-break is the request's ORIGINAL submission seq, not a
+        # fresh counter: a preempted victim re-enters the queue ahead of
+        # the same-class work submitted after it, so preemption never
+        # demotes a request within its class.  (Besides fairness this is
+        # what keeps preemption throughput-neutral: victims resume the
+        # moment the preemptor retires, instead of their remainders
+        # serializing behind the whole class queue at the end of the
+        # trace.)  A uid is queued at most once, so seq stays unique.
+        req = item.req if isinstance(item, LaneSnapshot) else item
+        if self.policy == "fifo":
+            key = (0, _INF)
+        else:
+            dl = self._deadline_t(req.uid)
+            key = (req.priority, _INF if dl is None else dl)
+        heapq.heappush(self.queue,
+                       (*key, self.metrics[req.uid]["seq"], item))
+
+    def _peek(self) -> Optional[Union[Request, LaneSnapshot]]:
+        return self.queue[0][-1] if self.queue else None
+
+    def _pop(self) -> Union[Request, LaneSnapshot]:
+        return heapq.heappop(self.queue)[-1]
 
     def submit(self, prompt: np.ndarray, n_tokens: int,
-               sampling: SamplingParams = SamplingParams()) -> int:
+               sampling: SamplingParams = SamplingParams(),
+               priority: int = 0,
+               deadline_ms: Optional[float] = None,
+               slo_tokens_per_s: Optional[float] = None) -> int:
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  n_tokens, sampling))
+        req = Request(self._uid, np.asarray(prompt, np.int32), n_tokens,
+                      sampling, priority=priority, deadline_ms=deadline_ms,
+                      slo_tokens_per_s=slo_tokens_per_s)
+        now = self.clock()
+        deadlines = []
+        if deadline_ms is not None:
+            deadlines.append(now + deadline_ms / 1e3)
+        if slo_tokens_per_s:
+            deadlines.append(now + n_tokens / slo_tokens_per_s)
+        self._seq += 1
+        self.metrics[self._uid] = {
+            "arrival_t": now, "priority": priority, "seq": self._seq,
+            "deadline_t": min(deadlines) if deadlines else None,
+            "finish_t": None, "deadline_hit": None, "preempted": 0,
+        }
+        self._push(req)
         return self._uid
 
+    # ---------------- admission + preemption ---------------- #
     def _admit_free(self) -> None:
+        """Fill every free lane from the queue in policy order (resuming
+        suspended victims through the engine's restore path)."""
         while self.queue and self.engine.has_free_lane:
-            self.engine.admit(self.queue.pop(0))
+            item = self._pop()
+            if isinstance(item, LaneSnapshot):
+                self.engine.resume_lane(item)
+            else:
+                self.engine.admit(item)
+
+    def _est_service_s(self, item: Union[Request, LaneSnapshot]) -> float:
+        """Rough wall estimate to serve `item` from (re-)admission: chunked
+        prefill steps (paged) or one blocking prefill (contiguous) plus
+        one engine step per decode token.  A resumed snapshot on the paged
+        engine needs no prefill and only its remaining tokens — its pool
+        slice pushes straight back."""
+        if self._step_s is None:
+            return 0.0
+        chunk = getattr(self.engine, "prefill_chunk", None)
+        if isinstance(item, LaneSnapshot) and item.started:
+            remaining = item.req.n_tokens - len(item.generated)
+            pre = 0 if chunk else 1          # contiguous resume re-prefills
+            return (pre + max(remaining, 0)) * self._step_s
+        req = item.req if isinstance(item, LaneSnapshot) else item
+        pre = math.ceil(len(req.prompt) / chunk) if chunk else 1
+        return (pre + req.n_tokens) * self._step_s
+
+    def _est_free_s(self, lanes: List[int]) -> float:
+        """Estimated wall time until the first of `lanes` frees naturally
+        (shortest remaining decode; the async pipeline's host view may lag
+        one step — immaterial for an EMA-scaled estimate)."""
+        if self._step_s is None or not lanes:
+            return 0.0
+        rem = min(self.engine.lanes[i].request.n_tokens
+                  - len(self.engine.lanes[i].generated) for i in lanes)
+        return max(rem, 0) * self._step_s
+
+    def _pick_victim(self, priority: int) -> Optional[int]:
+        """The least valuable running lane strictly below `priority`:
+        lowest class first, then fewest prior preemptions, then most
+        remaining work (it would hold the lane longest), then latest
+        deadline.  The prior-preemption key spreads victims across lanes
+        — repeatedly preempting the same lane concentrates every inserted
+        foreground on one lane's timeline, and the unmatched insertions
+        surface later as an unpaired drain tail.  Lanes already being
+        preempted into (a pending ``admit_over`` prefill) are not victims
+        twice."""
+        pending = getattr(self.engine, "prefills", {})
+        best, best_rank = None, None
+        for i, l in enumerate(self.engine.lanes):
+            if l.request is None or l.request.priority <= priority \
+                    or i in pending:
+                continue
+            dl = self._deadline_t(l.request.uid)
+            rank = (-l.request.priority,
+                    self.metrics[l.request.uid]["preempted"],
+                    -(l.request.n_tokens - len(l.generated)),
+                    -(dl if dl is not None else _INF))
+            if best_rank is None or rank < best_rank:
+                best, best_rank = i, rank
+        return best
+
+    def _maybe_preempt(self) -> None:
+        """Preempt a running lane when the best pending request (a) has a
+        deadline it is predicted to miss by waiting, and (b) a strictly
+        lower-priority lane is running — at most one preemption per
+        scheduling pass (one per engine step is plenty of cadence).
+        Victims re-enter the queue as resumable ``LaneSnapshot``s under
+        their own priority/deadline."""
+        if not self.preemption:
+            return
+        if self.queue and not self.engine.has_free_lane:
+            head = self._peek()
+            req = head.req if isinstance(head, LaneSnapshot) else head
+            dl = self._deadline_t(req.uid)
+            if dl is None:
+                return                      # no deadline -> no urgency
+            running = [i for i, l in enumerate(self.engine.lanes)
+                       if l.request is not None]
+            wait = self._est_free_s(running)
+            if self.clock() + wait + self._est_service_s(head) <= dl:
+                return                      # on track without preempting
+            victim = self._pick_victim(req.priority)
+            if victim is None:
+                return                      # nothing less important runs
+            if not isinstance(head, LaneSnapshot) \
+                    and hasattr(self.engine, "admit_over"):
+                # install-time preemption (paged engine): the preemptor's
+                # prefill runs in scratch while the victim keeps decoding;
+                # the victim's snapshot surfaces via drain_suspended()
+                # once the prefill installs — preemption costs the victim
+                # only the lane-time the preemptor actually decodes
+                self._pop()
+                self.engine.admit_over(req, victim)
+            else:
+                # immediate suspension: resuming a snapshot needs the lane
+                # free NOW (its pool slice pushes right back), and the
+                # contiguous engine has no scratch prefill to overlap
+                vic_uid = self.engine.lanes[victim].request.uid
+                snap = self.engine.suspend_lane(victim)
+                if snap is not None:
+                    self.metrics[vic_uid]["preempted"] += 1
+                    self.n_preemptions += 1
+                    self._push(snap)
+                # the freed lane is filled by the _admit_free that follows
+            return
+
+    def _schedule(self) -> None:
+        self._maybe_preempt()
+        self._admit_free()
+
+    # ---------------- serving loop ---------------- #
+    @property
+    def busy(self) -> bool:
+        """The engine still has work: active lanes, or a pending chunked
+        prefill (an ``admit_over`` whose victim retired mid-prefill holds
+        no request yet, but its admission must still be driven home)."""
+        return self.engine.n_active_lanes > 0 \
+            or bool(getattr(self.engine, "prefills", None))
+
+    def step(self) -> List[int]:
+        """One scheduling pass + one engine step; returns completed uids.
+        The building block for external drivers with timed arrivals
+        (``benchmarks/scheduling.py``)."""
+        self._schedule()
+        if not self.busy:
+            return []
+        t0 = self.clock()
+        retired = self.engine.step_once()
+        dt = self.clock() - t0
+        self._step_s = dt if self._step_s is None \
+            else 0.7 * self._step_s + 0.3 * dt
+        for snap in self.engine.drain_suspended():
+            self.metrics[snap.req.uid]["preempted"] += 1
+            self.n_preemptions += 1
+            self._push(snap)
+        out = []
+        now = self.clock()
+        for req in retired:
+            self.done[req.uid] = req
+            m = self.metrics[req.uid]
+            m["finish_t"] = now
+            dl = m["deadline_t"]
+            m["deadline_hit"] = None if dl is None else bool(now <= dl)
+            out.append(req.uid)
+        return out
 
     def run_once(self) -> List[int]:
-        """Serve until at least one request completes (lanes refill from the
-        queue as they free); returns the completed uids."""
+        """Serve until at least one request completes (lanes refill from
+        the queue as they free); returns the completed uids."""
         out: List[int] = []
         while not out:
-            self._admit_free()
-            if not self.engine.n_active_lanes:
+            out = self.step()
+            if not out and not self.busy:
                 break
-            for req in self.engine.step_once():
-                self.done[req.uid] = req
-                out.append(req.uid)
         return out
 
     def run(self) -> None:
-        while self.queue or self.engine.n_active_lanes:
+        while self.queue or self.busy:
             if not self.run_once():
                 break
 
@@ -83,8 +321,10 @@ class Scheduler:
 class StaticScheduler:
     """Original static FIFO batcher (head-of-line blocking by design): pads
     a fixed batch, runs every lane for max(n_tokens) steps, then admits the
-    next batch.  Kept as the benchmark baseline; note it applies one
-    request's SamplingParams to the whole batch — the limitation that
+    next batch.  Kept as the benchmark baseline.  ``Engine.generate``
+    applies ONE ``SamplingParams`` to the whole padded batch, so a batch
+    mixing sampling configs is rejected loudly instead of silently decoding
+    everyone with ``batch[0]``'s temperature — the limitation that
     motivated per-lane sampling in the continuous engine."""
 
     def __init__(self, engine: Engine, batch_size: int, pad_id: int = 0):
@@ -108,6 +348,14 @@ class StaticScheduler:
             return []
         batch = self.queue[: self.batch_size]
         self.queue = self.queue[self.batch_size:]
+        mixed = {r.sampling for r in batch}
+        if len(mixed) > 1:
+            raise ValueError(
+                "StaticScheduler pads one jitted batch and Engine.generate "
+                f"applies a single SamplingParams to all of it, but this "
+                f"batch mixes {len(mixed)} configs: {sorted(map(str, mixed))}"
+                ". Submit homogeneous batches or use the continuous "
+                "Scheduler (per-lane sampling).")
         n_lanes = self.batch_size
         max_prompt = max(len(r.prompt) for r in batch)
         n_gen = max(r.n_tokens for r in batch)

@@ -1,0 +1,368 @@
+"""SLO-aware scheduling: EDF/priority queue ordering, FIFO degradation,
+freeze-native lane preemption (suspend/resume) and its token-parity
+guarantee, the static scheduler's mixed-sampling guard."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving.engine import (ContinuousEngine, Engine, LaneSnapshot,
+                                  PagedContinuousEngine, Request)
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler, StaticScheduler
+
+
+@pytest.fixture(scope="module")
+def tiny_f32():
+    """f32 tiny model (exact argmax parity across preemption) with a small
+    page size so pools stay cheap and pages actually stash."""
+    cfg = get_config("llama3-8b-tiny")
+    fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                             tau_mode="quantile", quantile=0.5, k_soft=1.0,
+                             recovery_enabled=False)
+    cfg = dataclasses.replace(cfg, freeze=fc, dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def paged_engine(cfg, params, n_lanes=2, pages=4, max_seq=128):
+    return PagedContinuousEngine(cfg, params, max_seq=max_seq,
+                                 n_lanes=n_lanes, max_active_pages=pages,
+                                 prefill_chunk=8,
+                                 # deterministic chunk split: the reference
+                                 # run interleaves admissions differently
+                                 burst_prefill=False)
+
+
+def run_alone(cfg, params, req_args, **eng_kw):
+    """Uninterrupted single-request reference on a fresh engine."""
+    eng = paged_engine(cfg, params, **eng_kw)
+    req = Request(1, *req_args)
+    eng.admit(req)
+    while req.result is None:
+        eng.step_once()
+    return np.asarray(req.result)
+
+
+class TestPreemptResumeParity:
+    def test_paged_token_parity_across_lanes(self, tiny_f32):
+        """Suspend mid-decode, serve another request in the victim's lane,
+        resume into a DIFFERENT lane: the victim's tokens must be
+        identical to an uninterrupted run — the pool-slice restore is
+        byte-exact and the sampling key is snapshot-stable."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(0)
+        prompt = rng.randint(0, cfg.vocab_size, size=20).astype(np.int32)
+        args = (prompt, 32, SamplingParams.greedy())
+        ref = run_alone(cfg, params, args)
+
+        eng = paged_engine(cfg, params)
+        req = Request(1, *args)
+        eng.admit(req)
+        for _ in range(12):
+            eng.step_once()
+        snap = eng.suspend_lane(0)
+        assert snap is not None and snap.started
+        assert eng.lanes[0].request is None
+        filler = Request(2, rng.randint(0, cfg.vocab_size, size=10).astype(
+            np.int32), 8, SamplingParams.greedy())
+        eng.admit(filler, lane=0)
+        while filler.result is None:
+            eng.step_once()
+        assert eng.resume_lane(snap, lane=1) == 1
+        while req.result is None:
+            eng.step_once()
+        np.testing.assert_array_equal(ref, req.result)
+
+    def test_parity_with_recovery_and_pending_thaw(self, tiny_f32):
+        """Suspension while the recovery ladder is mid-escalation (stashed
+        pages, a pending FR thaw) must carry the ladder scalars and the
+        thaw mark through the snapshot — the continuation replays the
+        exact thaw the uninterrupted run performs."""
+        cfg, params = tiny_f32
+        fc = dataclasses.replace(cfg.freeze, quantile=0.55, k_soft=0.7,
+                                 recovery_enabled=True,
+                                 entropy_abs_threshold=0.5, rewalk_tokens=8)
+        cfg = dataclasses.replace(cfg, freeze=fc)
+        rng = np.random.RandomState(3)
+        prompt = rng.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+        args = (prompt, 36, SamplingParams.greedy())
+        kw = dict(pages=5, max_seq=160)
+        ref = run_alone(cfg, params, args, **kw)
+
+        for cut in (14, 24):
+            eng = paged_engine(cfg, params, **kw)
+            req = Request(1, *args)
+            eng.admit(req)
+            for _ in range(cut):
+                eng.step_once()
+            snap = eng.suspend_lane(0)
+            assert snap is not None and snap.started
+            eng.resume_lane(snap, lane=1)
+            while req.result is None:
+                eng.step_once()
+            np.testing.assert_array_equal(ref, req.result,
+                                          err_msg=f"cut={cut}")
+
+    def test_preemption_under_full_host_pool(self, tiny_f32):
+        """Suspend a lane whose device pool is saturated and whose host
+        store already holds stashed pages: the whole-lane export must move
+        every page into the snapshot (the store forgets the lane), survive
+        the lane being reused, and restore exactly on resume."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(5)
+        prompt = rng.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+        args = (prompt, 40, SamplingParams.greedy())
+        kw = dict(pages=3, max_seq=160)       # minimum pool: max pressure
+        ref = run_alone(cfg, params, args, **kw)
+
+        eng = paged_engine(cfg, params, **kw)
+        req = Request(1, *args)
+        eng.admit(req)
+        for _ in range(30):                   # deep in: store populated
+            eng.step_once()
+        assert any(k[1] == 0 for k in eng.ctl.store), \
+            "test premise: lane 0 must have host-stashed pages"
+        snap = eng.suspend_lane(0)
+        assert snap is not None and len(snap.stashed) > 0
+        # whole-lane export: nothing of lane 0 remains in the controller
+        assert not any(k[1] == 0 for k in eng.ctl.store)
+        assert not any(k[1] == 0 for k in eng.ctl.frozen_meta)
+        filler = Request(2, rng.randint(0, cfg.vocab_size, size=16).astype(
+            np.int32), 12, SamplingParams.greedy())
+        eng.admit(filler, lane=0)
+        while filler.result is None:
+            eng.step_once()
+        eng.resume_lane(snap, lane=1)
+        while req.result is None:
+            eng.step_once()
+        np.testing.assert_array_equal(ref, req.result)
+
+    def test_mid_prefill_suspend_cancels_and_readmits(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(7)
+        prompt = rng.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+        args = (prompt, 16, SamplingParams.greedy())
+        ref = run_alone(cfg, params, args, max_seq=160)
+        eng = paged_engine(cfg, params, max_seq=160)
+        req = Request(1, *args)
+        eng.admit(req)
+        eng.step_once()                       # one prefill chunk
+        assert 0 in eng.prefills
+        snap = eng.suspend_lane(0)
+        assert snap is not None and not snap.started
+        assert 0 not in eng.prefills and eng.lanes[0].request is None
+        eng.resume_lane(snap)                 # plain re-admit
+        while req.result is None:
+            eng.step_once()
+        np.testing.assert_array_equal(ref, req.result)
+
+    def test_install_time_preemption_via_admit_over(self, tiny_f32):
+        """admit_over: the victim keeps decoding while the preemptor
+        prefills in scratch, is suspended exactly at install, surfaces
+        via drain_suspended, and still resumes token-identically."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(9)
+        prompt = rng.randint(0, cfg.vocab_size, size=20).astype(np.int32)
+        args = (prompt, 32, SamplingParams.greedy())
+        ref = run_alone(cfg, params, args)
+
+        eng = paged_engine(cfg, params)
+        victim = Request(1, *args)
+        eng.admit(victim)
+        for _ in range(10):
+            eng.step_once()
+        gen_before = len(eng.lanes[0].generated)
+        pre = Request(2, rng.randint(0, cfg.vocab_size, size=16).astype(
+            np.int32), 8, SamplingParams.greedy())
+        eng.admit_over(pre, 0)
+        assert eng._free_lane() == 1          # lane 0 is spoken for
+        snaps = []
+        while pre.result is None:
+            eng.step_once()
+            snaps += eng.drain_suspended()
+        assert len(snaps) == 1 and snaps[0].req is victim
+        # the victim decoded during the preemptor's prefill (2 chunks)
+        eng.flush()
+        assert len(snaps[0].generated) > gen_before
+        eng.resume_lane(snaps[0])
+        while victim.result is None:
+            eng.step_once()
+        np.testing.assert_array_equal(ref, victim.result)
+
+    def test_admit_over_victim_retires_mid_prefill(self, tiny_f32):
+        """If the victim finishes on its own before the preemptor's
+        prefill installs, no snapshot is produced and the install
+        degenerates to a normal admission — and the orphaned lane (no
+        request, prefill pending) still reads as busy to the scheduler."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(13)
+        eng = paged_engine(cfg, params)
+        victim = Request(1, rng.randint(0, cfg.vocab_size, size=10).astype(
+            np.int32), 6, SamplingParams.greedy())
+        eng.admit(victim)
+        while len(eng.lanes[0].generated) < 4:
+            eng.step_once()
+        pre = Request(2, rng.randint(0, cfg.vocab_size, size=40).astype(
+            np.int32), 8, SamplingParams.greedy())   # 5+ prefill chunks
+        eng.admit_over(pre, 0)
+        sched = Scheduler(eng)                # wraps the half-served state
+        saw_orphan = False
+        snaps = []
+        while pre.result is None:
+            eng.step_once()
+            snaps += eng.drain_suspended()
+            if eng.lanes[0].request is None and 0 in eng.prefills:
+                saw_orphan = True
+                assert sched.busy             # scheduler must keep driving
+        assert victim.result is not None and victim.result.shape == (6,)
+        assert snaps == [] and saw_orphan
+        assert pre.result.shape == (8,)
+
+    def test_contiguous_resume_completes(self, tiny_f32):
+        """The contiguous fallback re-prefills prompt + generated; the
+        continuation must complete with the right shape and keep the
+        request's host bookkeeping consistent (exact token parity is the
+        paged path's guarantee, not this one's)."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(11)
+        eng = ContinuousEngine(cfg, params, max_seq=128, n_lanes=2)
+        req = Request(1, rng.randint(0, cfg.vocab_size, size=20).astype(
+            np.int32), 24, SamplingParams.greedy())
+        eng.admit(req)
+        for _ in range(9):
+            eng.step_once()
+        snap = eng.suspend_lane(0)
+        assert snap is not None and snap.started
+        assert eng.resume_lane(snap, lane=1) == 1
+        while req.result is None:
+            eng.step_once()
+        assert req.result.shape == (24,)
+        assert req.result[:len(snap.generated)].tolist() == snap.generated
+
+
+class TestSchedulerPolicy:
+    def _sched(self, tiny_f32, policy="slo", clock=None):
+        cfg, params = tiny_f32
+        eng = paged_engine(cfg, params)
+        kw = {"clock": clock} if clock is not None else {}
+        return Scheduler(eng, policy=policy, **kw)
+
+    def test_edf_ordering_within_and_across_classes(self, tiny_f32):
+        """Randomized EDF property: pops come out ordered by (priority,
+        deadline, submission) regardless of submission order."""
+        rng = np.random.RandomState(0)
+        t = [0.0]
+        sched = self._sched(tiny_f32, clock=lambda: t[0])
+        for trial in range(30):
+            sched.queue.clear()
+            keys = []
+            for _ in range(12):
+                prio = int(rng.randint(0, 3))
+                dl = None if rng.rand() < 0.3 else float(rng.randint(1, 500))
+                uid = sched.submit(np.array([1, 2, 3], np.int32), 4,
+                                   SamplingParams.greedy(), priority=prio,
+                                   deadline_ms=dl)
+                keys.append((prio, np.inf if dl is None else dl / 1e3, uid))
+            popped = [sched._pop().uid for _ in range(12)]
+            expect = [u for _, _, u in sorted(keys)]
+            assert popped == expect, f"trial {trial}"
+
+    def test_no_deadline_trace_degrades_to_fifo(self, tiny_f32):
+        """Same priority, no deadlines: admission order must equal submit
+        order and nothing is ever preempted — the old FIFO behaviour."""
+        cfg, params = tiny_f32
+        sched = self._sched(tiny_f32)
+        rng = np.random.RandomState(1)
+        uids = [sched.submit(rng.randint(0, cfg.vocab_size, size=10), 6,
+                             SamplingParams.greedy()) for _ in range(5)]
+        sched.run()
+        admits = [e["uid"] for e in sched.engine.events
+                  if e["event"] == "admit_start"]
+        assert admits == uids
+        assert sched.n_preemptions == 0
+        for u in uids:
+            assert sched.done[u].result.shape == (6,)
+            assert sched.metrics[u]["deadline_hit"] is None
+
+    def test_priority_jumps_queue_without_deadline(self, tiny_f32):
+        """A higher class is admitted before earlier-submitted lower-class
+        requests (strict classes) even with no deadline set."""
+        cfg, params = tiny_f32
+        sched = self._sched(tiny_f32)
+        rng = np.random.RandomState(2)
+        bg = [sched.submit(rng.randint(0, cfg.vocab_size, size=10), 12,
+                           SamplingParams.greedy(), priority=5)
+              for _ in range(4)]
+        fg = sched.submit(rng.randint(0, cfg.vocab_size, size=10), 6,
+                          SamplingParams.greedy(), priority=0)
+        sched.run()
+        admits = [e["uid"] for e in sched.engine.events
+                  if e["event"] == "admit_start"]
+        # lanes 0/1 take bg[0], bg[1] immediately; the fg must be admitted
+        # before the remaining queued background
+        assert admits.index(fg) < admits.index(bg[2])
+        assert admits.index(fg) < admits.index(bg[3])
+
+    def test_deadline_preemption_end_to_end(self, tiny_f32):
+        """Two background hogs + one deadlined foreground: the foreground
+        preempts, completes, and the victims still finish with full-length
+        results (the preempted generation is resumed, not restarted)."""
+        cfg, params = tiny_f32
+        sched = self._sched(tiny_f32)
+        rng = np.random.RandomState(3)
+        bg = [sched.submit(rng.randint(0, cfg.vocab_size, size=10), 48,
+                           SamplingParams.greedy(), priority=5)
+              for _ in range(2)]
+        for _ in range(10):                   # hogs mid-flight, EMA warm
+            sched.step()
+        fg = sched.submit(rng.randint(0, cfg.vocab_size, size=8), 6,
+                          SamplingParams.greedy(), priority=0,
+                          deadline_ms=150.0)
+        sched.run()
+        assert sched.n_preemptions >= 1
+        assert sum(m["preempted"] for m in sched.metrics.values()) >= 1
+        assert sched.done[fg].result.shape == (6,)
+        for u in bg:
+            assert sched.done[u].result.shape == (48,)
+
+    def test_scheduler_wraps_static_engine(self, tiny_f32):
+        """The Engine-compat path (wrap into a ContinuousEngine) and the
+        suspend fallback still serve a trace to completion."""
+        cfg, params = tiny_f32
+        eng = Engine(cfg, params, max_seq=96, enable_freeze=False)
+        sched = Scheduler(eng, batch_size=2)
+        rng = np.random.RandomState(4)
+        uids = [sched.submit(rng.randint(0, cfg.vocab_size, size=8), 8)
+                for _ in range(3)]
+        sched.run()
+        for u in uids:
+            assert sched.done[u].result.shape == (8,)
+
+
+class TestStaticSchedulerSamplingGuard:
+    def test_mixed_sampling_batch_raises(self, tiny_f32):
+        cfg, params = tiny_f32
+        eng = Engine(cfg, params, max_seq=64, enable_freeze=False)
+        sched = StaticScheduler(eng, batch_size=2)
+        rng = np.random.RandomState(0)
+        sched.submit(rng.randint(0, cfg.vocab_size, size=8), 6,
+                     SamplingParams(temperature=0.7))
+        sched.submit(rng.randint(0, cfg.vocab_size, size=8), 6,
+                     SamplingParams.greedy())
+        with pytest.raises(ValueError, match="mixes"):
+            sched.run_once()
+
+    def test_homogeneous_batch_still_serves(self, tiny_f32):
+        cfg, params = tiny_f32
+        eng = Engine(cfg, params, max_seq=64, enable_freeze=False)
+        sched = StaticScheduler(eng, batch_size=2)
+        rng = np.random.RandomState(0)
+        uids = [sched.submit(rng.randint(0, cfg.vocab_size, size=8), 6,
+                             SamplingParams.greedy()) for _ in range(2)]
+        sched.run()
+        for u in uids:
+            assert sched.done[u].result.shape == (6,)

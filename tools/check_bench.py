@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Assert the serving benchmarks' acceptance criteria on their JSON output.
+
+Replaces the inline heredoc the CI tier-2 job used to carry: every
+criterion is a named check with a clear message, all checks run (failures
+don't mask each other), and the exit code is the failure count.
+
+    python tools/check_bench.py \\
+        experiments/bench/continuous_batching.json \\
+        BENCH_continuous_batching.json \\
+        --scheduling experiments/bench/scheduling.json
+
+Positional arguments are the continuous-batching benchmark's two outputs:
+the full report (experiments/bench/continuous_batching.json) and the
+machine-readable repo-root summary (BENCH_continuous_batching.json).
+``--scheduling`` adds the mixed-SLO scheduling report
+(experiments/bench/scheduling.json, see benchmarks/scheduling.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+FAILURES: list = []
+
+
+def check(name: str, cond: bool, msg: str) -> None:
+    tag = "ok  " if cond else "FAIL"
+    print(f"  [{tag}] {name}: {msg}")
+    if not cond:
+        FAILURES.append(name)
+
+
+def require_keys(name: str, d: dict, keys) -> bool:
+    missing = [k for k in keys if k not in d]
+    check(f"{name}-keys", not missing,
+          f"required keys present ({'missing: ' + ', '.join(missing) if missing else len(keys)})")
+    return not missing
+
+
+def check_report(path: pathlib.Path) -> None:
+    print(f"== {path}")
+    r = json.loads(path.read_text())
+    if not require_keys("report", r, (
+            "long_trace_contiguous", "long_trace_paged", "paged_mem_win",
+            "needle", "needle_acc_match", "needle_mem_win", "async_vs_sync")):
+        return
+    check("paged-mem-win", bool(r["paged_mem_win"]),
+          "paged engine must use less device KV than contiguous "
+          f"(paged={r['long_trace_paged'].get('peak_kv_bytes')} vs "
+          f"contiguous={r['long_trace_contiguous'].get('peak_kv_bytes')} bytes)")
+    check("needle-acc-match", bool(r["needle_acc_match"]),
+          "paged+recovery must match contiguous retrieval accuracy "
+          f"(needle={r['needle']})")
+    check("needle-mem-win", bool(r["needle_mem_win"]),
+          "needle scenario: paged must use less device KV")
+
+
+def check_bench(path: pathlib.Path) -> None:
+    print(f"== {path}")
+    b = json.loads(path.read_text())
+    if not require_keys("bench", b, (
+            "step_latency_ms", "host_blocked_fraction",
+            "peak_device_kv_bytes", "token_parity", "thaws",
+            "thaw_remap_fraction")):
+        return
+    check("async-token-parity", bool(b["token_parity"]),
+          "async pipeline must be token-identical to the sync path")
+    hb = b["host_blocked_fraction"]
+    check("async-blocked-win", hb["async"] < hb["sync"],
+          "async arm must block the host on strictly fewer steps "
+          f"(async={hb['async']} vs sync={hb['sync']})")
+    check("thaws-nonzero", b["thaws"] > 0,
+          f"the async smoke must produce thaws, else the remap assertion "
+          f"is vacuous (thaws={b['thaws']})")
+    check("thaw-remap-fraction", b["thaw_remap_fraction"] >= 0.5,
+          "speculative staging must turn >= half the thaws into "
+          f"remap-only installs (got {b['thaw_remap_fraction']})")
+
+
+def check_scheduling(path: pathlib.Path) -> None:
+    print(f"== {path}")
+    s = json.loads(path.read_text())
+    if not require_keys("scheduling", s, (
+            "fifo", "slo", "hit_rate_win", "fg_p99_win", "throughput_ok",
+            "preemptions", "preempt_resume_token_parity")):
+        return
+    check("preemptions-nonzero", s["preemptions"] > 0,
+          "the mixed-SLO trace must trigger lane preemption, else every "
+          f"other scheduling assertion is vacuous (got {s['preemptions']})")
+    check("deadline-hit-rate-win", bool(s["hit_rate_win"]),
+          "preemptive scheduler must strictly beat FIFO on foreground "
+          "deadline-hit-rate "
+          f"(slo={s['slo']['fg_deadline_hit_rate']} vs "
+          f"fifo={s['fifo']['fg_deadline_hit_rate']})")
+    check("fg-p99-win", bool(s["fg_p99_win"]),
+          "preemptive scheduler must strictly beat FIFO on foreground p99 "
+          f"latency (slo={s['slo']['fg_latency_p99_s']}s vs "
+          f"fifo={s['fifo']['fg_latency_p99_s']}s)")
+    check("throughput-ok", bool(s["throughput_ok"]),
+          "preemption must not degrade total token throughput — "
+          f"steady-state tokens/step within "
+          f"{s.get('throughput_tolerance')}x and blocked-transfer "
+          f"overhead <= {s.get('blocked_overhead_frac')} of wall "
+          f"(slo={s['slo'].get('steady_tokens_per_step')} vs "
+          f"fifo={s['fifo'].get('steady_tokens_per_step')} tok/step; "
+          f"wall tok/s reported: slo={s['slo']['tokens_per_s']} vs "
+          f"fifo={s['fifo']['tokens_per_s']})")
+    check("preempt-resume-parity", bool(s["preempt_resume_token_parity"]),
+          "every preempt-resumed request must be token-identical to its "
+          f"uninterrupted run ({s.get('parity_audited')} audited: "
+          f"{s.get('parity_by_uid')})")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("report", type=pathlib.Path,
+                    help="experiments/bench/continuous_batching.json")
+    ap.add_argument("bench", type=pathlib.Path,
+                    help="BENCH_continuous_batching.json (repo root)")
+    ap.add_argument("--scheduling", type=pathlib.Path, default=None,
+                    help="experiments/bench/scheduling.json (mixed-SLO "
+                         "trace, benchmarks/scheduling.py)")
+    args = ap.parse_args()
+
+    check_report(args.report)
+    check_bench(args.bench)
+    if args.scheduling is not None:
+        check_scheduling(args.scheduling)
+
+    if FAILURES:
+        print(f"\n{len(FAILURES)} benchmark assertion(s) failed: "
+              + ", ".join(FAILURES))
+    else:
+        print("\nall benchmark assertions passed")
+    return len(FAILURES)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
