@@ -15,7 +15,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp

@@ -10,12 +10,10 @@ can do copy-retrieval (cached across runs in experiments/).
 from __future__ import annotations
 
 import dataclasses
-import os
 import pathlib
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig

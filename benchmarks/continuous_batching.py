@@ -255,6 +255,7 @@ def _run_async_arm(cfg, params, smoke: bool, async_pipeline: bool):
     admissions depend only on lane availability, never on wall clock, so
     both arms make bit-identical decisions) through one paged engine arm;
     returns (per-uid token streams, stats dict)."""
+    from repro.analysis import trace_guard
     from repro.serving.engine import PagedContinuousEngine
     from repro.serving.scheduler import Scheduler
     from repro.serving.sampling import SamplingParams
@@ -271,9 +272,9 @@ def _run_async_arm(cfg, params, smoke: bool, async_pipeline: bool):
         burst_prefill=False)
     sched = Scheduler(eng)
     rng = np.random.RandomState(3)
-    uids = [sched.submit(rng.randint(0, cfg.vocab_size, size=pl), n,
-                         SamplingParams.greedy())
-            for pl, n in lens]
+    for pl, n in lens:
+        sched.submit(rng.randint(0, cfg.vocab_size, size=pl), n,
+                     SamplingParams.greedy())
 
     def run_trace():
         lat = []
@@ -295,11 +296,15 @@ def _run_async_arm(cfg, params, smoke: bool, async_pipeline: bool):
     # methodology; the structural metrics (parity, blocked fraction, thaw
     # counters) accumulate over both repeats
     lat_reps = []
-    for _ in range(2):
-        for pl, n in lens:                  # same trace shape each repeat
-            sched.submit(rng.randint(0, cfg.vocab_size, size=pl), n,
-                         SamplingParams.greedy())
-        lat_reps.append(run_trace())
+    # the warmup pass covered every (bucketed) shape this trace hits, so
+    # the timed repeats must not grow any jit compile cache — trace_guard
+    # reports the actual growth and the CI bench check asserts it is 0
+    with trace_guard(eng, label=f"async_arm(async={async_pipeline})") as tg:
+        for _ in range(2):
+            for pl, n in lens:              # same trace shape each repeat
+                sched.submit(rng.randint(0, cfg.vocab_size, size=pl), n,
+                             SamplingParams.greedy())
+            lat_reps.append(run_trace())
     lat = min(lat_reps, key=lambda ls: float(np.mean(ls)))
     snap1 = eng.stats.snapshot()
     d = lambda k: snap1[k] - snap0[k]
@@ -319,6 +324,8 @@ def _run_async_arm(cfg, params, smoke: bool, async_pipeline: bool):
         "thaw_remap": eng.ctl.n_thaw_remap - thaw0[1],
         "thaw_upload": eng.ctl.n_thaw_upload - thaw0[2],
         "peak_kv_bytes": int(eng.peak_kv_bytes),
+        "n_retraces": tg.n_retraces,
+        "retrace_growth": tg.growth,
     }
 
 
@@ -513,7 +520,7 @@ def main():
     print(f"\n{'async pipeline':>22s}  {'sync':>12s}  {'async':>12s}")
     for k in ("step_ms_mean", "step_ms_p50", "step_ms_p99",
               "host_blocked_fraction", "blocking_d2h", "blocking_h2d",
-              "thaws", "thaw_remap", "thaw_upload"):
+              "thaws", "thaw_remap", "thaw_upload", "n_retraces"):
         print(f"{k:>22s}  {ab['sync'][k]:>12}  {ab['async'][k]:>12}")
     print(f"\nasync token parity: {ab['token_parity']}   "
           f"host-blocked win: {ab['blocked_win']}   "
@@ -559,6 +566,15 @@ def main():
         "latency_win": ab["latency_win"],
         "thaws": ab["async"]["thaws"],
         "thaw_remap_fraction": ab["thaw_remap_fraction"],
+        # steady-state jit compile-cache growth over the timed repeats
+        # (repro.analysis.trace_guard; CI asserts --max-retraces 0)
+        "n_retraces": {arm: ab[arm]["n_retraces"]
+                       for arm in ("sync", "async")},
+        # total blocking host<->device transfers per arm: the async
+        # pipeline must not regress toward per-step blocking pulls
+        "blocking_transfers": {
+            arm: ab[arm]["blocking_d2h"] + ab[arm]["blocking_h2d"]
+            for arm in ("sync", "async")},
     }
     (pathlib.Path(__file__).resolve().parents[1]
      / "BENCH_continuous_batching.json").write_text(

@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-from typing import Dict, List
+from typing import List
 
 DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 

@@ -14,7 +14,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as MD
@@ -52,9 +51,10 @@ def main():
           f"{'PASS' if parity else 'DIVERGED'}")
     needle = DATA.encode_passkey(passkey)
     got = outs["asr-kf-egr"].tokens[0][: DATA.N_DIGITS]
+    verdict = "PASS" if (got == needle).all() \
+        else "needs trained model — see benchmarks table2"
     print(f"needle tokens {needle.tolist()} -> generated {got.tolist()} "
-          f"({'PASS' if (got == needle).all() else 'needs trained model — '
-              'see benchmarks table2'})")
+          f"({verdict})")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,6 @@ import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.models import model as MD

@@ -1,0 +1,9 @@
+"""Runtime companions to the static-analysis suite (tools/analysis).
+
+The static ``retrace`` pass is a lexical heuristic; ``trace_guard`` is
+its runtime backstop — it watches the actual jit compile caches while a
+workload runs and asserts they stop growing once warm.
+"""
+from .runtime import RetraceError, TraceReport, trace_guard
+
+__all__ = ["RetraceError", "TraceReport", "trace_guard"]

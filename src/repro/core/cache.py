@@ -15,7 +15,7 @@ Two layouts:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -153,7 +153,12 @@ class HostOffloadController:
         are considered reclaimable (zeroed to model release)."""
         pg = self.page_size
         all_frozen = self._all_frozen(frozen, reduced)     # (L, B, n_pages)
-        k_host = np.array(cache.k)     # mutable host copies
+        # mutable host copies of the full cache: sync round-trips K/V by
+        # design, and the serving engines gate it behind needs_sync so it
+        # runs only when a page actually moves
+        # hotpath: ok(page-batched offload round-trip, gated by needs_sync)
+        k_host = np.array(cache.k)
+        # hotpath: ok(page-batched offload round-trip, gated by needs_sync)
         v_host = np.array(cache.v)
         dirty = False
         for (l, b, p) in zip(*np.nonzero(all_frozen)):

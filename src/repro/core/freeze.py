@@ -19,7 +19,6 @@ from __future__ import annotations
 
 from typing import Dict, NamedTuple, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FreezeConfig

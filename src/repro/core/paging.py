@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FreezeConfig, ModelConfig
-from repro.core.freeze import FreezeState, schedule
+from repro.core.freeze import schedule
 
 
 class PageFreezeState(NamedTuple):

@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import FreezeConfig
 from repro.core.freeze import FreezeState

@@ -2,10 +2,7 @@
 shape/dtype sweep tests and by the CPU execution path)."""
 from __future__ import annotations
 
-import math
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FreezeConfig

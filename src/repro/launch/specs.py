@@ -6,7 +6,6 @@ the real init functions, inputs are ShapeDtypeStructs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -14,7 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 from repro.models import model as MD
 from repro.models import transformer as T
 from repro.sharding import rules as RU

@@ -12,9 +12,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.training import checkpoint as CKPT
 from repro.training import data as DATA
 from repro.training import train_step as TS

@@ -125,7 +125,6 @@ def mamba_decode(
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Single-token decode. x: (B, D) -> (y (B, D), new state)."""
     from repro.models.layers import dag
-    k = cfg.mamba_d_conv
     xz = dag(jnp.einsum("bd,de->be", x, p["in_proj"]), cfg, ".m")
     xr, z = jnp.split(xz, 2, axis=-1)                           # (B,di)
     window = jnp.concatenate([state["conv"], xr[:, None]], axis=1)  # (B,k,di)

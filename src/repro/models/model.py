@@ -5,7 +5,7 @@ implementation (decoder-only transformer stack vs whisper enc-dec).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

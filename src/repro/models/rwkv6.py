@@ -98,7 +98,6 @@ def _wkv_step(S, r, k, v, w, u):
 
 
 def _tm_output(p, y, g, cfg, eps):
-    B = y.shape[0]
     y = group_norm_heads(y, 1.0 + p["gn"], eps).astype(g.dtype)
     y = y.reshape(*g.shape[:-1], cfg.d_model) * jax.nn.silu(g)
     return jnp.einsum("...e,ed->...d", y, p["Wo"])

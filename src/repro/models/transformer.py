@@ -15,8 +15,6 @@ logits over the stacked freeze state.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -315,7 +313,6 @@ def lm_prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
     Returns (last-token logits (B, V), updated DecodeState)."""
     roles = unit_roles(cfg)
     B, S = tokens.shape
-    Smax = state.cache_k.shape[2] if state.cache_k.size else S
     x = embed(params, cfg, tokens, patch_embeds)
     positions = jnp.arange(S)
     xs_state = _split_xs(state, cfg)

@@ -643,10 +643,14 @@ class ContinuousEngine(_LaneEngineBase):
         event = {"event": "admit", "uid": req.uid, "lane": lane,
                  "wall_step": self.wall_step}
         if self.debug_lane_checks:
-            event["frozen_before"] = int(
-                np.asarray(self.state.freeze.frozen[:, lane]).sum())
-            event["recovery_steps_before"] = int(
-                np.asarray(self.state.recovery.steps_seen)[lane])
+            # ONE batched pull for both debug fields (was two separate
+            # blocking np.asarray materializations of full-state columns)
+            # hotpath: ok(debug_lane_checks lane audit, default-off in serving)
+            fro, seen = jax.device_get(
+                (self.state.freeze.frozen[:, lane],
+                 self.state.recovery.steps_seen[lane]))
+            event["frozen_before"] = int(fro.sum())
+            event["recovery_steps_before"] = int(seen)
         lane_state = MD.init_decode_state(self.cfg, 1, self.max_seq)
         self._note_kv_peak(lane_state.cache_k.nbytes + lane_state.cache_v.nbytes)
         logits, lane_state = self._prefill(
@@ -655,10 +659,12 @@ class ContinuousEngine(_LaneEngineBase):
         if self.offloader is not None:
             self.offloader.drop_lane(lane)
         if self.debug_lane_checks:
-            event["frozen_after"] = int(
-                np.asarray(self.state.freeze.frozen[:, lane]).sum())
-            event["recovery_steps_after"] = int(
-                np.asarray(self.state.recovery.steps_seen)[lane])
+            # hotpath: ok(debug_lane_checks lane audit, default-off in serving)
+            fro, seen = jax.device_get(
+                (self.state.freeze.frozen[:, lane],
+                 self.state.recovery.steps_seen[lane]))
+            event["frozen_after"] = int(fro.sum())
+            event["recovery_steps_after"] = int(seen)
         self.pos[lane] = sp
         self.step[lane] = 0
         l.request = req
@@ -1155,7 +1161,10 @@ class PagedContinuousEngine(_LaneEngineBase):
         dev = self._gather_lanes(self._state_arrs(),
                                  jnp.asarray(self._padded_idx(lanes)))
         t0 = time.perf_counter()
-        host = jax.device_get(dev)          # ONE D2H for all lanes + layers
+        # the ONE batched D2H for all boundary lanes + layers, recorded in
+        # TransferStats below — the pull every per-lane slice rides on
+        # hotpath: ok(single batched boundary-tick pull, counted via note_blocking)
+        host = jax.device_get(dev)
         dt = time.perf_counter() - t0
         names = self._POOL_FIELDS + self._FZ_FIELDS
         out = {}
@@ -1361,7 +1370,11 @@ class PagedContinuousEngine(_LaneEngineBase):
         # lane's entropy baseline on garbage logits, which must not leak
         # into the new occupant
         self.state = self._reset_lane(state=self.state, lane=jnp.int32(lane))
-        ck = np.array(pp.scratch.cache_k[:, 0])      # (L, sp, KVH, hd)
+        # (L, sp, KVH, hd) host repack: one pull per finished prefill (not
+        # per step) to slice the scratch cache into pool pages
+        # hotpath: ok(once-per-admission install repack, amortized over the request)
+        ck = np.array(pp.scratch.cache_k[:, 0])
+        # hotpath: ok(once-per-admission install repack, amortized over the request)
         cv = np.array(pp.scratch.cache_v[:, 0])
         n_pages = -(-sp // page)
         pad = n_pages * page - sp

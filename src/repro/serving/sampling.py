@@ -8,7 +8,7 @@ batch of heterogeneous requests."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

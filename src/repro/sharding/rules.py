@@ -12,7 +12,7 @@ granite kv=1 all replicate over model=16 while their FFN/vocab still shard).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

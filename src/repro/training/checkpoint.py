@@ -4,7 +4,7 @@ keyed by flattened tree paths; restore validates structure."""
 from __future__ import annotations
 
 import pathlib
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp

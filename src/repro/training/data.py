@@ -12,11 +12,10 @@ Deterministic, seedable, batched; the iterator yields device-ready dicts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
 
 
 @dataclasses.dataclass

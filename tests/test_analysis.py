@@ -1,0 +1,369 @@
+"""Self-tests for the static-analysis suite (tools/analysis) and its
+runtime companion (repro.analysis.trace_guard).
+
+Each pass gets seeded-violation fixtures (must flag), clean fixtures
+(must stay silent), and suppression fixtures (flag silenced by a
+reasoned ``# hotpath: ok(...)``).  The suite's acceptance criterion —
+zero unsuppressed findings over ``src/`` — is asserted here too, so a
+regression that reintroduces a hot-path sync fails tier-1, not just the
+CI analysis job.
+"""
+import pathlib
+import textwrap
+
+import pytest
+
+from tools.analysis import (ALL_PASSES, REPO_CONFIG, Config, Context,
+                            Diagnostic, DonationPass, HostSyncPass,
+                            RetracePass, SourceFile, run_passes)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+FIX_CONFIG = Config(
+    hot_functions=frozenset({"Eng.step_once"}),
+    device_roots=frozenset({"state", "logits"}),
+    bucketed_functions=frozenset({"Eng.warm"}),
+)
+
+
+def run_fixture(src, passes, config=FIX_CONFIG):
+    sf = SourceFile("fixture.py", text=textwrap.dedent(src), config=config)
+    ctx = Context(config)
+    ctx.add_file(sf)
+    diags = []
+    for p in passes:
+        for d in p.run(sf, ctx):
+            if d.line in sf.suppressions:
+                d.suppressed = sf.suppressions[d.line]
+            diags.append(d)
+    return sf, diags
+
+
+def active(diags):
+    return [d for d in diags if d.suppressed is None]
+
+
+# ===================================================================== #
+# hostsync
+# ===================================================================== #
+HOT_SYNCS = """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    class Eng:
+        def step_once(self):
+            a = int(self.state.freeze.frozen.sum())        # flag: int()
+            b = np.asarray(self.state.recovery.steps_seen)  # flag: asarray
+            host = jax.device_get(self.state)               # flag: get
+            c = self.state.tokens.item()                    # flag: item
+            for t in self.state.tokens:                     # flag: iterate
+                pass
+            ok = int(self.pos[0])         # host mirror: NOT flagged
+            toks = [t for t in self.pos]  # host comprehension: NOT flagged
+            return a, b, host, c, ok, toks
+
+        def admit_helper(self):
+            # identical syncs outside a hot region: allowed
+            return np.asarray(self.state.freeze.frozen), int(self.state.n)
+"""
+
+
+def test_hostsync_flags_each_sync_kind():
+    _, diags = run_fixture(HOT_SYNCS, [HostSyncPass()])
+    msgs = " | ".join(d.message for d in active(diags))
+    assert len(active(diags)) == 5
+    for needle in ("int()", "np.asarray", "device_get", ".item()",
+                   "iterating a device value"):
+        assert needle in msgs
+
+
+def test_hostsync_ignores_cold_functions_and_host_values():
+    _, diags = run_fixture(HOT_SYNCS, [HostSyncPass()])
+    for d in active(diags):
+        assert 7 <= d.line <= 12, f"unexpected finding: {d.render()}"
+
+
+def test_hostsync_comprehension_over_device_value():
+    src = """
+        import jax.numpy as jnp
+
+        class Eng:
+            def step_once(self):
+                return [int(t) for t in self.state.toks]
+    """
+    _, diags = run_fixture(src, [HostSyncPass()])
+    assert len(active(diags)) == 1
+    assert "comprehension over a device value" in active(diags)[0].message
+
+
+def test_hostsync_inline_hot_marker_and_suppression():
+    src = """
+        import numpy as np
+
+        def tick(state):
+            # hotpath: hot
+            bad = np.asarray(state.frozen)
+            fine = np.asarray(state.frozen)  # hotpath: ok(boundary-tick batch pull)
+            return bad, fine
+
+        def cold(state):
+            return np.asarray(state.frozen)   # not hot: silent
+    """
+    sf, diags = run_fixture(src, [HostSyncPass()])
+    acts, sups = active(diags), [d for d in diags if d.suppressed]
+    assert len(acts) == 1 and acts[0].line == 6
+    assert len(sups) == 1 and sups[0].suppressed == \
+        "boundary-tick batch pull"
+
+
+def test_suppression_on_preceding_line():
+    src = """
+        import numpy as np
+
+        class Eng:
+            def step_once(self):
+                # hotpath: ok(materialized once per admission)
+                return np.asarray(self.state.frozen)
+    """
+    _, diags = run_fixture(src, [HostSyncPass()])
+    assert not active(diags)
+    assert diags and diags[0].suppressed == "materialized once per admission"
+
+
+def test_suppression_without_reason_is_reported():
+    src = textwrap.dedent("""
+        import numpy as np
+
+        class Eng:
+            def step_once(self):
+                return np.asarray(self.state.frozen)  # hotpath: ok
+    """)
+    sf = SourceFile("fixture.py", text=src, config=FIX_CONFIG)
+    assert sf.bad_suppressions, "a reasonless suppression must be reported"
+    # and it does NOT silence the finding
+    ctx = Context(FIX_CONFIG)
+    ctx.add_file(sf)
+    diags = list(HostSyncPass().run(sf, ctx))
+    assert diags and all(d.line not in sf.suppressions for d in diags)
+
+
+def test_github_render_format():
+    d = Diagnostic("src/x.py", 12, 3, "hostsync", "msg here")
+    out = d.render("github")
+    assert out.startswith("::error file=src/x.py,line=12,col=3,")
+    assert out.endswith("::msg here")
+
+
+# ===================================================================== #
+# donation
+# ===================================================================== #
+DONATED_STATE = """
+    import functools
+    import jax
+
+    def decode_step(params, token, state):
+        return token, state
+
+    def write_lane(cfg, state, lane_state, lane):
+        return state
+
+    class Eng:
+        def __init__(self, params, cfg):
+            self._step = jax.jit(functools.partial(decode_step, params),
+                                 donate_argnames=("state",))
+            self._write = jax.jit(functools.partial(write_lane, cfg),
+                                  donate_argnames=("state", "lane_state"))
+
+        def bad_step(self, tok):
+            logits, out = self._step(tok, state=self.state)
+            return self.state.freeze.frozen        # read-after-donate
+
+        def good_step(self, tok):
+            logits, self.state = self._step(tok, state=self.state)
+            return self.state                      # rebound first: ok
+
+        def bad_write(self, ls):
+            self.state = self._write(self.state, ls, 0)
+            return ls.cache_k                      # lane_state donated
+
+        def good_write(self, ls):
+            self.state = self._write(self.state, ls, 0)
+            ls = self.fresh()
+            return ls.cache_k                      # rewritten first: ok
+"""
+
+
+def test_donation_flags_read_after_donate_keyword():
+    _, diags = run_fixture(DONATED_STATE, [DonationPass()])
+    lines = {d.line for d in active(diags)}
+    assert 20 in lines, "self.state read after keyword donation must flag"
+
+
+def test_donation_flags_positional_donation_through_partial():
+    _, diags = run_fixture(DONATED_STATE, [DonationPass()])
+    msgs = [d for d in active(diags) if "'ls'" in d.message]
+    assert len(msgs) == 1 and msgs[0].line == 28, \
+        "positional lane_state donation (partial-shifted) must flag"
+
+
+def test_donation_same_statement_rebind_and_rewrite_are_clean():
+    _, diags = run_fixture(DONATED_STATE, [DonationPass()])
+    lines = {d.line for d in active(diags)}
+    assert lines == {20, 28}, f"only the seeded bugs flag, got {lines}"
+
+
+def test_donation_suppression():
+    src = """
+        import jax
+
+        def f(state, x):
+            return x
+
+        class Eng:
+            def __init__(self):
+                self._f = jax.jit(f, donate_argnums=(0,))
+
+            def use(self, x):
+                out = self._f(self.state, x)
+                return self.state  # hotpath: ok(CPU backend copies, audited)
+    """
+    _, diags = run_fixture(src, [DonationPass()])
+    assert not active(diags) and len(diags) == 1
+
+
+# ===================================================================== #
+# retrace
+# ===================================================================== #
+RETRACE_SRC = """
+    import jax
+    import jax.numpy as jnp
+
+    def f(x, n):
+        return x
+
+    class Eng:
+        def __init__(self):
+            self._step = jax.jit(f)
+            self._chunk = jax.jit(f, static_argnames=("n",))
+
+        def bad_scalar(self, x):
+            return self._step(x, 0)                 # weak-typed scalar
+
+        def ok_static_scalar(self, x):
+            return self._chunk(x, n=4)              # static: fine
+
+        def bad_unhashable(self, x):
+            return self._chunk(x, n=[1, 2])         # unhashable static
+
+        def bad_open_shape(self, m):
+            return self._step(jnp.zeros((1, m)), jnp.int32(0))
+
+        def warm(self, m):
+            return self._step(jnp.zeros((1, m)), jnp.int32(0))
+"""
+
+
+def test_retrace_flags_python_scalar():
+    _, diags = run_fixture(RETRACE_SRC, [RetracePass()])
+    hits = [d for d in active(diags) if "python scalar" in d.message]
+    assert len(hits) == 1 and hits[0].line == 14
+
+
+def test_retrace_static_scalar_is_clean():
+    _, diags = run_fixture(RETRACE_SRC, [RetracePass()])
+    assert not any(d.line == 17 for d in active(diags))
+
+
+def test_retrace_flags_unhashable_static():
+    _, diags = run_fixture(RETRACE_SRC, [RetracePass()])
+    hits = [d for d in active(diags) if "unhashable" in d.message]
+    assert len(hits) == 1 and hits[0].line == 20
+
+
+def test_retrace_flags_open_shape_outside_bucket_set():
+    _, diags = run_fixture(RETRACE_SRC, [RetracePass()])
+    hits = [d for d in active(diags) if "data-dependent shape" in d.message]
+    assert len(hits) == 1 and hits[0].line == 23, \
+        "same constructor in the bucketed warm() must NOT flag"
+
+
+# ===================================================================== #
+# the repo baseline: zero unsuppressed findings over src/
+# ===================================================================== #
+def test_src_baseline_is_clean():
+    diags = run_passes([str(ROOT / "src")], ALL_PASSES, REPO_CONFIG)
+    bad = [d.render() for d in diags if d.suppressed is None]
+    assert not bad, "unsuppressed hot-path findings in src/:\n" \
+        + "\n".join(bad)
+    # every suppression that silences a finding carries a reason
+    assert all(d.suppressed.strip() for d in diags if d.suppressed)
+
+
+def test_repo_config_hot_functions_exist():
+    """Config rot guard: every declared hot function must still resolve
+    to a def somewhere under src/ (renames must update the config)."""
+    import ast
+    qualnames = set()
+    for f in (ROOT / "src").rglob("*.py"):
+        tree = ast.parse(f.read_text())
+
+        def visit(node, scope):
+            for ch in ast.iter_child_nodes(node):
+                if isinstance(ch, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qualnames.add(".".join(scope + (ch.name,)))
+                    visit(ch, scope + (ch.name,))
+                elif isinstance(ch, ast.ClassDef):
+                    visit(ch, scope + (ch.name,))
+                else:
+                    visit(ch, scope)
+
+        visit(tree, ())
+    missing = REPO_CONFIG.hot_functions - qualnames
+    assert not missing, f"hot_functions not found in src/: {missing}"
+
+
+# ===================================================================== #
+# runtime: trace_guard
+# ===================================================================== #
+def test_trace_guard_counts_and_raises():
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import RetraceError, trace_guard
+
+    f = jax.jit(functools.partial(lambda c, x: x * c, 2.0))
+
+    class Obj:
+        def __init__(self):
+            self._step = f
+            self.other = 41
+
+    o = Obj()
+    with trace_guard(o, label="warm") as tg:
+        f(jnp.ones(3))
+        f(jnp.ones(6))
+    assert tg.n_retraces == 2 and tg.growth == {"Obj._step": 2}
+
+    with trace_guard(o, max_new_compiles=0, label="steady") as tg:
+        f(jnp.ones(3))          # cached: no growth, no raise
+    assert tg.n_retraces == 0
+
+    with pytest.raises(RetraceError):
+        with trace_guard(o, max_new_compiles=0, label="grow"):
+            f(jnp.ones(12))
+
+
+def test_trace_guard_untracked_targets_degrade_gracefully():
+    from repro.analysis import trace_guard
+
+    class Plain:
+        def __init__(self):
+            self.x = 1
+
+    with trace_guard(Plain(), label="nothing") as tg:
+        pass
+    assert tg.n_retraces == 0 and tg.untracked == ["Plain"]
+    assert tg.summary()["n_tracked"] == 0

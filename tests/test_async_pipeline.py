@@ -21,8 +21,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import model as MD
 from repro.serving.dma import FetchRing, HostStaging, TransferStats
-from repro.serving.engine import (ContinuousEngine, PagedContinuousEngine,
-                                  Request)
+from repro.serving.engine import ContinuousEngine, PagedContinuousEngine
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler
 

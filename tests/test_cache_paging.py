@@ -1,17 +1,14 @@
 """Cache structures, host offload controller, and paged-pool machinery."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.configs.base import FreezeConfig
 from repro.core.cache import HostOffloadController, KVCache
-from repro.core.paging import (PagedController, PageFreezeState,
-                               init_page_freeze_state, page_freeze_update,
-                               paged_decode_attention, write_tail)
+from repro.core.paging import (
+    PagedController, init_page_freeze_state, page_freeze_update, paged_decode_attention, write_tail)
 from repro.models.layers import decode_attention
 
 

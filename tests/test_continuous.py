@@ -8,9 +8,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as MD
-from repro.serving.engine import ContinuousEngine, Engine
+from repro.serving.engine import ContinuousEngine
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import Scheduler, StaticScheduler
+from repro.serving.scheduler import Scheduler
 
 # the mixed-length request trace from the acceptance criteria: 8 requests,
 # n_tokens spanning 8..64, served on 4 lanes

@@ -7,7 +7,6 @@ import pathlib
 import subprocess
 import sys
 
-import jax
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs

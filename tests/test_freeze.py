@@ -1,10 +1,8 @@
 """Unit tests for the ASR-KF-EGR freeze state machine.  The hypothesis
 property tests live in test_freeze_properties.py so this module stays
 collectable where hypothesis is not installed."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import FreezeConfig
 from repro.core.freeze import (FreezeState, effective_tau, freeze_update,

@@ -66,7 +66,6 @@ def test_reversibility_no_permanent_loss(seed):
     to the active set within a bounded number of steps once it stops being
     flagged (relevance above tau)."""
     cfg = mk_cfg(window=2, k_soft=1.0)
-    rng = np.random.RandomState(seed)
     state = init_freeze_state(1, 16)
     # aggressively freeze for a while
     for step in range(20):

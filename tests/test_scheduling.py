@@ -9,8 +9,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as MD
-from repro.serving.engine import (ContinuousEngine, Engine, LaneSnapshot,
-                                  PagedContinuousEngine, Request)
+from repro.serving.engine import (
+    ContinuousEngine, Engine, PagedContinuousEngine, Request)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler, StaticScheduler
 

@@ -1,9 +1,7 @@
 """Sharding rules: divisibility fallbacks and spec structure (AbstractMesh —
 no devices needed)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -1,0 +1,175 @@
+"""Unit tests for the CI gate scripts: tools/check_bench.py (named
+benchmark criteria on synthetic JSON) and tools/check_links.py
+(markdown link/anchor fixtures)."""
+import json
+
+import pytest
+
+from tools import check_bench, check_links
+
+
+# ===================================================================== #
+# check_bench — synthetic passing JSONs, then break one criterion at a
+# time and assert exactly that named check fails
+# ===================================================================== #
+def good_report():
+    return {
+        "long_trace_contiguous": {"peak_kv_bytes": 400},
+        "long_trace_paged": {"peak_kv_bytes": 200},
+        "paged_mem_win": True,
+        "needle": {"paged_recovery": {"retrieval_acc": 1.0}},
+        "needle_acc_match": True,
+        "needle_mem_win": True,
+        "async_vs_sync": {},
+    }
+
+
+def good_bench():
+    return {
+        "step_latency_ms": {"sync": {"mean": 3.0}, "async": {"mean": 3.1}},
+        "host_blocked_fraction": {"sync": 1.0, "async": 0.25},
+        "peak_device_kv_bytes": {"contiguous": 400, "paged": 200},
+        "token_parity": True,
+        "thaws": 40,
+        "thaw_remap_fraction": 0.75,
+        "n_retraces": {"sync": 0, "async": 0},
+        "blocking_transfers": {"sync": 350, "async": 80},
+    }
+
+
+def good_scheduling():
+    arm = {"fg_deadline_hit_rate": 0.5, "fg_latency_p99_s": 0.6,
+           "tokens_per_s": 500.0, "steady_tokens_per_step": 1.9}
+    return {
+        "fifo": dict(arm),
+        "slo": dict(arm, fg_deadline_hit_rate=1.0, fg_latency_p99_s=0.05),
+        "hit_rate_win": True,
+        "fg_p99_win": True,
+        "throughput_ok": True,
+        "preemptions": 2,
+        "preempt_resume_token_parity": True,
+        "parity_audited": 2,
+        "parity_by_uid": {"1": True, "4": True},
+        "n_retraces": 0,
+        "retrace_growth": {},
+    }
+
+
+def run_main(tmp_path, report, bench, scheduling=None, extra=()):
+    rp = tmp_path / "report.json"
+    bp = tmp_path / "bench.json"
+    rp.write_text(json.dumps(report))
+    bp.write_text(json.dumps(bench))
+    argv = [str(rp), str(bp)]
+    if scheduling is not None:
+        sp = tmp_path / "scheduling.json"
+        sp.write_text(json.dumps(scheduling))
+        argv += ["--scheduling", str(sp)]
+    argv += list(extra)
+    rc = check_bench.main(argv)
+    return rc, list(check_bench.FAILURES)
+
+
+def test_check_bench_all_green(tmp_path):
+    rc, fails = run_main(tmp_path, good_report(), good_bench(),
+                         good_scheduling(), extra=["--max-retraces", "0"])
+    assert rc == 0 and not fails
+
+
+@pytest.mark.parametrize("mutate,expect", [
+    (lambda r, b, s: r.update(paged_mem_win=False), "paged-mem-win"),
+    (lambda r, b, s: r.update(needle_acc_match=False), "needle-acc-match"),
+    (lambda r, b, s: r.update(needle_mem_win=False), "needle-mem-win"),
+    (lambda r, b, s: b.update(token_parity=False), "async-token-parity"),
+    (lambda r, b, s: b["host_blocked_fraction"].update({"async": 1.0}),
+     "async-blocked-win"),
+    (lambda r, b, s: b["blocking_transfers"].update({"async": 400}),
+     "async-blocking-transfers"),
+    (lambda r, b, s: b.update(thaws=0), "thaws-nonzero"),
+    (lambda r, b, s: b.update(thaw_remap_fraction=0.2),
+     "thaw-remap-fraction"),
+    (lambda r, b, s: b["n_retraces"].update({"async": 3}), "max-retraces"),
+    (lambda r, b, s: s.update(n_retraces=2), "sched-max-retraces"),
+    (lambda r, b, s: s.update(preemptions=0), "preemptions-nonzero"),
+    (lambda r, b, s: s.update(hit_rate_win=False), "deadline-hit-rate-win"),
+    (lambda r, b, s: s.update(fg_p99_win=False), "fg-p99-win"),
+    (lambda r, b, s: s.update(throughput_ok=False), "throughput-ok"),
+    (lambda r, b, s: s.update(preempt_resume_token_parity=False),
+     "preempt-resume-parity"),
+])
+def test_check_bench_each_criterion_fails_alone(tmp_path, mutate, expect):
+    r, b, s = good_report(), good_bench(), good_scheduling()
+    mutate(r, b, s)
+    rc, fails = run_main(tmp_path, r, b, s, extra=["--max-retraces", "0"])
+    assert rc == len(fails) == 1 and fails == [expect]
+
+
+def test_check_bench_retraces_uncapped_without_flag(tmp_path):
+    b = good_bench()
+    b["n_retraces"]["async"] = 7
+    s = good_scheduling()
+    s["n_retraces"] = 7
+    rc, fails = run_main(tmp_path, good_report(), b, s)
+    assert rc == 0, "without --max-retraces the growth is report-only"
+
+
+def test_check_bench_missing_keys_fail_fast(tmp_path):
+    r = good_report()
+    del r["paged_mem_win"]
+    rc, fails = run_main(tmp_path, r, good_bench())
+    assert rc >= 1 and "report-keys" in fails
+
+
+# ===================================================================== #
+# check_links — fixture markdown trees
+# ===================================================================== #
+def write_docs(tmp_path, files):
+    for name, text in files.items():
+        p = tmp_path / name
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+
+
+def test_check_links_clean_tree(tmp_path, capsys):
+    write_docs(tmp_path, {
+        "README.md": "# Top\nSee [docs](docs/a.md) and "
+                     "[section](docs/a.md#my-heading) and "
+                     "[web](https://example.com/x).\n",
+        "docs/a.md": "# My Heading\nback to [readme](../README.md)\n",
+    })
+    rc = check_links.main([str(tmp_path / "README.md"),
+                           str(tmp_path / "docs")])
+    assert rc == 0
+    assert "ok" in capsys.readouterr().out
+
+
+def test_check_links_broken_target(tmp_path, capsys):
+    write_docs(tmp_path, {"README.md": "[gone](docs/missing.md)\n"})
+    rc = check_links.main([str(tmp_path / "README.md")])
+    assert rc == 1
+    assert "broken link -> docs/missing.md" in capsys.readouterr().err
+
+
+def test_check_links_missing_anchor(tmp_path, capsys):
+    write_docs(tmp_path, {
+        "README.md": "[s](a.md#no-such-heading)\n",
+        "a.md": "# Real Heading\n",
+    })
+    rc = check_links.main([str(tmp_path / "README.md")])
+    assert rc == 1
+    assert "missing anchor" in capsys.readouterr().err
+
+
+def test_check_links_ignores_code_fences_and_slug_rules(tmp_path):
+    write_docs(tmp_path, {
+        "README.md": "```\n[fake](inside/fence.md)\n```\n"
+                     "[ok](a.md#api--usage-notes)\n",
+        "a.md": "# API — `usage` *notes*\n",
+    })
+    rc = check_links.main([str(tmp_path / "README.md")])
+    assert rc == 0
+
+
+def test_check_links_slug():
+    assert check_links.slug("My `Code` Heading!") == "my-code-heading"
+    assert check_links.slug("A - B") == "a---b"

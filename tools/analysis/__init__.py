@@ -1,0 +1,31 @@
+"""Repo-specific static-analysis suite (hot-path sanitizer).
+
+Three AST passes tuned to this codebase's serving hot path:
+
+* ``hostsync``  — implicit device->host syncs in hot regions
+* ``donation``  — use-after-donate on jitted callables' donated args
+* ``retrace``   — jit call sites that grow the compile cache
+
+Run with ``python -m tools.analysis src/`` (see ``__main__.py``), or use
+the pieces directly::
+
+    from tools.analysis import ALL_PASSES, REPO_CONFIG, run_passes
+    diags = run_passes(["src"], ALL_PASSES, REPO_CONFIG)
+
+``docs/analysis.md`` documents suppressions (``# hotpath: ok(<reason>)``),
+hot-region declaration, and how to add a pass.
+"""
+from .config import REPO_CONFIG
+from .donation import DonationPass
+from .framework import (Config, Context, Diagnostic, Pass, SourceFile,
+                        run_passes, walk_paths)
+from .hostsync import HostSyncPass
+from .retrace import RetracePass
+
+ALL_PASSES = (HostSyncPass(), DonationPass(), RetracePass())
+
+__all__ = [
+    "ALL_PASSES", "Config", "Context", "Diagnostic", "DonationPass",
+    "HostSyncPass", "Pass", "REPO_CONFIG", "RetracePass", "SourceFile",
+    "run_passes", "walk_paths",
+]

@@ -1,0 +1,55 @@
+"""CLI driver: ``python -m tools.analysis [paths...]``.
+
+Exit code is the number of *unsuppressed* findings.  ``--format=github``
+renders each finding as a GitHub Actions workflow command so CI runs
+annotate the offending lines in the diff view.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import ALL_PASSES, REPO_CONFIG, run_passes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to scan (default: src)")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="diagnostic rendering (github = CI annotations)")
+    ap.add_argument("--pass", dest="only", action="append", default=None,
+                    metavar="NAME",
+                    help="run only the named pass (repeatable; "
+                         f"known: {', '.join(p.name for p in ALL_PASSES)})")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by "
+                         "'# hotpath: ok(reason)' comments")
+    args = ap.parse_args(argv)
+
+    passes = ALL_PASSES
+    if args.only:
+        unknown = set(args.only) - {p.name for p in ALL_PASSES}
+        if unknown:
+            ap.error(f"unknown pass(es): {', '.join(sorted(unknown))}")
+        passes = tuple(p for p in ALL_PASSES if p.name in args.only)
+
+    diags = run_passes(args.paths or ["src"], passes, REPO_CONFIG)
+    active = [d for d in diags if d.suppressed is None]
+    suppressed = [d for d in diags if d.suppressed is not None]
+
+    for d in active:
+        print(d.render(args.format))
+    if args.show_suppressed:
+        for d in suppressed:
+            print(f"{d.render('text')}  [suppressed: {d.suppressed}]")
+    print(f"{len(active)} finding(s), {len(suppressed)} suppressed "
+          f"({', '.join(p.name for p in passes)})", file=sys.stderr)
+    return len(active)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,240 @@
+"""donation — use-after-donate detection for jitted callables.
+
+``jax.jit(..., donate_argnames=("state",))`` invalidates the argument
+buffer the moment the call is dispatched: reading the donated array
+afterwards returns garbage (or raises on backends with real donation).
+The engines donate their decode state on every step/prefill/lane write,
+so the safe idiom is the same-statement rebind::
+
+    self.state = self._write_lane(self.state, lane_state, lane)   # ok
+    out = self._write_lane(self.state, lane_state, lane)
+    dbg = self.state.freeze.frozen                                # BUG
+
+The pass:
+
+1. collects ``<target> = jax.jit(fn, donate_argnums=... /
+   donate_argnames=...)`` assignments (``fn`` may be a ``functools.partial``,
+   a lambda, or a name defined in any scanned file);
+2. resolves each donated name to a call-site position via the cross-file
+   signature table, shifting past leading positional ``partial`` binds
+   (keyword binds don't shift; an ambiguous name falls back to matching
+   keyword call sites only);
+3. at every call of the target, takes donated arguments that are plain
+   names / attribute chains and flags the first later *read* of that
+   chain in the enclosing function that happens before any *write* to it.
+
+The read/write scan is linear in source order — branches are not modeled
+— which is exactly the shape of the engine code this guards (straight-
+line step/tick bodies).  Donation is checked everywhere, not just hot
+regions: a stale read is a correctness bug, not a perf bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .framework import Context, Diagnostic, Pass, SourceFile, dotted
+
+
+class _JitInfo:
+    def __init__(self, donate_nums: Tuple[int, ...],
+                 donate_names: Tuple[str, ...], wrapped: Optional[ast.AST],
+                 partial_shift: int):
+        self.donate_nums = donate_nums
+        self.donate_names = donate_names
+        self.wrapped = wrapped            # the fn expression inside jax.jit
+        self.partial_shift = partial_shift
+
+
+def _const_tuple(node: ast.AST) -> Tuple:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant))
+    if isinstance(node, ast.Constant):
+        return (node.value,)
+    return ()
+
+
+def _is_jax_jit(func: ast.AST, cfg) -> bool:
+    head = dotted(func) or ""
+    parts = head.split(".")
+    return (parts[-1] == "jit"
+            and (len(parts) == 1 or parts[0] in cfg.jax_aliases))
+
+
+class DonationPass(Pass):
+    name = "donation"
+    description = ("names read after being passed at a donate_argnums/"
+                   "donate_argnames position of a jitted callable")
+
+    # ---- collection ------------------------------------------------- #
+    def _collect(self, sf: SourceFile, ctx: Context) -> Dict[str, _JitInfo]:
+        cfg = ctx.config
+        jits: Dict[str, _JitInfo] = {}
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            call = node.value
+            if not (isinstance(call, ast.Call)
+                    and _is_jax_jit(call.func, cfg)):
+                continue
+            nums: Tuple[int, ...] = ()
+            names: Tuple[str, ...] = ()
+            for kw in call.keywords:
+                if kw.arg == "donate_argnums":
+                    nums = tuple(v for v in _const_tuple(kw.value)
+                                 if isinstance(v, int))
+                elif kw.arg == "donate_argnames":
+                    names = tuple(v for v in _const_tuple(kw.value)
+                                  if isinstance(v, str))
+            if not nums and not names:
+                continue
+            target = dotted(node.targets[0])
+            if target is None or not call.args:
+                continue
+            wrapped = call.args[0]
+            shift = 0
+            if (isinstance(wrapped, ast.Call)
+                    and (dotted(wrapped.func) or "").endswith("partial")
+                    and wrapped.args):
+                shift = len(wrapped.args) - 1   # positional binds shift
+                wrapped = wrapped.args[0]       # the real fn expression
+            jits[target] = _JitInfo(nums, names, wrapped, shift)
+        return jits
+
+    def _positions(self, info: _JitInfo, ctx: Context) -> Dict[int, str]:
+        """call-site positional index -> donated-name label."""
+        pos: Dict[int, str] = {i: f"argnum {i}" for i in info.donate_nums}
+        if not info.donate_names:
+            return pos
+        params: Optional[Tuple[str, ...]] = None
+        if isinstance(info.wrapped, ast.Lambda):
+            params = tuple(a.arg for a in info.wrapped.args.args)
+        else:
+            fname = (dotted(info.wrapped) or "").split(".")[-1]
+            for name in info.donate_names:
+                idx = ctx.param_index(fname, name) if fname else None
+                if idx is not None and idx - info.partial_shift >= 0:
+                    pos[idx - info.partial_shift] = name
+            return pos
+        for name in info.donate_names:
+            if name in params:
+                pos[params.index(name)] = name
+        return pos
+
+    # ---- checking --------------------------------------------------- #
+    def run(self, sf: SourceFile, ctx: Context) -> Iterable[Diagnostic]:
+        jits = self._collect(sf, ctx)
+        if not jits:
+            return []
+        out: List[Diagnostic] = []
+        for fn in sf.funcs:
+            body = fn.node
+            for call, stmt in self._calls_in(body):
+                target = dotted(call.func)
+                info = jits.get(target or "")
+                if info is None:
+                    continue
+                donated = self._donated_args(call, info, ctx)
+                for expr_name, label in donated:
+                    if self._stmt_writes(stmt, expr_name):
+                        continue          # same-statement rebind: safe
+                    bad = self._first_read_before_write(
+                        body, expr_name, stmt)
+                    if bad is not None:
+                        out.append(Diagnostic(
+                            sf.path, bad.lineno, bad.col_offset + 1,
+                            self.name,
+                            f"'{expr_name}' is read here after being "
+                            f"donated ({label}) to {target} on line "
+                            f"{call.lineno} — rebind it from the call's "
+                            "result first"))
+        return out
+
+    def _donated_args(self, call: ast.Call, info: _JitInfo,
+                      ctx: Context) -> List[Tuple[str, str]]:
+        donated: List[Tuple[str, str]] = []
+        positions = self._positions(info, ctx)
+        for i, arg in enumerate(call.args):
+            if i in positions:
+                name = dotted(arg)
+                if name:
+                    donated.append((name, positions[i]))
+        for kw in call.keywords:
+            if kw.arg in info.donate_names:
+                name = dotted(kw.value)
+                if name:
+                    donated.append((name, kw.arg))
+        return donated
+
+    @staticmethod
+    def _calls_in(fn_node: ast.AST) -> List[Tuple[ast.Call, ast.stmt]]:
+        """(call, enclosing statement) pairs inside one function body,
+        not descending into nested defs (they get their own FuncInfo)."""
+        pairs: List[Tuple[ast.Call, ast.stmt]] = []
+
+        def visit(node: ast.AST, stmt: Optional[ast.stmt]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda)):
+                    continue
+                cstmt = child if isinstance(child, ast.stmt) else stmt
+                if isinstance(child, ast.Call) and cstmt is not None:
+                    pairs.append((child, cstmt))
+                visit(child, cstmt)
+
+        visit(fn_node, None)
+        return pairs
+
+    @staticmethod
+    def _stmt_writes(stmt: ast.stmt, name: str) -> bool:
+        targets: List[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        flat: List[ast.AST] = []
+        for t in targets:
+            flat += list(t.elts) if isinstance(t, (ast.Tuple, ast.List)) \
+                else [t]
+        return any(dotted(t) == name for t in flat)
+
+    @staticmethod
+    def _first_read_before_write(fn_node: ast.AST, name: str,
+                                 stmt: ast.stmt) -> Optional[ast.AST]:
+        """First Load of `name` after the donating statement, unless a
+        Store to it (or to a prefix of it, e.g. rebinding `self.state`
+        kills `self.state.freeze`) comes first.  The cutoff is the END
+        of the statement containing the call, so the donated argument
+        itself (and siblings in the same statement) never self-flag.
+        Source order approximates execution order — good enough for
+        straight-line engine bodies."""
+        call_pos = (stmt.end_lineno or stmt.lineno,
+                    stmt.end_col_offset or 0)
+        events: List[Tuple[Tuple[int, int], str, ast.AST]] = []
+        prefixes = {name}
+        parts = name.split(".")
+        for i in range(1, len(parts)):
+            prefixes.add(".".join(parts[:i]))
+        for n in ast.walk(fn_node):
+            if not isinstance(n, (ast.Name, ast.Attribute)):
+                continue
+            d = dotted(n)
+            if d is None:
+                continue
+            pos = (n.lineno, n.col_offset)
+            if pos <= call_pos:
+                continue
+            if isinstance(n.ctx, ast.Store) and d in prefixes:
+                events.append((pos, "w", n))
+            elif isinstance(n.ctx, ast.Load) and (
+                    d == name or d.startswith(name + ".")):
+                # skip the inner chain of a Store attribute (self.state in
+                # `self.state.x = ...` is a Load but part of the write)
+                events.append((pos, "r", n))
+        events.sort(key=lambda e: e[0])
+        for pos, kind, n in events:
+            if kind == "w":
+                return None
+            return n
+        return None

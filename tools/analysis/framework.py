@@ -1,0 +1,325 @@
+"""Shared pass framework for the repo's static-analysis suite.
+
+The suite is a set of small AST passes tuned to *this* codebase's failure
+modes (hidden device->host syncs, jit retraces, use-after-donate) rather
+than a general linter.  This module owns everything the passes share:
+
+* ``SourceFile`` — one parsed file: AST, comment map, function table with
+  qualified names, hot-path spans, and suppression bookkeeping.
+* Suppressions — ``# hotpath: ok(<reason>)`` on the flagged line (or on
+  its own line directly above) silences any diagnostic on that line.  The
+  reason is mandatory; a bare ``# hotpath: ok`` or ``# hotpath: ok()`` is
+  itself reported and cannot be suppressed.
+* Hot-path declaration — a function is *hot* if its qualified name (e.g.
+  ``PagedContinuousEngine._boundary_tick``) is listed in the config's
+  ``hot_functions``, or if ``# hotpath: hot`` appears on (or directly
+  above) its ``def`` line.  Nested functions inherit hotness from any
+  enclosing hot function.
+* ``Pass`` — the interface: ``run(source, ctx)`` yielding ``Diagnostic``s.
+* ``Context`` — cross-file state, notably a table of function signatures
+  used by the donation pass to map ``donate_argnames`` to call-site
+  positions through ``functools.partial`` wrappers.
+* ``run_passes`` — the driver: walk paths, parse once, run every pass,
+  apply suppressions, and render ``text`` or ``github`` output.
+
+Passes register here via ``tools.analysis.__init__``; see
+``docs/analysis.md`` for the catalogue and how to add one.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(r"#\s*hotpath:\s*ok\s*(?:\((?P<reason>.*)\))?\s*$")
+HOT_MARK_RE = re.compile(r"#\s*hotpath:\s*hot\b")
+
+
+# --------------------------------------------------------------------- #
+# diagnostics
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Diagnostic:
+    path: str
+    line: int
+    col: int
+    pass_name: str
+    message: str
+    suppressed: Optional[str] = None    # suppression reason when silenced
+
+    def render(self, fmt: str = "text") -> str:
+        if fmt == "github":
+            return (f"::error file={self.path},line={self.line},"
+                    f"col={self.col},title={self.pass_name}::{self.message}")
+        return f"{self.path}:{self.line}:{self.col}: [{self.pass_name}] " \
+               f"{self.message}"
+
+
+# --------------------------------------------------------------------- #
+# configuration
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Per-run pass configuration (see tools/analysis/config.py for the
+    repo's instance; tests construct ad-hoc ones)."""
+    # qualified names (Class.method / function) that are hot-path regions
+    hot_functions: frozenset = frozenset()
+    # identifiers that mark an expression as device-resident when they
+    # appear anywhere in its attribute chain (self.state..., pp.scratch...)
+    device_roots: frozenset = frozenset()
+    # functions whose inline shape-constructor args form a declared closed
+    # bucket set (warm-up loops compiling each bucket exactly once)
+    bucketed_functions: frozenset = frozenset()
+    # module aliases
+    numpy_aliases: frozenset = frozenset({"np", "numpy"})
+    jnp_aliases: frozenset = frozenset({"jnp"})
+    jax_aliases: frozenset = frozenset({"jax"})
+    # path fragments to skip entirely (sync in test code is fine)
+    exclude_parts: tuple = ("tests", "test_", "conftest")
+
+
+# --------------------------------------------------------------------- #
+# source files
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class FuncInfo:
+    qualname: str
+    name: str
+    lineno: int
+    end_lineno: int
+    node: ast.AST
+    hot: bool = False
+
+
+class SourceFile:
+    """A parsed file plus the comment/function/suppression indexes the
+    passes need.  Raises SyntaxError upward — the driver reports files it
+    cannot parse as (unsuppressable) diagnostics."""
+
+    def __init__(self, path: str, text: Optional[str] = None,
+                 config: Config = Config()):
+        self.path = path
+        self.text = pathlib.Path(path).read_text() if text is None else text
+        self.config = config
+        self.tree = ast.parse(self.text, filename=path)
+        self._scan_comments()
+        self._build_functions()
+        self._resolve_markers()
+
+    # ---- comments / suppressions ---------------------------------- #
+    def _scan_comments(self) -> None:
+        self.comments: Dict[int, str] = {}
+        code_lines: Set[int] = set()
+        try:
+            toks = list(tokenize.generate_tokens(
+                io.StringIO(self.text).readline))
+        except tokenize.TokenError:
+            toks = []
+        skip = {tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE,
+                tokenize.INDENT, tokenize.DEDENT, tokenize.ENDMARKER}
+        for tok in toks:
+            if tok.type == tokenize.COMMENT:
+                self.comments[tok.start[0]] = tok.string
+            elif tok.type not in skip:
+                code_lines.update(range(tok.start[0], tok.end[0] + 1))
+        self._code_lines = code_lines
+
+    def _apply_line(self, comment_line: int) -> Optional[int]:
+        """The code line a comment governs: its own line when it trails
+        code, else the next code line below it."""
+        if comment_line in self._code_lines:
+            return comment_line
+        later = [ln for ln in self._code_lines if ln > comment_line]
+        return min(later) if later else None
+
+    def _resolve_markers(self) -> None:
+        self.suppressions: Dict[int, str] = {}
+        self.bad_suppressions: List[Tuple[int, str]] = []
+        hot_lines: List[int] = []
+        for cline, text in self.comments.items():
+            m = SUPPRESS_RE.search(text)
+            if m:
+                reason = (m.group("reason") or "").strip()
+                target = self._apply_line(cline)
+                if not reason:
+                    self.bad_suppressions.append(
+                        (cline, "suppression without a reason — write "
+                                "'# hotpath: ok(<why this sync is fine>)'"))
+                elif target is not None:
+                    self.suppressions[target] = reason
+                continue
+            if HOT_MARK_RE.search(text):
+                target = self._apply_line(cline)
+                if target is not None:
+                    hot_lines.append(target)
+        # inline hot markers: the innermost function containing the marked
+        # line becomes hot (markers belong on/above the `def` line)
+        for ln in hot_lines:
+            fn = self.innermost_function(ln)
+            if fn is not None:
+                fn.hot = True
+
+    # ---- function table ------------------------------------------- #
+    def _build_functions(self) -> None:
+        self.funcs: List[FuncInfo] = []
+        cfg = self.config
+
+        def visit(node: ast.AST, scope: Tuple[str, ...]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = ".".join(scope + (child.name,))
+                    self.funcs.append(FuncInfo(
+                        qualname=qual, name=child.name,
+                        lineno=child.lineno,
+                        end_lineno=child.end_lineno or child.lineno,
+                        node=child, hot=qual in cfg.hot_functions))
+                    visit(child, scope + (child.name,))
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, scope + (child.name,))
+                else:
+                    visit(child, scope)
+
+        visit(self.tree, ())
+
+    def innermost_function(self, line: int) -> Optional[FuncInfo]:
+        best = None
+        for fn in self.funcs:
+            if fn.lineno <= line <= fn.end_lineno:
+                if best is None or fn.lineno > best.lineno:
+                    best = fn
+        return best
+
+    def enclosing_functions(self, line: int) -> List[FuncInfo]:
+        return [fn for fn in self.funcs if fn.lineno <= line <= fn.end_lineno]
+
+    def is_hot(self, line: int) -> bool:
+        """True when the line sits inside any hot function (nested
+        helpers inherit hotness from their enclosing hot region)."""
+        return any(fn.hot for fn in self.enclosing_functions(line))
+
+
+# --------------------------------------------------------------------- #
+# expression helpers shared by passes
+# --------------------------------------------------------------------- #
+def dotted(node: ast.AST) -> Optional[str]:
+    """'self.state.freeze' for a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def chain_idents(node: ast.AST) -> Set[str]:
+    """Every identifier appearing in Name/Attribute chains under node."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def contains_nonconstant(node: ast.AST) -> bool:
+    """True when the expression depends on any runtime name."""
+    return any(isinstance(n, (ast.Name, ast.Attribute))
+               for n in ast.walk(node))
+
+
+# --------------------------------------------------------------------- #
+# cross-file context
+# --------------------------------------------------------------------- #
+class Context:
+    """Cross-file state built before the passes run.
+
+    ``signatures`` maps a bare function name to the list of positional
+    parameter-name tuples seen across all scanned files (lambdas and
+    nested defs included).  The donation pass uses it to turn
+    ``donate_argnames`` into call-site positions; when defs with the same
+    name disagree on a donated parameter's position, the positional
+    mapping for that name is dropped (keyword call sites still match).
+    """
+
+    def __init__(self, config: Config):
+        self.config = config
+        self.signatures: Dict[str, List[Tuple[str, ...]]] = {}
+
+    def add_file(self, sf: SourceFile) -> None:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                name = getattr(node, "name", None)
+                if name is None:
+                    continue
+                params = tuple(a.arg for a in node.args.args)
+                self.signatures.setdefault(name, []).append(params)
+
+    def param_index(self, func_name: str, param: str) -> Optional[int]:
+        """Positional index of ``param`` in every known def of
+        ``func_name`` — None when unknown or ambiguous."""
+        idxs = set()
+        for params in self.signatures.get(func_name, []):
+            if param in params:
+                idxs.add(params.index(param))
+        return idxs.pop() if len(idxs) == 1 else None
+
+
+# --------------------------------------------------------------------- #
+# pass interface + driver
+# --------------------------------------------------------------------- #
+class Pass:
+    name = "base"
+    description = ""
+
+    def run(self, sf: SourceFile, ctx: Context) -> Iterable[Diagnostic]:
+        raise NotImplementedError
+
+
+def walk_paths(paths: Sequence[str], config: Config) -> List[pathlib.Path]:
+    files: List[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        cands = sorted(path.rglob("*.py")) if path.is_dir() else [path]
+        for f in cands:
+            s = str(f)
+            if "__pycache__" in s:
+                continue
+            if path.is_dir() and any(part in s for part
+                                     in config.exclude_parts):
+                continue
+            files.append(f)
+    return files
+
+
+def run_passes(paths: Sequence[str], passes: Sequence[Pass],
+               config: Config) -> List[Diagnostic]:
+    """Run every pass over every file; returns ALL diagnostics with
+    suppressed ones annotated (callers filter on ``.suppressed``)."""
+    files = walk_paths(paths, config)
+    sources: List[SourceFile] = []
+    diags: List[Diagnostic] = []
+    for f in files:
+        try:
+            sources.append(SourceFile(str(f), config=config))
+        except SyntaxError as e:
+            diags.append(Diagnostic(str(f), e.lineno or 1, e.offset or 1,
+                                    "parse", f"syntax error: {e.msg}"))
+    ctx = Context(config)
+    for sf in sources:
+        ctx.add_file(sf)
+    for sf in sources:
+        for ln, msg in sf.bad_suppressions:
+            diags.append(Diagnostic(sf.path, ln, 1, "suppression", msg))
+        for p in passes:
+            for d in p.run(sf, ctx):
+                if d.line in sf.suppressions:
+                    d.suppressed = sf.suppressions[d.line]
+                diags.append(d)
+    diags.sort(key=lambda d: (d.path, d.line, d.col))
+    return diags

@@ -1,0 +1,113 @@
+"""hostsync — flag implicit device->host synchronization in hot regions.
+
+Every one of these forces the host to wait for device compute when the
+operand lives on device:
+
+* ``np.asarray(x)`` / ``np.array(x)`` on a device value
+* ``int(x)`` / ``float(x)`` / ``bool(x)`` on a device value
+* ``x.item()`` / ``x.tolist()`` on a device value
+* ``jax.device_get(...)`` and ``x.block_until_ready()`` (explicit syncs —
+  always flagged in hot regions so each carries a reasoned suppression)
+* iterating a device value (``for t in tokens_dev`` materializes it)
+
+"Device value" is a lexical heuristic: the expression's attribute chain
+contains one of the configured ``device_roots`` identifiers (``state``,
+``scratch``, ``logits``...) or a ``jnp.*`` / ``jax.*`` call.  Host-side
+numpy mirrors (``self.pos``, ring-drained dicts) share none of those
+roots, so the boundary-tick commit loops stay clean without annotations.
+
+Only *hot* regions are checked (config ``hot_functions`` or an inline
+``# hotpath: hot`` marker): admission/retirement helpers and test code
+may sync freely.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .framework import (Context, Diagnostic, Pass, SourceFile, chain_idents,
+                        dotted)
+
+_CASTS = ("int", "float", "bool")
+_NP_CONVERSIONS = ("asarray", "array")
+_SYNC_METHODS = ("item", "tolist")
+
+
+class HostSyncPass(Pass):
+    name = "hostsync"
+    description = ("implicit device->host syncs (np.asarray, int(), "
+                   ".item(), device_get, iteration) in hot-path regions")
+
+    def run(self, sf: SourceFile, ctx: Context) -> Iterable[Diagnostic]:
+        cfg = ctx.config
+        out: List[Diagnostic] = []
+
+        def is_device(node: ast.AST) -> bool:
+            """Lexical device-value heuristic (see module docstring)."""
+            if chain_idents(node) & cfg.device_roots:
+                return True
+            for n in ast.walk(node):
+                if isinstance(n, ast.Call):
+                    head = dotted(n.func) or ""
+                    root = head.split(".", 1)[0]
+                    if root in cfg.jnp_aliases | cfg.jax_aliases:
+                        return True
+            return False
+
+        def emit(node: ast.AST, msg: str) -> None:
+            out.append(Diagnostic(sf.path, node.lineno, node.col_offset + 1,
+                                  self.name, msg))
+
+        for node in ast.walk(sf.tree):
+            line = getattr(node, "lineno", None)
+            if line is None or not sf.is_hot(line):
+                continue
+            if isinstance(node, ast.Call):
+                head = dotted(node.func) or ""
+                parts = head.split(".")
+                # jax.device_get(...) — explicit blocking pull
+                if parts[0] in cfg.jax_aliases and parts[-1] == "device_get":
+                    emit(node, "jax.device_get blocks the host on device "
+                               "compute inside a hot region")
+                    continue
+                # np.asarray/np.array on a device value
+                if (len(parts) == 2 and parts[0] in cfg.numpy_aliases
+                        and parts[1] in _NP_CONVERSIONS and node.args
+                        and is_device(node.args[0])):
+                    emit(node, f"{head}(...) materializes a device value "
+                               "on host (implicit D2H sync) in a hot region")
+                    continue
+                # int()/float()/bool() on a device value
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in _CASTS and node.args
+                        and is_device(node.args[0])):
+                    emit(node, f"{node.func.id}() on a device value forces "
+                               "a scalar D2H sync in a hot region")
+                    continue
+                # x.item()/x.tolist()/x.block_until_ready()
+                if isinstance(node.func, ast.Attribute):
+                    meth = node.func.attr
+                    if meth == "block_until_ready":
+                        emit(node, ".block_until_ready() stalls the host "
+                                   "inside a hot region")
+                        continue
+                    if meth in _SYNC_METHODS and is_device(node.func.value):
+                        emit(node, f".{meth}() on a device value forces a "
+                                   "D2H sync in a hot region")
+                        continue
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                if is_device(node.iter):
+                    emit(node, "iterating a device value materializes it "
+                               "element-wise (hidden D2H sync per element)")
+        # comprehension iterables (ast.comprehension has no lineno; use the
+        # iterable expression's own position and hotness)
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                 ast.GeneratorExp)):
+                for gen in node.generators:
+                    it = gen.iter
+                    if sf.is_hot(it.lineno) and is_device(it):
+                        emit(it, "comprehension over a device value "
+                                 "materializes it element-wise (hidden D2H "
+                                 "sync per element)")
+        return out

@@ -1,0 +1,144 @@
+"""retrace — flag call-site patterns that grow a jit's compile cache.
+
+A jitted callable recompiles whenever an argument's abstract value
+changes: a new shape, a new dtype (including the weak-typed dtype a bare
+Python scalar gets), or a new static-argument value.  The step loop must
+hit a *closed* set of traces — anything data-dependent retraces forever.
+
+Flagged at call sites of collected ``jax.jit`` targets:
+
+* **python-scalar** — a bare numeric/bool literal argument at a
+  non-static position.  Python scalars trace as *weak-typed* values: mix
+  one call site passing ``0`` with another passing ``jnp.int32(0)`` and
+  the jit compiles twice.  Wrap in ``jnp.int32(...)``/``jnp.asarray`` or
+  declare the position static.  (Named scalar variables are not flagged —
+  their types aren't statically known; the runtime ``trace_guard`` is the
+  backstop.)
+* **unhashable-static** — a list/dict/set literal passed at a
+  ``static_argnums``/``static_argnames`` position (raises at runtime).
+* **open-shape** — an inline array constructor (``jnp.zeros`` /
+  ``ones`` / ``full`` / ``empty`` / ``arange``) or slice expression with
+  a *non-constant* extent passed straight into a jitted call, outside a
+  function declared in the config's ``bucketed_functions``.  Bucketed
+  functions (``warm_prefill``-style warm-up loops iterating a fixed
+  chunk/bucket table) compile each member shape exactly once by design.
+
+This is a lexical heuristic, deliberately conservative; its runtime
+companion ``repro.analysis.runtime.trace_guard`` asserts the actual
+compile-cache sizes stay flat over the benchmarks' steady state.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Tuple
+
+from .framework import (Context, Diagnostic, Pass, SourceFile,
+                        contains_nonconstant, dotted)
+from .donation import _const_tuple, _is_jax_jit
+
+_SHAPE_CTORS = ("zeros", "ones", "full", "empty", "arange")
+
+
+class _Target:
+    def __init__(self, static_nums: Tuple[int, ...],
+                 static_names: Tuple[str, ...]):
+        self.static_nums = static_nums
+        self.static_names = static_names
+
+
+class RetracePass(Pass):
+    name = "retrace"
+    description = ("jit call sites passing python scalars, open-ended "
+                   "shapes, or unhashable static args")
+
+    def _collect(self, sf: SourceFile, ctx: Context) -> Dict[str, _Target]:
+        cfg = ctx.config
+        targets: Dict[str, _Target] = {}
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            call = node.value
+            if not (isinstance(call, ast.Call)
+                    and _is_jax_jit(call.func, cfg)):
+                continue
+            name = dotted(node.targets[0])
+            if name is None:
+                continue
+            nums: Tuple[int, ...] = ()
+            names: Tuple[str, ...] = ()
+            for kw in call.keywords:
+                if kw.arg == "static_argnums":
+                    nums = tuple(v for v in _const_tuple(kw.value)
+                                 if isinstance(v, int))
+                elif kw.arg == "static_argnames":
+                    names = tuple(v for v in _const_tuple(kw.value)
+                                  if isinstance(v, str))
+            targets[name] = _Target(nums, names)
+        return targets
+
+    def run(self, sf: SourceFile, ctx: Context) -> Iterable[Diagnostic]:
+        cfg = ctx.config
+        targets = self._collect(sf, ctx)
+        if not targets:
+            return []
+        out: List[Diagnostic] = []
+        np_like = cfg.numpy_aliases | cfg.jnp_aliases
+
+        def emit(node: ast.AST, msg: str) -> None:
+            out.append(Diagnostic(sf.path, node.lineno, node.col_offset + 1,
+                                  self.name, msg))
+
+        def open_shape(expr: ast.AST) -> bool:
+            """Inline constructor/slice whose extent isn't a literal."""
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Call):
+                    head = (dotted(n.func) or "").split(".")
+                    if (len(head) == 2 and head[0] in np_like
+                            and head[1] in _SHAPE_CTORS and n.args
+                            and contains_nonconstant(n.args[0])):
+                        return True
+                elif isinstance(n, ast.Slice):
+                    for bound in (n.lower, n.upper, n.step):
+                        if bound is not None \
+                                and contains_nonconstant(bound):
+                            return True
+            return False
+
+        for fn in sf.funcs:
+            bucketed = fn.qualname in cfg.bucketed_functions \
+                or fn.name in cfg.bucketed_functions
+            for node in ast.walk(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                tname = dotted(node.func)
+                tgt = targets.get(tname or "")
+                if tgt is None:
+                    continue
+                args: List[Tuple[object, ast.AST, bool]] = \
+                    [(i, a, i in tgt.static_nums)
+                     for i, a in enumerate(node.args)]
+                args += [(kw.arg, kw.value, kw.arg in tgt.static_names)
+                         for kw in node.keywords]
+                for key, a, is_static in args:
+                    if is_static:
+                        if isinstance(a, (ast.List, ast.Dict, ast.Set)):
+                            emit(a, f"unhashable literal passed at static "
+                                    f"position {key!r} of {tname} — jit "
+                                    "static args must be hashable")
+                        continue
+                    if (isinstance(a, ast.Constant)
+                            and isinstance(a.value, (bool, int, float))):
+                        emit(a, f"bare python scalar {a.value!r} passed to "
+                                f"jitted {tname} (arg {key!r}) — weak-typed "
+                                "scalars fork the compile cache; wrap in "
+                                "jnp.asarray/jnp.int32 or mark the "
+                                "position static")
+                        continue
+                    if not bucketed and open_shape(a):
+                        emit(a, f"data-dependent shape built inline in a "
+                                f"call to jitted {tname} (arg {key!r}) — "
+                                "every new extent retraces; route through "
+                                "a declared bucket set (config "
+                                "bucketed_functions) or pad to a fixed "
+                                "shape")
+        return out

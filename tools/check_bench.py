@@ -58,13 +58,13 @@ def check_report(path: pathlib.Path) -> None:
           "needle scenario: paged must use less device KV")
 
 
-def check_bench(path: pathlib.Path) -> None:
+def check_bench(path: pathlib.Path, max_retraces=None) -> None:
     print(f"== {path}")
     b = json.loads(path.read_text())
     if not require_keys("bench", b, (
             "step_latency_ms", "host_blocked_fraction",
             "peak_device_kv_bytes", "token_parity", "thaws",
-            "thaw_remap_fraction")):
+            "thaw_remap_fraction", "n_retraces", "blocking_transfers")):
         return
     check("async-token-parity", bool(b["token_parity"]),
           "async pipeline must be token-identical to the sync path")
@@ -72,21 +72,36 @@ def check_bench(path: pathlib.Path) -> None:
     check("async-blocked-win", hb["async"] < hb["sync"],
           "async arm must block the host on strictly fewer steps "
           f"(async={hb['async']} vs sync={hb['sync']})")
+    bt = b["blocking_transfers"]
+    check("async-blocking-transfers", bt["async"] < bt["sync"],
+          "async arm must issue strictly fewer blocking host<->device "
+          f"transfers (async={bt['async']} vs sync={bt['sync']})")
     check("thaws-nonzero", b["thaws"] > 0,
           f"the async smoke must produce thaws, else the remap assertion "
           f"is vacuous (thaws={b['thaws']})")
     check("thaw-remap-fraction", b["thaw_remap_fraction"] >= 0.5,
           "speculative staging must turn >= half the thaws into "
           f"remap-only installs (got {b['thaw_remap_fraction']})")
+    if max_retraces is not None:
+        worst = max(b["n_retraces"].values())
+        check("max-retraces", worst <= max_retraces,
+              "steady-state jit compile caches must stay flat over the "
+              f"timed repeats (worst arm grew {worst} trace(s), allowed "
+              f"{max_retraces}; per arm: {b['n_retraces']})")
 
 
-def check_scheduling(path: pathlib.Path) -> None:
+def check_scheduling(path: pathlib.Path, max_retraces=None) -> None:
     print(f"== {path}")
     s = json.loads(path.read_text())
     if not require_keys("scheduling", s, (
             "fifo", "slo", "hit_rate_win", "fg_p99_win", "throughput_ok",
-            "preemptions", "preempt_resume_token_parity")):
+            "preemptions", "preempt_resume_token_parity", "n_retraces")):
         return
+    if max_retraces is not None:
+        check("sched-max-retraces", s["n_retraces"] <= max_retraces,
+              "steady-state jit compile caches must stay flat over the "
+              f"timed scheduling repeats (grew {s['n_retraces']} trace(s), "
+              f"allowed {max_retraces}; growth: {s.get('retrace_growth')})")
     check("preemptions-nonzero", s["preemptions"] > 0,
           "the mixed-SLO trace must trigger lane preemption, else every "
           f"other scheduling assertion is vacuous (got {s['preemptions']})")
@@ -114,7 +129,7 @@ def check_scheduling(path: pathlib.Path) -> None:
           f"{s.get('parity_by_uid')})")
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("report", type=pathlib.Path,
@@ -124,12 +139,18 @@ def main() -> int:
     ap.add_argument("--scheduling", type=pathlib.Path, default=None,
                     help="experiments/bench/scheduling.json (mixed-SLO "
                          "trace, benchmarks/scheduling.py)")
-    args = ap.parse_args()
+    ap.add_argument("--max-retraces", type=int, default=None,
+                    metavar="N",
+                    help="assert the benchmarks' steady-state jit "
+                         "compile-cache growth (n_retraces, measured by "
+                         "repro.analysis.trace_guard) is <= N per arm")
+    args = ap.parse_args(argv)
 
+    FAILURES.clear()            # main() is re-entrant for the unit tests
     check_report(args.report)
-    check_bench(args.bench)
+    check_bench(args.bench, max_retraces=args.max_retraces)
     if args.scheduling is not None:
-        check_scheduling(args.scheduling)
+        check_scheduling(args.scheduling, max_retraces=args.max_retraces)
 
     if FAILURES:
         print(f"\n{len(FAILURES)} benchmark assertion(s) failed: "
