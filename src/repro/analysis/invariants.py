@@ -1,0 +1,114 @@
+"""Runtime invariant auditor for the paged serving stack — the
+consistency sibling of ``trace_guard`` (which audits compile caches, not
+data structures).
+
+The paged engine's correctness rests on a handful of cross-structure
+invariants that no single module can check alone: the device page table,
+the host stash, the freeze metadata and the staging slots all describe
+the *same* pages from different sides.  A fault-recovery path that
+leaves them disagreeing (a page both resident and timer-tracked, a
+staged key whose page vanished, stash-byte accounting that drifts from
+the stored arrays) corrupts generation much later than the bug that
+caused it.  ``audit_controller`` / ``audit_boundary`` assert the
+agreement at the only moment the host holds a coherent view — the page
+boundary tick, right after the controller pass — and raise
+``InvariantViolation`` naming the first inconsistency.
+
+Cost: pure numpy scans of host metadata (no device sync), linear in
+pool slots + stash entries.  The engine runs them only under its
+``debug_invariants`` flag (tests, chaos benchmark, property tests);
+production ticks skip them entirely.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable
+
+import numpy as np
+
+
+class InvariantViolation(AssertionError):
+    """A pool/stash/lane consistency invariant does not hold."""
+
+
+def _fail(msg: str) -> None:
+    raise InvariantViolation(msg)
+
+
+def audit_controller(ctl) -> None:
+    """Controller-local invariants of a ``PagedController``:
+
+    * stash-byte accounting is exact (incremental gauge == recomputed);
+    * every timer-tracked page (``frozen_meta``) has its bytes in the
+      store — a timer over missing data would swap garbage in;
+    * every staged key refers to a stashed page and a slot the lane
+      actually reserved — a stale entry would remap dead bytes;
+    * gauges are non-negative.
+    """
+    recomputed = ctl.host_bytes()
+    if ctl.stash_bytes != recomputed:
+        _fail(f"stash_bytes gauge {ctl.stash_bytes} != "
+              f"recomputed store bytes {recomputed}")
+    if ctl.stash_bytes < 0 or ctl.exported_bytes < 0:
+        _fail(f"negative byte gauge: stash={ctl.stash_bytes} "
+              f"exported={ctl.exported_bytes}")
+    for key in ctl.frozen_meta:
+        if key not in ctl.store:
+            _fail(f"frozen_meta key {key} has no stored bytes")
+        if ctl.frozen_meta[key]["d"] <= 0:
+            # an expired timer must be consumed by the tick that expired
+            # it (or reset to retry); it must never persist across ticks
+            _fail(f"frozen_meta key {key} carries non-positive timer "
+                  f"{ctl.frozen_meta[key]['d']}")
+    for key, slot in ctl.staged_keys.items():
+        if key not in ctl.frozen_meta:
+            _fail(f"staged key {key} is not a stashed page")
+        reserved = ctl.stage_slots.get((key[0], key[1]), [])
+        if slot not in reserved:
+            _fail(f"staged key {key} sits in slot {slot}, not one of the "
+                  f"lane's reserved staging slots {reserved}")
+
+
+def audit_boundary(ctl, pool: Dict[str, np.ndarray],
+                   fstate: Dict[str, np.ndarray],
+                   lanes: Iterable[int],
+                   lane_ids: Dict[int, int] | None = None) -> None:
+    """Pool-vs-stash invariants over the pulled boundary-tick slices.
+
+    ``pool``/``fstate`` are the host copies the engine just ran the
+    controller pass on; ``lanes`` are the pool batch indices present,
+    ``lane_ids`` maps them to global lane ids (identity when None).
+
+    * slot-map bijectivity: within one (layer, lane) no global page id
+      occupies two physical slots;
+    * visibility-mask agreement: slot_mask never asserts tokens in an
+      unmapped slot, and every frozen flag sits on a mapped slot;
+    * residency exclusivity: a page id that is timer-tracked in the
+      host stash (``frozen_meta``) is not simultaneously device-mapped
+      for the same (layer, lane) — the double-residency would let a
+      swap-in overwrite a live slot.
+    """
+    audit_controller(ctl)
+    pt, sm = pool["page_table"], pool["slot_mask"]
+    frozen = fstate["frozen"]
+    L = pt.shape[0]
+    for b in lanes:
+        gb = lane_ids[b] if lane_ids is not None else b
+        for l in range(L):
+            gids = pt[l, b][pt[l, b] >= 0]
+            if len(gids) != len(np.unique(gids)):
+                _fail(f"layer {l} lane {gb}: page table maps a global id "
+                      f"into two slots: {sorted(gids.tolist())}")
+            unmapped = pt[l, b] < 0
+            if bool(np.any(sm[l, b][unmapped])):
+                _fail(f"layer {l} lane {gb}: slot_mask asserts tokens in "
+                      f"an unmapped physical slot")
+            if bool(np.any(frozen[l, b] & unmapped)):
+                _fail(f"layer {l} lane {gb}: frozen flag on an unmapped "
+                      f"physical slot")
+            resident = set(int(g) for g in gids)
+            stashed = {key[2] for key in ctl.frozen_meta
+                       if key[0] == l and key[1] == gb}
+            both = resident & stashed
+            if both:
+                _fail(f"layer {l} lane {gb}: pages {sorted(both)} are "
+                      f"both device-resident and stash-timer-tracked")

@@ -117,6 +117,23 @@ class HostOffloadController:
     offloaded: set = dataclasses.field(default_factory=set)
     n_offloads: int = 0
     n_restores: int = 0
+    # ---- host-stash memory budget (robustness) ------------------------ #
+    # Offloading frozen pages is an optimization (it models releasing
+    # their device slots), so the graceful degradation under host-memory
+    # pressure is simply to stop: with the stash at/over budget, newly
+    # fully-frozen pages stay device-resident (the freeze mask already
+    # excludes them from attention — token streams are unchanged) and are
+    # counted in ``n_denied_offloads``.  Restores are never denied.
+    stash_bytes: int = 0
+    stash_budget_bytes: "int | None" = None
+    n_denied_offloads: int = 0
+
+    @property
+    def stash_pressure(self) -> float:
+        """Stash bytes as a fraction of the budget (0.0 when unbounded)."""
+        if not self.stash_budget_bytes:
+            return 0.0
+        return self.stash_bytes / self.stash_budget_bytes
 
     def _all_frozen(self, frozen: np.ndarray,
                     reduced: bool = False) -> np.ndarray:
@@ -165,7 +182,15 @@ class HostOffloadController:
             key = (int(l), int(b), int(p))
             if key not in self.offloaded:
                 sl = slice(p * pg, (p + 1) * pg)
-                self.store[key] = (k_host[l, b, sl].copy(), v_host[l, b, sl].copy())
+                kk = k_host[l, b, sl].copy()
+                vv = v_host[l, b, sl].copy()
+                if self.stash_budget_bytes is not None and \
+                        self.stash_bytes + kk.nbytes + vv.nbytes > \
+                        self.stash_budget_bytes:
+                    self.n_denied_offloads += 1
+                    continue       # page stays resident (and frozen)
+                self.store[key] = (kk, vv)
+                self.stash_bytes += kk.nbytes + vv.nbytes
                 self.offloaded.add(key)
                 self.n_offloads += 1
                 k_host[l, b, sl] = 0                       # model slot release
@@ -176,6 +201,7 @@ class HostOffloadController:
             l, b, p = key
             if not all_frozen[l, b, p]:
                 kk, vv = self.store.pop(key)
+                self.stash_bytes -= kk.nbytes + vv.nbytes
                 sl = slice(p * pg, (p + 1) * pg)
                 k_host[l, b, sl] = kk
                 v_host[l, b, sl] = vv
@@ -205,6 +231,8 @@ class HostOffloadController:
         Returns the number of pages dropped."""
         stale = [key for key in self.offloaded if key[1] == lane]
         for key in stale:
-            self.store.pop(key, None)
+            kv = self.store.pop(key, None)
+            if kv is not None:
+                self.stash_bytes -= kv[0].nbytes + kv[1].nbytes
             self.offloaded.discard(key)
         return len(stale)

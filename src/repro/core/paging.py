@@ -245,6 +245,100 @@ class PagedController:
     n_thaw_upload: int = 0       # thaw-path installs that needed an upload
     n_thaw_remap: int = 0        # thaw-path installs that were remap-only
     kv_dirty: bool = False       # this tick wrote pool K/V (push needs it)
+    # ---- host-stash memory budget (robustness) ------------------------ #
+    # Every byte entering/leaving ``store`` goes through ``_store_put`` /
+    # ``_store_pop`` so ``stash_bytes`` is exact by construction
+    # (``host_bytes()`` recomputes it from scratch as the auditor's ground
+    # truth).  ``exported_bytes`` tracks pages a suspended lane carried
+    # out via ``export_lane`` — they left the stash but still exist on the
+    # host (a LaneSnapshot), so leak detection needs both gauges.
+    # ``stash_budget_bytes`` (None = unbounded) feeds the engine's
+    # graceful-degradation ladder AND hard-stops the tick's swap-out rung
+    # at the ceiling (``n_denied_offloads`` — the page stays resident and
+    # frozen).  Correctness-critical stash writers (overflow stash at
+    # install, forced eviction for headroom, suspend/export) are exempt:
+    # they must not fail because an optimization filled the stash, so a
+    # workload that *requires* stashing can exceed the budget — the
+    # ladder's throttle/shed rungs exist to keep it from getting there.
+    stash_bytes: int = 0
+    exported_bytes: int = 0
+    stash_budget_bytes: Optional[int] = None
+    # optional faults.Endpoint guarding NEW stash allocations (the
+    # "stash" injection point); wired by the engine under chaos
+    stash_endpoint: Optional[object] = None
+    n_ticks: int = 0             # boundary ticks observed (deepen cadence)
+    # ladder stage 2: skip every other offloaded-timer decrement, halving
+    # the rate stashed pages come home while host memory is pressured
+    deepen_timers: bool = False
+    n_deepen_skips: int = 0
+    n_stash_faults: int = 0      # swap-outs skipped by injected alloc fails
+    n_trims: int = 0             # redundant resident copies freed (stage 1)
+    n_denied_offloads: int = 0   # swap-outs denied by the budget ceiling
+
+    # ---- single entry/exit points for host-stash bytes ---------------- #
+    def _store_put(self, key: Tuple[int, int, int],
+                   kv: Tuple[np.ndarray, np.ndarray],
+                   guarded: bool = True) -> None:
+        """The only writer of ``store``.  Keeps ``stash_bytes`` exact
+        (overwrites are re-counted, not double-counted) and runs NEW
+        allocations through the ``stash`` fault endpoint — an injected
+        allocation failure raises ``StashAllocError`` for the caller to
+        degrade on.  ``guarded=False`` bypasses injection for paths that
+        must not fail (resume import: the bytes already exist)."""
+        old = self.store.get(key)
+        if old is not None:
+            self.stash_bytes -= old[0].nbytes + old[1].nbytes
+        elif guarded and self.stash_endpoint is not None:
+            from repro.serving.faults import Endpoint, StashAllocError
+            if self.stash_endpoint.call(lambda: True) is Endpoint.FAILED:
+                self.n_stash_faults += 1
+                raise StashAllocError(
+                    "stash", f"host-stash allocation failed for page {key}")
+        self.store[key] = kv
+        self.stash_bytes += kv[0].nbytes + kv[1].nbytes
+
+    def _store_pop(self, key: Tuple[int, int, int]
+                   ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """The only remover of ``store``; see ``_store_put``."""
+        kv = self.store.pop(key, None)
+        if kv is not None:
+            self.stash_bytes -= kv[0].nbytes + kv[1].nbytes
+        return kv
+
+    @property
+    def stash_pressure(self) -> float:
+        """Measured stash bytes as a fraction of the budget (0.0 when
+        unbounded) — the engine's degradation-ladder input."""
+        if not self.stash_budget_bytes:
+            return 0.0
+        return self.stash_bytes / self.stash_budget_bytes
+
+    def trim_resident_copies(self, lane: Optional[int] = None) -> int:
+        """Degradation-ladder stage 1: free the host copies of
+        device-resident pages (store entries with no ``frozen_meta``).
+        They are a read-back optimization — kept so re-freezing a page
+        skips nothing, and exported wholesale on suspend — but the
+        swap-out path unconditionally re-copies from the pulled pool, so
+        dropping them is always safe.  Returns bytes freed."""
+        keys = [k for k in self.store if k not in self.frozen_meta
+                and (lane is None or k[1] == lane)]
+        freed = 0
+        for key in keys:
+            kv = self._store_pop(key)
+            freed += kv[0].nbytes + kv[1].nbytes
+            self.staged_keys.pop(key, None)
+        self.n_trims += len(keys)
+        return freed
+
+    def release_exported(self, pages: Dict) -> int:
+        """Free the accounting for an exported lane's pages when its
+        snapshot is dropped without resuming (cancelled / shed work the
+        scheduler abandoned) — the leak ``import_lane`` would otherwise
+        never reclaim.  Returns bytes released."""
+        freed = sum(kv[0].nbytes + kv[1].nbytes
+                    for kv, _meta in pages.values())
+        self.exported_bytes = max(0, self.exported_bytes - freed)
+        return freed
 
     def begin_tick(self) -> None:
         """Reset the per-tick K/V dirty flag and the remap list; the
@@ -290,11 +384,16 @@ class PagedController:
         raised ``thaw_request`` for them and their stashed pages come home
         ahead of their freeze timers; `keep_gids[b]` lists global page ids
         (tail + in-window) that must never be chosen as eviction victims."""
+        from repro.serving.faults import StashAllocError
         k, v = pool["k"], pool["v"]
         pt, sm = pool["page_table"], pool["slot_mask"]
         L, B, P = pt.shape
         lane_set = range(B) if lanes is None else lanes
         frozen = fstate["frozen"]
+        self.n_ticks += 1
+        # ladder stage 2 (deepen): offloaded timers decrement on even
+        # ticks only, so stashed pages stay out ~2x longer under pressure
+        deepen_hold = self.deepen_timers and (self.n_ticks % 2 == 1)
         for l in range(L):
             for b in lane_set:
                 gb = lane_ids[b] if lane_ids is not None else b
@@ -302,7 +401,27 @@ class PagedController:
                 for p in range(P):
                     if pt[l, b, p] >= 0 and frozen[l, b, p]:
                         key = (l, gb, int(pt[l, b, p]))
-                        self.store[key] = (k[l, b, p].copy(), v[l, b, p].copy())
+                        if self.stash_budget_bytes is not None \
+                                and key not in self.store \
+                                and self.stash_bytes + k[l, b, p].nbytes \
+                                    + v[l, b, p].nbytes \
+                                    > self.stash_budget_bytes:
+                            # budget ceiling: the swap-out is the one
+                            # stash producer that is pure optimization,
+                            # so it is the rung that hard-stops at the
+                            # budget — the page stays device-resident and
+                            # frozen, and this swap-out retries once the
+                            # ladder has drained some pressure
+                            self.n_denied_offloads += 1
+                            continue
+                        try:
+                            self._store_put(
+                                key, (k[l, b, p].copy(), v[l, b, p].copy()))
+                        except StashAllocError:
+                            # allocation failed: the page simply stays
+                            # device-resident and frozen; this swap-out
+                            # retries at the lane's next boundary tick
+                            continue
                         self.frozen_meta[key] = {
                             "c": int(fstate["c"][l, b, p]),
                             "d": int(fstate["d"][l, b, p]),
@@ -319,6 +438,9 @@ class PagedController:
                     if kl != l or kb != gb:
                         continue
                     meta = self.frozen_meta[key]
+                    if deepen_hold:
+                        self.n_deepen_skips += 1
+                        continue
                     meta["d"] -= 1
                     if meta["d"] <= 0:
                         free = self._free_slots(pt, l, b, gb)
@@ -372,8 +494,14 @@ class PagedController:
             return None
         gid = int(pt[l, b, best])
         key = (l, lane_id, gid)
-        self.store[key] = (pool["k"][l, b, best].copy(),
-                           pool["v"][l, b, best].copy())
+        from repro.serving.faults import StashAllocError
+        try:
+            self._store_put(key, (pool["k"][l, b, best].copy(),
+                                  pool["v"][l, b, best].copy()))
+        except StashAllocError:
+            # cannot stash the victim -> nothing is evictable right now;
+            # callers already treat None as "pool stays as-is, retry later"
+            return None
         self.frozen_meta[key] = {
             "c": max(int(fstate["c"][l, b, best]), 1),
             "d": self.cfg.freeze.page_size,
@@ -571,7 +699,7 @@ class PagedController:
         Returns the number of pages dropped."""
         stale = [key for key in self.store if key[1] == lane]
         for key in stale:
-            self.store.pop(key, None)
+            self._store_pop(key)
             self.frozen_meta.pop(key, None)
             self.staged_keys.pop(key, None)
         return len(stale)
@@ -592,10 +720,11 @@ class PagedController:
         swap-out path keeps its no-recopy invariant."""
         out = {}
         for key in [k for k in self.store if k[1] == lane]:
-            kv = self.store.pop(key)
+            kv = self._store_pop(key)
             meta = self.frozen_meta.pop(key, None)
             self.staged_keys.pop(key, None)
             out[(key[0], key[2])] = (kv, meta)
+            self.exported_bytes += kv[0].nbytes + kv[1].nbytes
         return out
 
     def import_lane(self, lane: int, pages: Dict) -> None:
@@ -605,7 +734,11 @@ class PagedController:
         page-boundary ticks, so no decrements were missed."""
         for (layer, gid), (kv, meta) in pages.items():
             key = (layer, lane, gid)
-            self.store[key] = kv
+            # unguarded: the bytes already exist (moving back from the
+            # snapshot's accounting) and a resume must never fail
+            self._store_put(key, kv, guarded=False)
+            self.exported_bytes = max(
+                0, self.exported_bytes - (kv[0].nbytes + kv[1].nbytes))
             if meta is not None:
                 self.frozen_meta[key] = dict(meta)
 
@@ -618,7 +751,7 @@ class PagedController:
         stale = [key for key in self.store
                  if key[1] == lane and key[2] >= first_gid]
         for key in stale:
-            self.store.pop(key, None)
+            self._store_pop(key)
             self.frozen_meta.pop(key, None)
             self.staged_keys.pop(key, None)
         return len(stale)
@@ -627,9 +760,13 @@ class PagedController:
               k: np.ndarray, v: np.ndarray, d: int) -> None:
         """Place one page straight into the host store with freeze timer
         `d` — the admission path for prompt pages that exceed the device
-        pool (chunked-prefill overflow uses the forced-freeze timer)."""
+        pool (chunked-prefill overflow uses the forced-freeze timer).
+        A ``StashAllocError`` propagates: admission overflow has no
+        device-side fallback (the pool is full by definition), so this is
+        the one unsurvivable stash fault — callers admit the request only
+        once the stash can hold its overflow."""
         key = (layer, lane, global_page)
-        self.store[key] = (k.copy(), v.copy())
+        self._store_put(key, (k.copy(), v.copy()))
         self.frozen_meta[key] = {"c": 1, "d": int(d), "frozen_at": 0}
         self.n_swap_out += 1
 

@@ -78,11 +78,18 @@ def _ladder_step(rec: RecoveryState, logits: jnp.ndarray,
 
     Returns (new RecoveryState, spike, level, rr_request)."""
     ent = token_entropy(logits)                                   # (B,)
+    # Non-finite entropy (poisoned logits) would otherwise be invisible:
+    # NaN comparisons are False, so it never spikes, and once folded into
+    # the EMA the baseline is NaN *forever* (every later relative check
+    # goes dark).  Treat it as an immediate spike — warmup does not apply,
+    # a poisoned lane must not decode 8 steps unchallenged — and hold the
+    # EMA at its previous value below.
+    bad = ~jnp.isfinite(ent)
     warm = rec.steps_seen >= 8
-    spike = warm & (
+    spike = bad | (warm & (
         (ent > cfg.entropy_abs_threshold)
         | (ent > cfg.entropy_rel_factor * jnp.maximum(rec.ema_entropy, 1e-3))
-    )
+    ))
     if not cfg.recovery_enabled:
         spike = jnp.zeros_like(spike)
 
@@ -97,7 +104,8 @@ def _ladder_step(rec: RecoveryState, logits: jnp.ndarray,
     # EMA update (only post-update so the spike itself doesn't pollute the
     # baseline immediately)
     a = cfg.entropy_ema_decay
-    ema = jnp.where(rec.steps_seen == 0, ent, a * rec.ema_entropy + (1 - a) * ent)
+    obs = jnp.where(bad, rec.ema_entropy, ent)   # poison never enters the EMA
+    ema = jnp.where(rec.steps_seen == 0, obs, a * rec.ema_entropy + (1 - a) * obs)
     new = RecoveryState(ema_entropy=ema, level=post_level, calm_steps=calm,
                         steps_seen=rec.steps_seen + 1)
     info = {"entropy": ent, "spike": spike, "level": level,

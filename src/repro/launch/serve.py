@@ -91,6 +91,19 @@ def main():
                          "host store on --paged) when a deadline would "
                          "otherwise be missed (--no-preempt = admission "
                          "reordering only)")
+    ap.add_argument("--stash-budget-mb", type=float, default=None,
+                    help="host-stash memory budget (MiB); engages the "
+                         "graceful-degradation ladder as stash pressure "
+                         "rises (deny prefetch -> deepen freeze timers -> "
+                         "throttle admissions -> shed lanes; "
+                         "docs/robustness.md)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="enable deterministic fault injection on the "
+                         "DMA/stash paths with this seed (retries, "
+                         "breaker fallbacks and quarantine exercise the "
+                         "chaos hardening; docs/robustness.md)")
+    ap.add_argument("--chaos-rate", type=float, default=0.05,
+                    help="per-site fault rate for --chaos-seed")
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
@@ -121,6 +134,15 @@ def main():
     print(f"arch={cfg.name} params={n/1e6:.1f}M "
           f"freeze={not args.no_freeze} batching={mode}")
 
+    chaos = None
+    if args.chaos_seed is not None:
+        from repro.serving.faults import ChaosConfig
+        chaos = ChaosConfig(seed=args.chaos_seed,
+                            rates={s: args.chaos_rate for s in
+                                   ("pull", "push", "ring", "stage")})
+    budget = int(args.stash_budget_mb * 2**20) \
+        if args.stash_budget_mb is not None else None
+    robust_kw = dict(chaos=chaos, stash_budget_bytes=budget)
     if args.static:
         eng = Engine(cfg, params, max_seq=args.max_seq,
                      enable_freeze=not args.no_freeze)
@@ -131,13 +153,15 @@ def main():
                                     max_active_pages=args.pages,
                                     enable_freeze=not args.no_freeze,
                                     prefill_chunk=args.prefill_chunk,
-                                    async_pipeline=args.async_pipeline)
+                                    async_pipeline=args.async_pipeline,
+                                    **robust_kw)
         sched = Scheduler(eng, preemption=args.preempt)
     else:
         eng = ContinuousEngine(cfg, params, max_seq=args.max_seq,
                                n_lanes=args.batch,
                                enable_freeze=not args.no_freeze,
-                               async_pipeline=args.async_pipeline)
+                               async_pipeline=args.async_pipeline,
+                               **robust_kw)
         sched = Scheduler(eng, preemption=args.preempt)
     rng = np.random.RandomState(0)
     if not args.static:
@@ -187,6 +211,25 @@ def main():
             rewinds = sum(r.telemetry.rewinds for r in sched.done.values()
                           if r.telemetry is not None)
             print(f"recovery: {rewinds} rewalk rewinds")
+        # per-request terminal status: every request ends completed,
+        # shed-resumed (survived a ladder shed) or quarantined
+        statuses = {}
+        for r in sched.done.values():
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+        print("terminal: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(statuses.items())))
+        if chaos is not None or budget is not None:
+            rs = eng.robust_snapshot()
+            print(f"chaos: injected={rs['injected']} "
+                  f"retries={rs['retries']} "
+                  f"breaker_trips={rs['breaker_trips']}  "
+                  f"ladder: deny={rs['ladder_deny']} "
+                  f"deepen={rs['ladder_deepen']} "
+                  f"throttle={rs['ladder_throttle']} "
+                  f"shed={rs['ladder_shed']}  "
+                  f"stash peak {rs['peak_stash_bytes']}B"
+                  + (f" / budget {rs['stash_budget_bytes']}B"
+                     if budget is not None else ""))
         hits = [m["deadline_hit"] for m in sched.metrics.values()
                 if m["deadline_hit"] is not None]
         if hits or sched.n_preemptions:

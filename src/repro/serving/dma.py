@@ -147,10 +147,18 @@ class FetchRing:
     makes async-vs-sync token parity exact.
     """
 
-    def __init__(self, stats: TransferStats, depth: int = 1):
+    def __init__(self, stats: TransferStats, depth: int = 1,
+                 endpoint: Optional[Any] = None):
         assert depth in (0, 1), "the pipeline is single- or double-buffered"
         self.stats = stats
         self.depth = depth
+        # optional faults.Endpoint guarding the pop materialization (the
+        # "ring" injection point).  must_succeed: a step's tokens/telemetry
+        # either reach the host or the engine has nothing to commit.  The
+        # engine watches this endpoint's breaker and drops ``depth`` to 0
+        # (the synchronous baseline — token-identical by the FIFO-drain
+        # design above) while it is tripped.
+        self.endpoint = endpoint
         self._entries: List[Tuple[Dict[str, Any], Dict[str, Any]]] = []
 
     def __len__(self) -> int:
@@ -170,7 +178,14 @@ class FetchRing:
         import numpy as np
         meta, arrays = self._entries.pop(0)
         t0 = time.perf_counter()
-        host = {k: np.asarray(v) for k, v in arrays.items()}
+
+        def _materialize():
+            return {k: np.asarray(v) for k, v in arrays.items()}
+
+        if self.endpoint is not None:
+            host = self.endpoint.call(_materialize)
+        else:
+            host = _materialize()
         dt = time.perf_counter() - t0
         nbytes = sum(_nbytes(v) for v in host.values())
         if self.depth == 0:

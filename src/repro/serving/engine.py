@@ -75,6 +75,7 @@ from repro.core.paging import PagedController, PageFreezeState
 from repro.core.recovery import RecoveryState
 from repro.models import model as MD
 from repro.serving.dma import FetchRing, HostStaging, TransferStats
+from repro.serving.faults import ChaosConfig, Endpoint
 from repro.serving.sampling import (SamplingParams, lane_base_key,
                                     params_arrays, sample,
                                     sample_batched_perlane)
@@ -120,6 +121,57 @@ class Request:
     slo_tokens_per_s: Optional[float] = None
     result: Optional[np.ndarray] = None
     telemetry: Optional[GenerationResult] = None
+    # terminal status, observable by the launcher: "pending" while in
+    # flight (the scheduler marks load-shed work "shed" in between);
+    # retirement resolves it to "completed", "shed-resumed" (completed
+    # after at least one memory-pressure shed/resume round trip) or
+    # "quarantined" (retired early because the lane re-poisoned — the
+    # partial ``result`` is whatever survived the anomaly rewinds)
+    status: str = "pending"
+
+
+@dataclasses.dataclass
+class LadderConfig:
+    """Graceful-degradation ladder thresholds, as fractions of the
+    host-stash budget (``stash_bytes / stash_budget_bytes``).  Each rung
+    engages independently whenever pressure reaches ITS threshold — so a
+    run can disable one rung by raising its threshold out of reach
+    (e.g. ``deepen_timers=2.0`` for parity-critical serving) while the
+    rungs around it keep working.  The defaults are ordered from
+    parity-preserving to lossy:
+
+    1. **deny prefetch** — stop speculative thaw staging and free the
+       redundant host copies of device-resident pages (paged path) /
+       stop offloading newly frozen pages (contiguous path).  Pure
+       optimization rollback: token streams are unchanged.
+    2. **deepen timers** — offloaded freeze timers decrement every other
+       boundary tick, so stashed pages come home ~2x slower.  Changes
+       page-visibility timing, so NOT token-parity-preserving; runs that
+       must keep parity set this threshold above ``shed``.
+    3. **throttle admissions** — the scheduler stops admitting/resuming
+       work until pressure clears (queued requests are delayed, their
+       tokens unchanged).
+    4. **shed** — the scheduler suspends the lowest-priority running
+       lane through the freeze-native ``suspend_lane`` snapshot path;
+       the work resumes token-identically when pressure clears.
+    """
+    deny_prefetch: float = 0.60
+    deepen_timers: float = 0.75
+    throttle_admissions: float = 0.85
+    shed: float = 0.95
+
+    def stage(self, pressure: float) -> int:
+        """Highest engaged rung (0 = nominal .. 4 = shed) — reporting
+        only; rung decisions compare against their own thresholds."""
+        if pressure >= self.shed:
+            return 4
+        if pressure >= self.throttle_admissions:
+            return 3
+        if pressure >= self.deepen_timers:
+            return 2
+        if pressure >= self.deny_prefetch:
+            return 1
+        return 0
 
 
 @dataclasses.dataclass
@@ -300,7 +352,11 @@ class _LaneEngineBase:
                  pad_id: int = 0,
                  seed: int = 0,
                  min_prompt_bucket: int = 8,
-                 async_pipeline: bool = True):
+                 async_pipeline: bool = True,
+                 chaos: Optional[ChaosConfig] = None,
+                 stash_budget_bytes: Optional[int] = None,
+                 ladder: Optional[LadderConfig] = None,
+                 quarantine_window: int = 64):
         assert not cfg.is_encoder_decoder, \
             "continuous batching is decoder-only (enc-dec uses Engine)"
         self.cfg = cfg
@@ -343,7 +399,43 @@ class _LaneEngineBase:
         # streams and telemetry are bit-identical.
         self.async_pipeline = async_pipeline
         self.stats = TransferStats()
-        self.ring = FetchRing(self.stats, depth=1 if async_pipeline else 0)
+        # ---- fault tolerance (serving/faults.py) ---- #
+        # One injector (shared per-site op clocks) + one endpoint per
+        # guarded transfer class.  pull/push/ring must succeed (the data
+        # has to move); stage is best-effort (a failed speculative-thaw
+        # staging just falls back to the sync upload path).  All None
+        # without a chaos config — the hot path pays one attr check.
+        self.chaos = chaos
+        self._endpoints: Dict[str, Endpoint] = {}
+        if chaos is not None:
+            self.injector = chaos.build_injector()
+            self.ep_pull = chaos.build_endpoint("pull", self.injector)
+            self.ep_push = chaos.build_endpoint("push", self.injector)
+            self.ep_ring = chaos.build_endpoint("ring", self.injector)
+            self.ep_stage = chaos.build_endpoint("stage", self.injector,
+                                                 must_succeed=False)
+            self._endpoints = {"pull": self.ep_pull, "push": self.ep_push,
+                               "ring": self.ep_ring, "stage": self.ep_stage}
+        else:
+            self.injector = None
+            self.ep_pull = self.ep_push = None
+            self.ep_ring = self.ep_stage = None
+        # ---- host-stash budget + degradation ladder ---- #
+        self.stash_budget_bytes = stash_budget_bytes
+        self.ladder_cfg = ladder or LadderConfig()
+        self.peak_stash_bytes = 0
+        # ---- lane-level anomaly quarantine ---- #
+        # A non-finite-entropy step triggers a bounded rewind-and-retry;
+        # a lane that re-poisons within `quarantine_window` decode steps
+        # of its last quarantine rewind is retired "quarantined" instead
+        # of corrupting its batch peers' wall time any further.
+        self.quarantine_window = quarantine_window
+        self._last_quarantine = np.full(n_lanes, -10**9, np.int64)
+        self.robust = {"quarantine_rewinds": 0, "quarantined": 0,
+                       "ladder_deny": 0, "ladder_deepen": 0,
+                       "ladder_throttle": 0, "ladder_shed": 0}
+        self.ring = FetchRing(self.stats, depth=1 if async_pipeline else 0,
+                              endpoint=self.ep_ring)
         self.staging = HostStaging()
         self._retired_backlog: List[Request] = []   # retired during admit
                                     # drains; reported by the next step_once
@@ -358,6 +450,158 @@ class _LaneEngineBase:
     def _note_kv_peak(self, scratch_bytes: int = 0) -> None:
         self.peak_kv_bytes = max(self.peak_kv_bytes,
                                  self.kv_device_bytes + scratch_bytes)
+
+    # ---------------- robustness: budget ladder + fault plumbing -------- #
+    def _stash_bytes(self) -> int:          # subclasses override
+        return 0
+
+    def _exported_bytes(self) -> int:       # subclasses override
+        return 0
+
+    @property
+    def stash_pressure(self) -> float:
+        """Measured host-stash bytes over the configured budget (0.0 when
+        unbounded) — the degradation ladder's input."""
+        if not self.stash_budget_bytes:
+            return 0.0
+        return self._stash_bytes() / self.stash_budget_bytes
+
+    @property
+    def admission_pressure(self) -> float:
+        """Stash pressure as *admission* decisions must see it: measured
+        stash bytes PLUS the pages suspended snapshots carried out via
+        ``export_lane``.  Exporting a victim drops ``stash_pressure``
+        instantly, but resuming the snapshot imports every one of those
+        bytes straight back — gating admissions on the measured gauge
+        alone lets a shed victim resume the same pass it was shed
+        (export -> pressure dips -> resume -> import -> pressure pops ->
+        shed again), an export/import ping-pong that makes no progress.
+        Counting exported bytes gives the throttle rung hysteresis: a
+        shed snapshot stays queued until real work retires and drains
+        the stash."""
+        if not self.stash_budget_bytes:
+            return 0.0
+        return (self._stash_bytes() + self._exported_bytes()) \
+            / self.stash_budget_bytes
+
+    @property
+    def n_pending_retired(self) -> int:
+        """Requests that already retired inside an admit/suspend flush,
+        parked for re-report by the next ``step_once``.  The scheduler
+        must keep stepping while this is non-zero or the retirements
+        (and their results) would be stranded unreported."""
+        return len(self._retired_backlog)
+
+    @property
+    def ladder_stage(self) -> int:
+        """Current graceful-degradation stage (0 = nominal .. 4 = shed);
+        see ``LadderConfig``.  The engine applies stages 1-2 itself; the
+        scheduler reads this property for stages 3-4 (throttle / shed)."""
+        return self.ladder_cfg.stage(self.stash_pressure)
+
+    def _note_stash_peak(self) -> None:
+        self.peak_stash_bytes = max(self.peak_stash_bytes,
+                                    self._stash_bytes())
+
+    def _ring_guard(self) -> None:
+        """Degrade the fetch ring to its depth-0 synchronous baseline
+        while the ring endpoint's breaker is tripped (and restore depth 1
+        once it re-closes).  Depth only changes which engine call drains
+        an entry, never the FIFO order, so the fallback is
+        token-identical by the ring's design."""
+        ep = self.ring.endpoint
+        if ep is None or ep.breaker is None:
+            return
+        if ep.breaker.state == "open":
+            ep.allow()          # burn one op of the op-count cooldown
+        self.ring.depth = 1 if (self.async_pipeline
+                                and ep.breaker.state == "closed") else 0
+
+    def _poison_lane(self, active: List[int]) -> Optional[int]:
+        """Consult the fault schedule's ``nan`` site for this dispatch.
+        Returns the lane whose host-side entropy the commit will poison
+        (None almost always).  Host-side by necessity: entropy is
+        computed inside the jitted step from the real logits, so the
+        injection happens where the poisoned value would first become
+        visible to the host — the ring commit."""
+        if self.injector is None or not active:
+            return None
+        plan = self.injector.next_plan("nan")
+        if plan is None or plan.kind != "nan":
+            return None
+        return plan.lane if plan.lane in active else active[0]
+
+    def discard_snapshot(self, snap: LaneSnapshot) -> None:
+        """Release the host-side resources of a snapshot that will never
+        resume (a suspended request that was cancelled / abandoned).  The
+        contiguous snapshot owns nothing beyond host bookkeeping; the
+        paged override returns the exported pages' byte accounting."""
+
+    def robust_snapshot(self) -> Dict[str, Any]:
+        """Fault/ladder/quarantine counters for benchmarks and serving
+        reports (chaos-less engines report zeros)."""
+        eps = {name: ep.stats() for name, ep in self._endpoints.items()}
+        return {
+            "endpoints": eps,
+            "injected": self.injector.n_injected if self.injector else 0,
+            "injected_by_site":
+                dict(self.injector.injected) if self.injector else {},
+            "retries": sum(e["retries"] for e in eps.values()),
+            "breaker_trips": sum(e["breaker_trips"] for e in eps.values()),
+            "ladder_stage": self.ladder_stage,
+            "stash_bytes": self._stash_bytes(),
+            "exported_bytes": self._exported_bytes(),
+            "peak_stash_bytes": self.peak_stash_bytes,
+            "stash_budget_bytes": self.stash_budget_bytes,
+            **self.robust,
+        }
+
+    @staticmethod
+    def _finalize_status(req: Request) -> None:
+        """Map a retiring request's lifecycle status to its terminal
+        value (quarantine retirement overwrites it afterwards)."""
+        if req.status == "shed":
+            req.status = "shed-resumed"
+        elif req.status == "pending":
+            req.status = "completed"
+
+    def _quarantine_rewind(self, lane: int) -> bool:
+        """Attempt the engine's page-aware rewind for a quarantined lane;
+        True iff the lane state was actually rewound."""
+        self._rewind_bookkeeping(lane)
+        return True
+
+    def _quarantine_scan(self, active: List[int], entropy,
+                         rewound: set) -> List[Request]:
+        """Lane-level anomaly quarantine: a lane whose committed entropy
+        is non-finite (NaN/Inf logits) gets ONE bounded rewind-and-retry
+        through the engine's Rewalk machinery; a lane that re-poisons
+        within ``quarantine_window`` steps of its last quarantine rewind
+        is beyond retry and is retired with status ``quarantined`` so its
+        fault cannot poison telemetry or downstream commits.  Returns the
+        retired requests; rewound lanes are added to ``rewound`` so the
+        caller's commit loop discards their sampled token."""
+        retired: List[Request] = []
+        if entropy is None:
+            return retired
+        for i in active:
+            l = self.lanes[i]
+            if i in rewound or l.request is None \
+                    or bool(np.isfinite(entropy[i])):
+                continue
+            recent = int(self.step[i]) - int(self._last_quarantine[i]) \
+                <= self.quarantine_window
+            if not recent and len(l.history) >= self.fcfg.rewalk_tokens \
+                    and self._quarantine_rewind(i):
+                self._last_quarantine[i] = int(self.step[i])
+                self.robust["quarantine_rewinds"] += 1
+                rewound.add(i)
+            else:
+                req = self._retire(i)
+                req.status = "quarantined"
+                self.robust["quarantined"] += 1
+                retired.append(req)
+        return retired
 
     # ---------------- lane accounting ---------------- #
     @property
@@ -574,12 +818,18 @@ class ContinuousEngine(_LaneEngineBase):
                  seed: int = 0,
                  min_prompt_bucket: int = 8,
                  debug_lane_checks: bool = False,
-                 async_pipeline: bool = True):
+                 async_pipeline: bool = True,
+                 chaos: Optional[ChaosConfig] = None,
+                 stash_budget_bytes: Optional[int] = None,
+                 ladder: Optional[LadderConfig] = None,
+                 quarantine_window: int = 64):
         super().__init__(cfg, params, max_seq, n_lanes,
                          freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
                          pad_id=pad_id, seed=seed,
                          min_prompt_bucket=min_prompt_bucket,
-                         async_pipeline=async_pipeline)
+                         async_pipeline=async_pipeline,
+                         chaos=chaos, stash_budget_bytes=stash_budget_bytes,
+                         ladder=ladder, quarantine_window=quarantine_window)
         self.max_rewinds = max_rewinds
         self.rewind_cooldown = rewind_cooldown
         # legacy knob, no longer a wall-clock cadence: the freeze mask now
@@ -600,6 +850,11 @@ class ContinuousEngine(_LaneEngineBase):
         self.state = MD.init_decode_state(cfg, n_lanes, max_seq)
         self.offloader = HostOffloadController(self.fcfg.page_size) \
             if (offload and enable_freeze) else None
+        if self.offloader is not None:
+            self.offloader.stash_budget_bytes = stash_budget_bytes
+
+    def _stash_bytes(self) -> int:
+        return self.offloader.stash_bytes if self.offloader else 0
 
     @classmethod
     def from_engine(cls, engine: Engine, n_lanes: int,
@@ -677,7 +932,7 @@ class ContinuousEngine(_LaneEngineBase):
         # drain, before the lane's first decode step is dispatched
         self._push_admit_token(lane, req, logits)
         self.events.append(event)
-        if not self.async_pipeline:
+        if self.ring.depth == 0:
             self._retired_backlog += self._drain_ring()
         return lane
 
@@ -690,6 +945,7 @@ class ContinuousEngine(_LaneEngineBase):
         are immediately free); with ``async_pipeline=False`` the entry is
         drained in the same call, reproducing the synchronous timing."""
         self.stats.begin_step()
+        self._ring_guard()
         finished = self._retired_backlog + self._drain_ring()
         self._retired_backlog = []
         active = [i for i, l in enumerate(self.lanes) if l.request is not None]
@@ -729,8 +985,9 @@ class ContinuousEngine(_LaneEngineBase):
             arrays["frozen_pages"] = fz[:, :, :n_pages * pg].reshape(
                 fz.shape[0], fz.shape[1], n_pages, pg).all(axis=-1)
         self.ring.push({"kind": "step", "active": active,
-                        "offload": offload}, arrays)
-        if not self.async_pipeline:
+                        "offload": offload,
+                        "poison": self._poison_lane(active)}, arrays)
+        if self.ring.depth == 0:
             finished += self._drain_ring()
         self.stats.end_step()
         return finished
@@ -746,6 +1003,13 @@ class ContinuousEngine(_LaneEngineBase):
         entropy, spike, level = get("entropy"), get("spike"), get("level")
         rr = get("rr_request")
         toks = host["toks"]
+        poison = meta.get("poison")
+        if poison is not None and entropy is not None:
+            # scheduled logits-anomaly injection: the entropy value is the
+            # host's only view of the step's logits health, so the poison
+            # lands where the corruption would first become visible
+            entropy = np.array(entropy, np.float32)
+            entropy[poison] = np.nan
         n_layers_attn = max(self.state.freeze.frozen.shape[0], 1)
 
         # ---- per-lane telemetry: one append per lane-step ----
@@ -779,6 +1043,9 @@ class ContinuousEngine(_LaneEngineBase):
                     self._rewind_bookkeeping(i)
                     rewound.add(i)
 
+        # ---- lane-level anomaly quarantine (non-finite entropy) ----
+        quarantined = self._quarantine_scan(active, entropy, rewound)
+
         # ---- page-batched host offload ----
         if meta["offload"]:
             # admit() drains the ring before scattering a new occupant, so
@@ -799,20 +1066,22 @@ class ContinuousEngine(_LaneEngineBase):
                 self.stats.note_blocking(
                     cache.k.nbytes + cache.v.nbytes, d2h=True,
                     seconds=time.perf_counter() - t0)
-        if self.offloader is not None:
-            for i in active:
-                self.lanes[i].request.telemetry.offloaded_tokens.append(
-                    self.offloader.offloaded_tokens_lane(i))
-        else:
-            for i in active:
-                self.lanes[i].request.telemetry.offloaded_tokens.append(0)
+        for i in active:
+            if self.lanes[i].request is None:       # quarantined above
+                continue
+            self.lanes[i].request.telemetry.offloaded_tokens.append(
+                self.offloader.offloaded_tokens_lane(i)
+                if self.offloader is not None else 0)
+        self._note_stash_peak()
 
         # ---- commit sampled tokens, retire finished lanes ----
-        finished = []
+        finished = list(quarantined)
         for i in active:
             if i in rewound:
                 continue
             l = self.lanes[i]
+            if l.request is None:                   # quarantined above
+                continue
             t = int(toks[i])
             l.history.append((t, int(self.pos[i])))
             l.generated.append(t)
@@ -828,6 +1097,7 @@ class ContinuousEngine(_LaneEngineBase):
         req = l.request
         req.result = np.asarray(l.generated[: req.n_tokens], np.int32)
         req.telemetry.tokens = req.result[None, :]
+        self._finalize_status(req)
         self.events.append({"event": "finish", "uid": req.uid, "lane": lane,
                             "wall_step": self.wall_step})
         # park the idle lane; the retired request's offloaded pages are
@@ -1012,12 +1282,20 @@ class PagedContinuousEngine(_LaneEngineBase):
                  async_pipeline: bool = True,
                  speculative_thaw: Optional[bool] = None,
                  speculative_slots: int = 3,
-                 burst_prefill: bool = True):
+                 burst_prefill: bool = True,
+                 chaos: Optional[ChaosConfig] = None,
+                 stash_budget_bytes: Optional[int] = None,
+                 ladder: Optional[LadderConfig] = None,
+                 quarantine_window: int = 64,
+                 debug_invariants: bool = False):
         super().__init__(cfg, params, max_seq, n_lanes,
                          freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
                          pad_id=pad_id, seed=seed,
                          min_prompt_bucket=min_prompt_bucket,
-                         async_pipeline=async_pipeline)
+                         async_pipeline=async_pipeline,
+                         chaos=chaos, stash_budget_bytes=stash_budget_bytes,
+                         ladder=ladder, quarantine_window=quarantine_window)
+        self.debug_invariants = debug_invariants
         assert max_active_pages >= 3, "pool needs tail + swap headroom"
         assert prefill_chunk >= 1
         self.P = max_active_pages          # usable (allocator-visible) pool
@@ -1110,6 +1388,14 @@ class PagedContinuousEngine(_LaneEngineBase):
             "paged continuous batching requires an attention-only stack"
         self.ctl = PagedController(cfg=cfg, batch=n_lanes,
                                    max_active_pages=max_active_pages)
+        self.ctl.stash_budget_bytes = stash_budget_bytes
+        if self.injector is not None:
+            self.ep_stash = chaos.build_endpoint(
+                "stash", self.injector, must_succeed=False)
+            self.ctl.stash_endpoint = self.ep_stash
+            self._endpoints["stash"] = self.ep_stash
+        else:
+            self.ep_stash = None
         self.tail_slot = np.zeros((self.L_attn, n_lanes), np.int32)
         self.prefills: Dict[int, _PendingPrefill] = {}
         self._urgency = np.zeros(n_lanes, np.float32)   # thaw trend / lane
@@ -1126,6 +1412,12 @@ class PagedContinuousEngine(_LaneEngineBase):
     def _offloaded_tokens_lane(self, lane: int) -> int:
         n = sum(1 for key in self.ctl.frozen_meta if key[1] == lane)
         return n * self.page // self.L_attn
+
+    def _stash_bytes(self) -> int:
+        return self.ctl.stash_bytes
+
+    def _exported_bytes(self) -> int:
+        return self.ctl.exported_bytes
 
     def _scratch_bytes(self) -> int:
         return sum(pp.scratch.cache_k.nbytes + pp.scratch.cache_v.nbytes
@@ -1162,9 +1454,16 @@ class PagedContinuousEngine(_LaneEngineBase):
                                  jnp.asarray(self._padded_idx(lanes)))
         t0 = time.perf_counter()
         # the ONE batched D2H for all boundary lanes + layers, recorded in
-        # TransferStats below — the pull every per-lane slice rides on
-        # hotpath: ok(single batched boundary-tick pull, counted via note_blocking)
-        host = jax.device_get(dev)
+        # TransferStats below — the pull every per-lane slice rides on.
+        # Under chaos the endpoint fronts it: injected failures burn
+        # retries BEFORE device_get runs (must-succeed — the tick cannot
+        # proceed without the pool bytes), so the real pull runs once
+        if self.ep_pull is not None:
+            # hotpath: ok(single batched boundary-tick pull, counted via note_blocking)
+            host = self.ep_pull.call(jax.device_get, dev)
+        else:
+            # hotpath: ok(single batched boundary-tick pull, counted via note_blocking)
+            host = jax.device_get(dev)
         dt = time.perf_counter() - t0
         names = self._POOL_FIELDS + self._FZ_FIELDS
         out = {}
@@ -1194,9 +1493,15 @@ class PagedContinuousEngine(_LaneEngineBase):
                 buf[:, m:] = src[:, :1]  # carry identical data
             vals.append(buf)
             nbytes += src.nbytes
-        arrs = self._scatter_lanes(self._state_arrs(fields),
-                                   jnp.asarray(idx),
-                                   tuple(jnp.asarray(v) for v in vals))
+        # the dispatch closure runs exactly once per endpoint call —
+        # injected failures are simulated before it, never around a
+        # half-donated scatter (re-running it would read freed buffers)
+        def _dispatch():
+            return self._scatter_lanes(self._state_arrs(fields),
+                                       jnp.asarray(idx),
+                                       tuple(jnp.asarray(v) for v in vals))
+        arrs = self.ep_push.call(_dispatch) if self.ep_push is not None \
+            else _dispatch()
         upd = dict(zip(fields, arrs))
         fz = PageFreezeState(*(upd.get(f, getattr(self.state.freeze, f))
                                for f in self._FZ_FIELDS))
@@ -1451,6 +1756,7 @@ class PagedContinuousEngine(_LaneEngineBase):
         prefill chunk for every admission in flight.  Returns retired
         requests (from the drain; same-call with ``async_pipeline=False``)."""
         self.stats.begin_step()
+        self._ring_guard()
         finished = self._retired_backlog + self._drain_ring()
         self._retired_backlog = []
         decode_lanes = [i for i, l in enumerate(self.lanes)
@@ -1477,7 +1783,8 @@ class PagedContinuousEngine(_LaneEngineBase):
                 toks=self._sample(logits, jnp.asarray(self.lane_keys),
                                   jnp.asarray(self.step),
                                   *self._lane_params()))
-            self.ring.push({"kind": "step", "active": list(decode_lanes)},
+            self.ring.push({"kind": "step", "active": list(decode_lanes),
+                            "poison": self._poison_lane(decode_lanes)},
                            arrays)
             # start copying likely-thaw pages into the staging slots while
             # the step computes — by the time an FR thaw fires at a
@@ -1487,7 +1794,7 @@ class PagedContinuousEngine(_LaneEngineBase):
         # ---- chunked prefill: one chunk per admission in flight ---- #
         for lane in list(self.prefills):
             self._prefill_tick(lane, busy=bool(decode_lanes))
-        if not self.async_pipeline:
+        if self.ring.depth == 0:
             finished += self._drain_ring()
         if decode_lanes:
             self.stats.end_step()
@@ -1501,6 +1808,18 @@ class PagedContinuousEngine(_LaneEngineBase):
         allocation with the force-free backstop), one batched push, then
         the queued device-side staging remaps."""
         self.n_boundary_ticks += 1
+        # graceful-degradation ladder, engine-applied rungs: under stash
+        # pressure first reclaim redundant host copies of resident pages
+        # (stage 1+, parity-free), then deepen the forced-freeze timers so
+        # stashed pages return to the device half as fast (stage 2+) —
+        # stages 3/4 (admission throttle, lane shed) belong to the
+        # scheduler, which reads ``stash_pressure``
+        pressure = self.stash_pressure
+        if pressure >= self.ladder_cfg.deny_prefetch:
+            self.ctl.trim_resident_copies()
+        self.ctl.deepen_timers = pressure >= self.ladder_cfg.deepen_timers
+        if self.ctl.deepen_timers:
+            self.robust["ladder_deepen"] += 1
         self.ctl.begin_tick()
         self._prune_staged()
         pool, fstate = self._pull_lanes(boundary)
@@ -1531,6 +1850,13 @@ class PagedContinuousEngine(_LaneEngineBase):
                        " — freezing is disabled, so nothing swaps "
                        "out; admission should have rejected this"))
             self.tail_slot[:, i] = slots
+        if self.debug_invariants:
+            # the one moment the host holds a coherent cross-structure
+            # view: post-controller-pass, pre-push
+            from repro.analysis import audit_boundary
+            audit_boundary(self.ctl, pool, fstate, range(len(boundary)),
+                           lane_ids={bi: i for bi, i in enumerate(boundary)})
+        self._note_stash_peak()
         self._push_lanes(pool, fstate, boundary, kv=self.ctl.kv_dirty)
         self._run_remaps()
 
@@ -1546,6 +1872,13 @@ class PagedContinuousEngine(_LaneEngineBase):
         act, fro = get("n_active_slots_lane"), get("n_frozen_pages_lane")
         entropy, spike, level = get("entropy"), get("spike"), get("level")
         rr, thaw_req = get("rr_request"), get("thaw_request")
+        poison = meta.get("poison")
+        if poison is not None and entropy is not None:
+            # scheduled logits-anomaly injection (host-side: entropy is
+            # computed inside the jitted step, so the commit is where the
+            # corrupt value first becomes visible to the host)
+            entropy = np.array(entropy, np.float32)
+            entropy[poison] = np.nan
 
         for i in decode_lanes:
             res = self.lanes[i].request.telemetry
@@ -1593,11 +1926,16 @@ class PagedContinuousEngine(_LaneEngineBase):
                         and self._rewind_lane(i):
                     rewound.add(i)
 
-        finished = []
+        # ---- lane-level anomaly quarantine (non-finite entropy) ----
+        quarantined = self._quarantine_scan(decode_lanes, entropy, rewound)
+
+        finished = list(quarantined)
         for i in decode_lanes:
             if i in rewound:
                 continue
             l = self.lanes[i]
+            if l.request is None:               # quarantined above
+                continue
             t = int(toks[i])
             l.history.append((t, int(self.pos[i])))
             l.generated.append(t)
@@ -1651,6 +1989,17 @@ class PagedContinuousEngine(_LaneEngineBase):
         asynchronously behind the decode step; they never change page
         tables, so a misprediction costs bandwidth, not correctness."""
         if not self.S_stage:
+            return
+        if self.stash_pressure >= self.ladder_cfg.deny_prefetch:
+            # ladder stage 1: deny speculative prefetch under stash
+            # pressure (staging is pure optimization — thaws fall back to
+            # the sync upload path, token-identically)
+            self.robust["ladder_deny"] += 1
+            return
+        if self.ep_stage is not None and not self.ep_stage.allow():
+            # tripped stage breaker: speculative staging stays disabled
+            # until the breaker's op-count cooldown re-closes it (same
+            # token-identical sync-upload fallback)
             return
         # stage for lanes that WILL thaw (request pending, boundary tick
         # not yet reached) and for lanes trending within one spike of FR
@@ -1711,9 +2060,22 @@ class PagedContinuousEngine(_LaneEngineBase):
                 valid[l] = True
             if not valid.any():
                 continue
-            self.state = self._stage_write(
-                self.state, jnp.int32(lane), jnp.asarray(slots),
-                jnp.asarray(k_buf), jnp.asarray(v_buf), jnp.asarray(valid))
+            # the dispatch closure runs exactly once per endpoint call
+            # (injection precedes it); a best-effort failure returns
+            # FAILED with the state untouched — the thaw just won't be
+            # staged, and installs fall back to the sync upload path
+            def _dispatch():
+                return self._stage_write(
+                    self.state, jnp.int32(lane), jnp.asarray(slots),
+                    jnp.asarray(k_buf), jnp.asarray(v_buf),
+                    jnp.asarray(valid))
+            if self.ep_stage is not None:
+                out = self.ep_stage.call(_dispatch)
+                if out is Endpoint.FAILED:
+                    return False
+                self.state = out
+            else:
+                self.state = _dispatch()
             for l in range(self.L_attn):
                 if valid[l]:
                     self.ctl.staged_keys[(l, lane, gid)] = int(slots[l])
@@ -1768,6 +2130,9 @@ class PagedContinuousEngine(_LaneEngineBase):
                             "lane": lane, "wall_step": self.wall_step,
                             "new_pos": new_pos})
         return True
+
+    def _quarantine_rewind(self, lane: int) -> bool:
+        return self._rewind_lane(lane)
 
     # ---------------- preemption (suspend / resume) ---------------- #
     def suspend_lane(self, lane: int) -> Optional[LaneSnapshot]:
@@ -1887,11 +2252,23 @@ class PagedContinuousEngine(_LaneEngineBase):
                             "stashed_pages": len(snap.stashed)})
         return lane
 
+    def discard_snapshot(self, snap: LaneSnapshot) -> None:
+        """A suspended paged request that will never resume still owns
+        its exported host-stash pages (``export_lane`` moved them OUT of
+        the controller store precisely so lane reuse could not drop
+        them).  Dropping the snapshot without this call leaks both the
+        page bytes and the ``exported_bytes`` gauge they are counted
+        under — the budget ladder would see phantom pressure forever."""
+        if snap.stashed:
+            self.ctl.release_exported(snap.stashed)
+            snap.stashed = None
+
     def _retire(self, lane: int) -> Request:
         l = self.lanes[lane]
         req = l.request
         req.result = np.asarray(l.generated[: req.n_tokens], np.int32)
         req.telemetry.tokens = req.result[None, :]
+        self._finalize_status(req)
         self.events.append({"event": "finish", "uid": req.uid, "lane": lane,
                             "wall_step": self.wall_step})
         l.request = None

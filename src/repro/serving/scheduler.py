@@ -150,6 +150,7 @@ class Scheduler:
             "arrival_t": now, "priority": priority, "seq": self._seq,
             "deadline_t": min(deadlines) if deadlines else None,
             "finish_t": None, "deadline_hit": None, "preempted": 0,
+            "shed": 0,
         }
         self._push(req)
         return self._uid
@@ -157,13 +158,37 @@ class Scheduler:
     # ---------------- admission + preemption ---------------- #
     def _admit_free(self) -> None:
         """Fill every free lane from the queue in policy order (resuming
-        suspended victims through the engine's restore path)."""
-        while self.queue and self.engine.has_free_lane:
+        suspended victims through the engine's restore path).  Ladder
+        stage 3+ (host-stash pressure at ``throttle_admissions``) holds
+        the queue: every admission/resume brings more pages that will
+        freeze into the already-over-budget stash, so new work waits
+        until the pressure drains.  Queued requests are delayed, never
+        altered.  The gate reads ``admission_pressure`` (stash PLUS
+        exported snapshot bytes) rather than the raw stash gauge: a shed
+        victim's export dips the gauge below the threshold for exactly
+        as long as it stays suspended, and resuming it imports every
+        byte back — hysteresis that stops the shed rung and this loop
+        ping-ponging one lane's pages in and out of the store.  An IDLE
+        engine is never throttled — with zero active
+        lanes nothing can drain the pressure, so holding the queue would
+        starve it forever (and the shed rung never takes the last running
+        lane, so admit-then-shed cannot ping-pong a lone request).  The
+        gate is re-checked per admission so the idle exemption admits
+        exactly one item under pressure, not a full refill."""
+        eng = self.engine
+        admitted = 0
+        while self.queue and eng.has_free_lane:
+            if (eng.n_active_lanes + admitted) > 0 and \
+                    eng.admission_pressure >= \
+                    eng.ladder_cfg.throttle_admissions:
+                eng.robust["ladder_throttle"] += 1
+                return
             item = self._pop()
             if isinstance(item, LaneSnapshot):
-                self.engine.resume_lane(item)
+                eng.resume_lane(item)
             else:
-                self.engine.admit(item)
+                eng.admit(item)
+            admitted += 1
 
     def _est_service_s(self, item: Union[Request, LaneSnapshot]) -> float:
         """Rough wall estimate to serve `item` from (re-)admission: chunked
@@ -262,18 +287,51 @@ class Scheduler:
                 # the freed lane is filled by the _admit_free that follows
             return
 
+    def _maybe_shed(self) -> None:
+        """Ladder stage 4 (load shed): suspend the least-valuable running
+        lane through the freeze-native snapshot path and requeue it under
+        its own priority/seq.  Shedding moves the lane's stash pages out
+        of the controller store (``export_lane``), dropping the measured
+        pressure immediately; the request resumes **token-identically**
+        once the throttle rung clears, marked ``shed-resumed`` at
+        retirement.  The last running lane is never shed — some lane must
+        keep retiring work or the pressure could never drain."""
+        eng = self.engine
+        if eng.stash_pressure < eng.ladder_cfg.shed \
+                or eng.n_active_lanes <= 1:
+            return
+        victim = self._pick_victim(-1)      # any running lane qualifies
+        if victim is None:
+            return
+        req = self.engine.lanes[victim].request
+        snap = self.engine.suspend_lane(victim)
+        if snap is None:
+            return                          # retired during the flush
+        req.status = "shed"
+        self.metrics[req.uid]["shed"] += 1
+        self.engine.robust["ladder_shed"] += 1
+        self._push(snap)
+
     def _schedule(self) -> None:
+        self._maybe_shed()
         self._maybe_preempt()
         self._admit_free()
 
     # ---------------- serving loop ---------------- #
     @property
     def busy(self) -> bool:
-        """The engine still has work: active lanes, or a pending chunked
+        """The engine still has work: active lanes, a pending chunked
         prefill (an ``admit_over`` whose victim retired mid-prefill holds
-        no request yet, but its admission must still be driven home)."""
+        no request yet, but its admission must still be driven home), or
+        retirements parked in the engine's backlog.  The backlog term
+        matters at shutdown: a request that retires during the flush
+        inside ``suspend_lane`` is re-reported by the next ``step_once``
+        — without it the loop could go idle at that exact moment and
+        exit with the finished request stranded, never entering
+        ``done``."""
         return self.engine.n_active_lanes > 0 \
-            or bool(getattr(self.engine, "prefills", None))
+            or bool(getattr(self.engine, "prefills", None)) \
+            or self.engine.n_pending_retired > 0
 
     def step(self) -> List[int]:
         """One scheduling pass + one engine step; returns completed uids.

@@ -1,0 +1,145 @@
+"""Property-based chaos tests (S3) — hypothesis-driven mirrors of the
+deterministic seeded checks in tests/test_faults.py.
+
+The whole module skips when ``hypothesis`` is unavailable (the pinned CI
+image does not ship it, and the repo policy is to gate — never install —
+missing dependencies).  Coverage does not regress on skip: the seeded
+random-op storm in tests/test_faults.py exercises the same invariants
+with a fixed RandomState, so these tests only *widen* the searched
+sequence space when the library happens to be present.
+
+Properties:
+
+* fault scheduling is a pure function of (seed, site, op-index) — two
+  schedules built from the same config agree on every draw,
+* ``Endpoint.call`` on a must-succeed endpoint is total: whatever the
+  injected attempt budget and retry allowance, it never raises and runs
+  the wrapped transfer exactly once (donation safety),
+* any admit/suspend/resume/discard/step lifecycle sequence keeps every
+  controller invariant intact (runtime auditor) with exact host-stash
+  byte accounting, and discarding the surviving snapshots always
+  returns ``exported_bytes`` to zero.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st              # noqa: E402
+
+import jax                                           # noqa: E402
+
+from repro.analysis import audit_controller          # noqa: E402
+from repro.configs import get_config                 # noqa: E402
+from repro.models import model as MD                 # noqa: E402
+from repro.serving.engine import (PagedContinuousEngine,  # noqa: E402
+                                  Request)
+from repro.serving.faults import (Endpoint, FaultInjector,  # noqa: E402
+                                  FaultPlan, FaultSchedule, RetryPolicy)
+from repro.serving.sampling import SamplingParams    # noqa: E402
+
+
+# ------------------------------------------------- pure-unit properties --
+
+@given(seed=st.integers(0, 2**31 - 1),
+       rate=st.floats(0.0, 1.0, allow_nan=False),
+       n=st.integers(1, 128))
+@settings(max_examples=50, deadline=None)
+def test_schedule_is_deterministic_in_seed(seed, rate, n):
+    a = FaultSchedule(seed=seed, rates={"pull": rate, "ring": rate})
+    b = FaultSchedule(seed=seed, rates={"pull": rate, "ring": rate})
+    for site in ("pull", "ring"):
+        for i in range(n):
+            pa, pb = a.plan(site, i), b.plan(site, i)
+            assert (pa is None) == (pb is None)
+            if pa is not None:
+                assert pa.kind == pb.kind
+
+
+@given(attempts=st.integers(0, 6), max_retries=st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_must_succeed_endpoint_is_total(attempts, max_retries):
+    """No (injected attempts, retry budget) pair may raise out of a
+    must-succeed endpoint, and the guarded transfer runs exactly once
+    regardless — retries re-draw the fault, not the side effect."""
+    inj = FaultInjector(FaultSchedule(
+        seed=0, explicit={("pull", 0): FaultPlan(attempts=attempts)}))
+    ep = Endpoint("pull", inj,
+                  retry=RetryPolicy(max_retries=max_retries, backoff_s=0.0),
+                  must_succeed=True)
+    calls = []
+    out = ep.call(lambda: calls.append(1) or "ok")
+    assert out == "ok" and len(calls) == 1
+    # every (max_retries + 1)-attempt cycle costs one exhaustion, the
+    # remaining injected attempts are plain retries
+    assert ep.n_exhausted == attempts // (max_retries + 1)
+    assert ep.n_retries == attempts - ep.n_exhausted
+
+
+# ---------------------------------------------- lifecycle op sequences --
+
+@pytest.fixture(scope="module")
+def pressure_cfg():
+    """Aggressive freeze pressure, recovery off — mirrors the
+    ``pressure_cfg`` fixture in tests/test_faults.py."""
+    cfg = get_config("llama3-8b-tiny")
+    fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                             tau_mode="quantile", quantile=0.6, k_soft=0.7,
+                             recovery_enabled=False,
+                             entropy_abs_threshold=0.5, rewalk_tokens=6)
+    cfg = dataclasses.replace(cfg, freeze=fc, dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@given(ops=st.lists(st.integers(0, 9), min_size=20, max_size=48),
+       data_seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+def test_lifecycle_sequences_preserve_invariants(pressure_cfg, ops,
+                                                 data_seed):
+    """Hypothesis-widened twin of test_faults.py's seeded op storm: ANY
+    interleaving of admit/suspend/resume/discard/step keeps the
+    controller auditor green and the stash gauge byte-exact against the
+    store's actual contents, and discarding every surviving snapshot
+    drains ``exported_bytes`` to zero."""
+    cfg, params = pressure_cfg
+    eng = PagedContinuousEngine(cfg, params, max_seq=256, n_lanes=2,
+                                max_active_pages=4, prefill_chunk=16,
+                                rewind_cooldown=12, async_pipeline=True,
+                                burst_prefill=False)
+    rng = np.random.RandomState(data_seed % 2**31)
+    snaps, uid = [], 0
+
+    def active(e):
+        return [i for i in range(e.n_lanes)
+                if e.lanes[i].request is not None or i in e.prefills]
+
+    for op in ops:
+        act = active(eng)
+        if op <= 1 and len(act) < eng.n_lanes:
+            uid += 1
+            eng.admit(Request(
+                uid,
+                np.asarray(rng.randint(0, cfg.vocab_size, size=int(
+                    rng.randint(8, 24))), np.int32),
+                int(rng.randint(8, 32)), SamplingParams.greedy()))
+        elif op == 2 and act:
+            snap = eng.suspend_lane(act[0])
+            if snap is not None:
+                snaps.append(snap)
+        elif op == 3 and snaps and len(active(eng)) < eng.n_lanes:
+            eng.resume_lane(snaps.pop())
+        elif op == 4 and snaps:
+            eng.discard_snapshot(snaps.pop())
+        else:
+            eng.step_once()
+        audit_controller(eng.ctl)
+        assert eng.ctl.stash_bytes == sum(
+            k.nbytes + v.nbytes for k, v in eng.ctl.store.values())
+    for snap in snaps:
+        eng.discard_snapshot(snap)
+    assert eng.ctl.exported_bytes == 0

@@ -1,0 +1,394 @@
+"""Chaos hardening (serving/faults.py + engine/controller integration):
+
+* deterministic fault scheduling: same seed -> identical injection
+  sequence; explicit (site, op) plans override the rate draw,
+* retry/backoff + circuit-breaker state machine semantics (trip on
+  consecutive *operation* failures, op-count cooldown, half-open probe),
+* ``Endpoint.call``: the wrapped transfer runs exactly once (donation
+  safety), best-effort endpoints surface ``Endpoint.FAILED``,
+  must-succeed endpoints absorb exhausted budgets without raising,
+* engine integration: a tripped ring breaker drops the fetch ring to the
+  depth-0 sync baseline token-identically; rate-scheduled DMA faults are
+  token-invisible,
+* host-stash budget: the swap-out hard ceiling, the degradation ladder's
+  throttle/shed rungs (token parity in the recovery-off envelope), and
+  the S1 regression — discarding a suspended snapshot releases its
+  exported pages instead of leaking them,
+* NaN quarantine: one poisoned step -> bounded rewind and completion; a
+  re-poison inside the window -> the lane retires "quarantined",
+* the runtime invariant auditor accepts healthy controllers and flags
+  corrupted gauges, and a seeded random admit/suspend/resume/discard/step
+  storm keeps every invariant intact with exact stash accounting.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import InvariantViolation, audit_controller
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving.engine import LadderConfig, PagedContinuousEngine
+from repro.serving.faults import (ChaosConfig, CircuitBreaker, Endpoint,
+                                  FaultInjector, FaultPlan, FaultSchedule,
+                                  RetryPolicy)
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------- unit --
+
+class TestFaultSchedule:
+    def test_seed_determinism(self):
+        a = FaultSchedule(seed=3, rates={"pull": 0.3, "ring": 0.2})
+        b = FaultSchedule(seed=3, rates={"pull": 0.3, "ring": 0.2})
+        seq_a = [(s, i, a.plan(s, i) is not None)
+                 for s in ("pull", "ring") for i in range(200)]
+        seq_b = [(s, i, b.plan(s, i) is not None)
+                 for s in ("pull", "ring") for i in range(200)]
+        assert seq_a == seq_b
+        hits = sum(1 for _, _, h in seq_a if h)
+        assert 0 < hits < 400          # some, not all
+
+    def test_seed_changes_schedule(self):
+        a = FaultSchedule(seed=1, rates={"pull": 0.3})
+        b = FaultSchedule(seed=2, rates={"pull": 0.3})
+        assert [a.plan("pull", i) is not None for i in range(200)] \
+            != [b.plan("pull", i) is not None for i in range(200)]
+
+    def test_explicit_overrides_rate(self):
+        plan = FaultPlan(kind="slow", delay_s=0.5)
+        s = FaultSchedule(seed=0, rates={"pull": 0.0},
+                          explicit={("pull", 7): plan})
+        assert s.plan("pull", 6) is None
+        assert s.plan("pull", 7) is plan
+
+    def test_nan_site_draws_nan_kind(self):
+        s = FaultSchedule(seed=0, rates={"nan": 1.0})
+        assert s.plan("nan", 0).kind == "nan"
+
+    def test_injector_counts(self):
+        inj = FaultInjector(FaultSchedule(
+            seed=0, explicit={("pull", 1): FaultPlan()}))
+        assert inj.next_plan("pull") is None
+        assert inj.next_plan("pull") is not None
+        assert inj.op_counts["pull"] == 2
+        assert inj.n_injected == 1
+
+
+class TestCircuitBreaker:
+    def test_trips_on_consecutive_failures(self):
+        br = CircuitBreaker(trip_after=3, cooldown_ops=2)
+        for _ in range(2):
+            br.record(False)
+        assert br.state == "closed"
+        br.record(True)                 # success resets the streak
+        for _ in range(3):
+            br.record(False)
+        assert br.state == "open" and br.n_trips == 1
+
+    def test_cooldown_then_half_open_probe(self):
+        br = CircuitBreaker(trip_after=1, cooldown_ops=2)
+        br.record(False)
+        assert not br.allow()           # 1 cooldown op burned
+        assert br.allow()               # cooldown done -> half-open probe
+        assert br.state == "half_open"
+        br.record(True)
+        assert br.state == "closed"
+
+    def test_half_open_failure_reopens(self):
+        br = CircuitBreaker(trip_after=1, cooldown_ops=1)
+        br.record(False)
+        assert br.allow() and br.state == "half_open"
+        br.record(False)
+        assert br.state == "open" and br.n_trips == 2
+
+
+class TestEndpoint:
+    def _ep(self, explicit, must_succeed=True, max_retries=2):
+        inj = FaultInjector(FaultSchedule(seed=0, explicit=explicit))
+        return Endpoint("pull", inj,
+                        retry=RetryPolicy(max_retries=max_retries),
+                        breaker=CircuitBreaker(trip_after=1, cooldown_ops=2),
+                        must_succeed=must_succeed)
+
+    def test_fn_runs_exactly_once(self):
+        calls = []
+        ep = self._ep({("pull", 0): FaultPlan(attempts=2)})
+        out = ep.call(lambda: calls.append(1) or "ok")
+        assert out == "ok" and len(calls) == 1
+        assert ep.n_retries == 2 and ep.n_exhausted == 0
+
+    def test_best_effort_returns_failed(self):
+        ep = self._ep({("pull", 0): FaultPlan(attempts=9)},
+                      must_succeed=False)
+        assert ep.call(lambda: "ok") is Endpoint.FAILED
+        assert ep.n_exhausted == 1 and ep.breaker.tripped
+
+    def test_must_succeed_never_raises(self):
+        ep = self._ep({("pull", 0): FaultPlan(attempts=9)})
+        assert ep.call(lambda: "ok") == "ok"
+        assert ep.n_exhausted >= 1 and ep.breaker.n_trips >= 1
+
+    def test_slow_fault_counts(self):
+        ep = self._ep({("pull", 0): FaultPlan(kind="slow")})
+        assert ep.call(lambda: 5) == 5
+        assert ep.n_slow == 1 and ep.n_retries == 0
+
+
+# --------------------------------------------------- engine integration --
+
+@pytest.fixture(scope="module")
+def chaos_cfg():
+    """Aggressive freeze + recovery: stash, thaws, staging and rewinds
+    all active (mirrors test_async_pipeline.thaw_rewind_cfg)."""
+    cfg = get_config("llama3-8b-tiny")
+    fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                             tau_mode="quantile", quantile=0.6, k_soft=0.7,
+                             recovery_enabled=True,
+                             entropy_abs_threshold=0.5, rewalk_tokens=6)
+    cfg = dataclasses.replace(cfg, freeze=fc, dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def pressure_cfg(chaos_cfg):
+    """Same freeze pressure with recovery OFF — the envelope in which
+    suspend/resume (and therefore the shed rung) is token-exact."""
+    cfg, _ = chaos_cfg
+    cfg = dataclasses.replace(cfg, freeze=dataclasses.replace(
+        cfg.freeze, recovery_enabled=False))
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk(cfg, params, **kw):
+    kw.setdefault("max_seq", 256)
+    kw.setdefault("n_lanes", 2)
+    kw.setdefault("max_active_pages", 6)
+    kw.setdefault("prefill_chunk", 16)
+    kw.setdefault("rewind_cooldown", 12)
+    kw.setdefault("async_pipeline", True)
+    kw.setdefault("burst_prefill", False)
+    return PagedContinuousEngine(cfg, params, **kw)
+
+
+def _serve(eng, cfg, lens, seed=0):
+    s = Scheduler(eng)
+    rng = np.random.RandomState(seed)
+    uids = [s.submit(rng.randint(0, cfg.vocab_size, size=pl), n,
+                     SamplingParams.greedy())
+            for pl, n in lens]
+    s.run()
+    return [s.done[u] for u in uids]
+
+
+def _toks(done):
+    return [list(map(int, r.result)) for r in done]
+
+
+LENS = [(28, 40), (20, 36)]
+
+
+@pytest.fixture(scope="module")
+def clean_ref(chaos_cfg):
+    cfg, params = chaos_cfg
+    return _toks(_serve(_mk(cfg, params), cfg, LENS))
+
+
+class TestChaosEngine:
+    def test_dma_fault_token_parity(self, chaos_cfg, clean_ref):
+        """Rate-scheduled transient faults on every DMA site must be
+        retried into token invisibility."""
+        cfg, params = chaos_cfg
+        chaos = ChaosConfig(seed=7, rates={"pull": 0.3, "push": 0.3,
+                                           "ring": 0.2, "stage": 0.5})
+        eng = _mk(cfg, params, chaos=chaos)
+        done = _serve(eng, cfg, LENS)
+        rs = eng.robust_snapshot()
+        assert rs["retries"] > 0, "schedule must exercise the retry path"
+        assert _toks(done) == clean_ref
+
+    def test_ring_breaker_depth0_fallback(self, chaos_cfg, clean_ref):
+        """A fault burst past the retry budget trips the ring breaker;
+        the engine serves from the depth-0 sync baseline while it is
+        open and the tokens must not change."""
+        cfg, params = chaos_cfg
+        chaos = ChaosConfig(
+            seed=0, max_retries=2, trip_after=2, cooldown_ops=6,
+            explicit={("ring", i): FaultPlan(attempts=10)
+                      for i in range(5, 9)})
+        eng = _mk(cfg, params, chaos=chaos)
+        done = _serve(eng, cfg, LENS)
+        rs = eng.robust_snapshot()
+        assert rs["breaker_trips"] >= 1
+        assert eng.ep_ring.n_exhausted >= 1
+        assert _toks(done) == clean_ref
+
+    def test_quarantine_single_poison_recovers(self, chaos_cfg, clean_ref):
+        """One poisoned step: a bounded page-aware rewind absorbs it and
+        both requests complete (the peer token-identically)."""
+        cfg, params = chaos_cfg
+        chaos = ChaosConfig(seed=0, explicit={
+            ("nan", 30): FaultPlan(kind="nan", lane=0)})
+        eng = _mk(cfg, params, chaos=chaos)
+        done = _serve(eng, cfg, LENS)
+        assert eng.robust["quarantine_rewinds"] == 1
+        assert eng.robust["quarantined"] == 0
+        assert [r.status for r in done] == ["completed", "completed"]
+        # lane 1's peer is untouched: exact parity
+        assert _toks(done)[1] == clean_ref[1]
+
+    def test_quarantine_repoison_retires(self, chaos_cfg):
+        """A second poison inside quarantine_window retires the lane with
+        status 'quarantined'; the peer still completes."""
+        cfg, params = chaos_cfg
+        chaos = ChaosConfig(seed=0, explicit={
+            ("nan", 30): FaultPlan(kind="nan", lane=0),
+            ("nan", 33): FaultPlan(kind="nan", lane=0)})
+        eng = _mk(cfg, params, chaos=chaos)
+        done = _serve(eng, cfg, LENS)
+        assert eng.robust["quarantined"] == 1
+        statuses = sorted(r.status for r in done)
+        assert statuses == ["completed", "quarantined"]
+
+    def test_invariant_auditor_clean_run(self, chaos_cfg):
+        """debug_invariants audits every boundary tick of a faulted run
+        without firing."""
+        cfg, params = chaos_cfg
+        chaos = ChaosConfig(seed=11, rates={"pull": 0.2, "stage": 0.3})
+        eng = _mk(cfg, params, chaos=chaos, debug_invariants=True)
+        _serve(eng, cfg, [(24, 24)])
+        audit_controller(eng.ctl)
+
+
+class TestStashBudget:
+    def test_ladder_throttle_shed_parity(self, pressure_cfg):
+        """Budget above the unbounded peak with throttle+shed armed low:
+        both rungs fire, every shed request resumes and finishes, peak
+        stays under budget, and tokens match the unbounded run
+        (recovery-off parity envelope)."""
+        cfg, params = pressure_cfg
+        lens = [(20, 28)] * 4
+        ref_eng = _mk(cfg, params, max_active_pages=4)
+        ref = _toks(_serve(ref_eng, cfg, lens))
+        budget = int(ref_eng.peak_stash_bytes * 1.25) or 1
+        eng = _mk(cfg, params, max_active_pages=4,
+                  stash_budget_bytes=budget,
+                  ladder=LadderConfig(deny_prefetch=2.0, deepen_timers=2.0,
+                                      throttle_admissions=0.45, shed=0.6))
+        done = _serve(eng, cfg, lens)
+        assert eng.robust["ladder_throttle"] > 0
+        assert eng.robust["ladder_shed"] > 0
+        assert any(r.status == "shed-resumed" for r in done)
+        assert all(r.status in ("completed", "shed-resumed") for r in done)
+        assert eng.peak_stash_bytes <= budget
+        assert _toks(done) == ref
+
+    def test_swap_out_hard_ceiling(self, pressure_cfg):
+        """A tiny budget (no ladder relief) forces the tick's swap-out
+        rung to deny new stash allocations at the ceiling — pages stay
+        resident and the run still completes."""
+        cfg, params = pressure_cfg
+        eng = _mk(cfg, params, max_active_pages=4,
+                  stash_budget_bytes=1,
+                  ladder=LadderConfig(deny_prefetch=2.0, deepen_timers=2.0,
+                                      throttle_admissions=2.0, shed=2.0))
+        done = _serve(eng, cfg, [(20, 24)])
+        assert eng.ctl.n_denied_offloads > 0
+        assert done[0].status == "completed"
+        # the only stash writers left are correctness-critical
+        assert eng.ctl.stash_bytes == sum(
+            k.nbytes + v.nbytes for k, v in eng.ctl.store.values())
+
+    def test_deepen_rung_skips_timer_decrements(self, pressure_cfg):
+        """Pressure past the deepen threshold halves the forced-freeze
+        timer cadence (n_deepen_skips advances)."""
+        cfg, params = pressure_cfg
+        eng = _mk(cfg, params, max_active_pages=4,
+                  stash_budget_bytes=1,
+                  ladder=LadderConfig(deny_prefetch=2.0, deepen_timers=0.0,
+                                      throttle_admissions=2.0, shed=2.0))
+        _serve(eng, cfg, [(20, 24)])
+        assert eng.robust["ladder_deepen"] > 0
+        assert eng.ctl.n_deepen_skips > 0
+
+
+class TestSnapshotLifecycle:
+    def test_discard_snapshot_releases_exported(self, pressure_cfg):
+        """S1 regression: a suspended lane's exported pages must be
+        releasable without resuming — dropping the snapshot without
+        ``discard_snapshot`` leaks the bytes AND the exported_bytes
+        gauge (phantom ladder pressure forever)."""
+        cfg, params = pressure_cfg
+        eng = _mk(cfg, params, max_active_pages=4)
+        s = Scheduler(eng)
+        rng = np.random.RandomState(0)
+        s.submit(rng.randint(0, cfg.vocab_size, size=24), 40,
+                 SamplingParams.greedy())
+        for _ in range(12):
+            s.step()
+        snap = eng.suspend_lane(0)
+        assert snap is not None and snap.stashed
+        assert eng.ctl.exported_bytes > 0
+        eng.discard_snapshot(snap)
+        assert eng.ctl.exported_bytes == 0
+        assert snap.stashed is None
+        eng.discard_snapshot(snap)           # idempotent
+        audit_controller(eng.ctl)
+        # the freed lane serves a fresh request cleanly
+        done = _serve(eng, cfg, [(16, 12)])
+        assert done[0].status == "completed"
+
+    def test_auditor_flags_corrupt_gauge(self, pressure_cfg):
+        cfg, params = pressure_cfg
+        eng = _mk(cfg, params, max_active_pages=4)
+        _serve(eng, cfg, [(20, 24)])
+        audit_controller(eng.ctl)
+        eng.ctl.stash_bytes += 123           # corrupt the gauge
+        with pytest.raises(InvariantViolation):
+            audit_controller(eng.ctl)
+        eng.ctl.stash_bytes -= 123
+
+    def test_seeded_random_op_storm(self, pressure_cfg):
+        """Deterministic mirror of the hypothesis property test
+        (tests/test_chaos_properties.py): a seeded storm of
+        admit/step/suspend/resume/discard ops never breaks a controller
+        invariant and the stash accounting stays exact."""
+        from repro.serving.engine import Request
+        cfg, params = pressure_cfg
+        eng = _mk(cfg, params, max_active_pages=4)
+        rng = np.random.RandomState(4)
+        snaps, uid = [], 0
+
+        def active(e):
+            return [i for i in range(e.n_lanes)
+                    if e.lanes[i].request is not None or i in e.prefills]
+
+        for op in rng.randint(0, 10, size=120):
+            act = active(eng)
+            if op <= 1 and len(act) < eng.n_lanes:
+                uid += 1
+                eng.admit(Request(
+                    uid,
+                    np.asarray(rng.randint(0, cfg.vocab_size, size=int(
+                        rng.randint(8, 24))), np.int32),
+                    int(rng.randint(8, 32)), SamplingParams.greedy()))
+            elif op == 2 and act:
+                snap = eng.suspend_lane(act[0])
+                if snap is not None:
+                    snaps.append(snap)
+            elif op == 3 and snaps and len(active(eng)) < eng.n_lanes:
+                eng.resume_lane(snaps.pop())
+            elif op == 4 and snaps:
+                eng.discard_snapshot(snaps.pop())
+            else:
+                eng.step_once()
+            audit_controller(eng.ctl)
+            assert eng.ctl.stash_bytes == sum(
+                k.nbytes + v.nbytes for k, v in eng.ctl.store.values())
+        for snap in snaps:
+            eng.discard_snapshot(snap)
+        assert eng.ctl.exported_bytes == 0

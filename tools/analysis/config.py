@@ -42,6 +42,12 @@ REPO_CONFIG = Config(
         "_LaneEngineBase._drain_ring",
         "_LaneEngineBase._push_admit_token",
         "_LaneEngineBase._lane_params",
+        # chaos hardening: breaker-gated ring depth + NaN quarantine run
+        # every step; Endpoint.call wraps every guarded transfer
+        "_LaneEngineBase._ring_guard",
+        "_LaneEngineBase._quarantine_scan",
+        "_LaneEngineBase._poison_lane",
+        "Endpoint.call",
         # host-side paging controller: ticked at every page boundary
         "PagedController.tick",
         "PagedController.thaw_lane",
@@ -49,6 +55,8 @@ REPO_CONFIG = Config(
         "PagedController._install_page",
         "PagedController._evict_coldest",
         "PagedController.ensure_resident",
+        # budget-guarded host-stash writer (every stash allocation)
+        "PagedController._store_put",
         # page-batched offload round-trip (dense engine's commit path)
         "HostOffloadController.sync",
     }),

@@ -129,6 +129,73 @@ def check_scheduling(path: pathlib.Path, max_retraces=None) -> None:
           f"{s.get('parity_by_uid')})")
 
 
+def check_chaos(path: pathlib.Path) -> None:
+    print(f"== {path}")
+    c = json.loads(path.read_text())
+    if not require_keys("chaos", c, (
+            "unhandled_exceptions", "dma_token_parity", "dma_retries",
+            "dma_sites_hit", "dma_breaker_trips", "ladder_token_parity",
+            "ladder_peak_within_budget", "ladder_throttles", "ladder_sheds",
+            "ladder_shed_resumed", "full_ladder_denied_offloads",
+            "full_ladder_denies", "full_ladder_deepens",
+            "full_ladder_peak_no_worse", "full_ladder_statuses_clean",
+            "nan_single_recovered", "nan_double_quarantined",
+            "nan_peer_parity")):
+        return
+    check("chaos-no-unhandled", c["unhandled_exceptions"] == 0,
+          "chaos may degrade serving modes but never crash the server "
+          f"(unhandled_exceptions={c['unhandled_exceptions']})")
+    check("dma-token-parity", bool(c["dma_token_parity"]),
+          "every survivable DMA fault (retried transient, breaker "
+          "fallback, staging disable) must be token-invisible")
+    check("dma-retries-nonzero", c["dma_retries"] > 0,
+          "the fault schedule must actually exercise the retry path, "
+          f"else the parity assertion is vacuous (retries={c['dma_retries']})")
+    check("dma-sites-covered", c["dma_sites_hit"] >= 3,
+          "faults must land on >= 3 distinct injection sites "
+          f"(hit {c['dma_sites_hit']})")
+    check("dma-breaker-trips", c["dma_breaker_trips"] >= 1,
+          "the explicit ring burst must trip the ring breaker — the "
+          "depth-0 fallback is the mode under test "
+          f"(trips={c['dma_breaker_trips']})")
+    check("ladder-token-parity", bool(c["ladder_token_parity"]),
+          "throttle and shed rungs must be token-invisible against the "
+          "unbounded run (recovery-off parity envelope)")
+    check("ladder-peak-within-budget", bool(c["ladder_peak_within_budget"]),
+          "parity arm: peak host-stash bytes must stay <= the budget")
+    check("ladder-throttles-nonzero", c["ladder_throttles"] > 0,
+          "the throttle rung must fire, else its parity claim is vacuous "
+          f"(throttles={c['ladder_throttles']})")
+    check("ladder-shed-resumed", c["ladder_sheds"] > 0
+          and c["ladder_shed_resumed"] > 0,
+          "the shed rung must fire and shed requests must resume and "
+          f"finish (sheds={c['ladder_sheds']}, "
+          f"shed_resumed={c['ladder_shed_resumed']})")
+    check("full-ladder-ceiling", c["full_ladder_denied_offloads"] > 0,
+          "tight-budget arm: the swap-out hard ceiling must deny at "
+          f"least one offload (denied={c['full_ladder_denied_offloads']})")
+    check("full-ladder-rungs", c["full_ladder_denies"] > 0
+          and c["full_ladder_deepens"] > 0,
+          "tight-budget arm: deny-prefetch and deepen-timers rungs must "
+          f"both fire (denies={c['full_ladder_denies']}, "
+          f"deepens={c['full_ladder_deepens']})")
+    check("full-ladder-peak-no-worse", bool(c["full_ladder_peak_no_worse"]),
+          "tight-budget arm: peak stash must never exceed the unbounded "
+          "run's (the ceiling stops all optimization-path growth)")
+    check("full-ladder-statuses", bool(c["full_ladder_statuses_clean"]),
+          "tight-budget arm: every request must end completed or "
+          "shed-resumed")
+    check("nan-single-recovered", bool(c["nan_single_recovered"]),
+          "a single poisoned step must be absorbed by one bounded "
+          "quarantine rewind with every request completing")
+    check("nan-double-quarantined", bool(c["nan_double_quarantined"]),
+          "a re-poisoned lane must retire exactly one request "
+          "'quarantined' instead of looping")
+    check("nan-peer-parity", bool(c["nan_peer_parity"]),
+          "the unpoisoned peer lane must be token-identical to a clean "
+          "run in both poison scenarios")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -139,6 +206,9 @@ def main(argv=None) -> int:
     ap.add_argument("--scheduling", type=pathlib.Path, default=None,
                     help="experiments/bench/scheduling.json (mixed-SLO "
                          "trace, benchmarks/scheduling.py)")
+    ap.add_argument("--chaos", type=pathlib.Path, default=None,
+                    help="BENCH_chaos.json (fault-injection / "
+                         "degradation-ladder criteria, benchmarks/chaos.py)")
     ap.add_argument("--max-retraces", type=int, default=None,
                     metavar="N",
                     help="assert the benchmarks' steady-state jit "
@@ -151,6 +221,8 @@ def main(argv=None) -> int:
     check_bench(args.bench, max_retraces=args.max_retraces)
     if args.scheduling is not None:
         check_scheduling(args.scheduling, max_retraces=args.max_retraces)
+    if args.chaos is not None:
+        check_chaos(args.chaos)
 
     if FAILURES:
         print(f"\n{len(FAILURES)} benchmark assertion(s) failed: "
