@@ -390,12 +390,29 @@ def _needle_visibility(eng, lane: int, needle) -> float:
     return float(np.mean(~fro[:, needle]))
 
 
-def run_needle(cfg, params, smoke: bool, paged: bool, recovery: bool):
+def run_needle(cfg, params, smoke: bool, paged: bool, recovery: bool,
+               kv_quant: str = "none"):
     """Serve the needle trace through one engine arm; retrieval accuracy is
     the max needle visibility observed inside each request's query window
     (its last 2 pages of decode steps), averaged over requests — i.e. "can
     attention still reach the needle when the query arrives?".  Accuracy
-    is state-based, not timing-based, so no warmup pass is needed."""
+    is state-based, not timing-based, so no warmup pass is needed.
+
+    ``kv_quant`` turns on per-page quantization of frozen/stashed pages
+    (docs/quantization.md).  Beyond accuracy, each arm reports
+    ``kv_device_bytes_query_floor`` — the LOWEST device-KV gauge sampled
+    on steps where some live lane is inside its query window.  Any
+    max-style aggregate is provably blind to the cut: admission starts
+    all-hot, so both arms read the identical full pool at the window's
+    first steps and a peak ties forever.  Under ``kv_quant="none"`` the
+    gauge is constant (the pool is fixed and savings are zero), so the
+    floor IS the unquantized footprint, while the quant arm's floor
+    captures the packed steady state once stashed pages have swapped
+    back in quantized — with ``max_rewinds=0`` and visibility-only
+    recovery they never dequantize, so the floor is a residency measure,
+    not a transient.  ``dma_bytes`` totals blocking + async transfers
+    both ways (quantized pages cross packed, so the quant arm's total
+    must drop)."""
     from repro.serving.engine import (ContinuousEngine,
                                       PagedContinuousEngine, Request)
     from repro.serving.sampling import SamplingParams
@@ -417,10 +434,11 @@ def run_needle(cfg, params, smoke: bool, paged: bool, recovery: bool):
                                     n_lanes=n_req,
                                     max_active_pages=pool_pages,
                                     prefill_chunk=page, max_rewinds=0,
-                                    async_pipeline=False)
+                                    async_pipeline=False, kv_quant=kv_quant)
     else:
         eng = ContinuousEngine(cfg, params, max_seq=max_seq, n_lanes=n_req,
-                               max_rewinds=0, async_pipeline=False)
+                               max_rewinds=0, async_pipeline=False,
+                               kv_quant=kv_quant)
     rng = np.random.RandomState(7)
     reqs = [Request(i + 1,
                     rng.randint(0, cfg.vocab_size, size=prompt_len).astype(
@@ -430,15 +448,25 @@ def run_needle(cfg, params, smoke: bool, paged: bool, recovery: bool):
     lane_of = {eng.admit(r): r for r in reqs}
     best = {r.uid: 0.0 for r in reqs}
     steps = 0
+    q_floor = None
+
+    def _in_window(lane, r):
+        l = eng.lanes[lane]
+        return (l.request is r and lane not in getattr(eng, "prefills", {})
+                and r.n_tokens - len(l.generated) <= query_window)
+
     while any(l.request is not None for l in eng.lanes):
+        # pre-step sample: the retire step clears the savings ledger with
+        # the lane, so sampling before it keeps the gauge a residency
+        # measure, not a teardown artifact
+        if any(_in_window(lane, r) for lane, r in lane_of.items()):
+            g = eng.kv_device_bytes
+            q_floor = g if q_floor is None else min(q_floor, g)
         eng.step_once()
         steps += 1
         assert steps < 200 * n_gen, "needle benchmark stalled"
         for lane, r in lane_of.items():
-            l = eng.lanes[lane]
-            if l.request is not r or lane in getattr(eng, "prefills", {}):
-                continue
-            if r.n_tokens - len(l.generated) > query_window:
+            if not _in_window(lane, r):
                 continue
             if paged:
                 needle = 0                                  # global page id
@@ -447,23 +475,34 @@ def run_needle(cfg, params, smoke: bool, paged: bool, recovery: bool):
                 needle = np.arange(page) + (sp - prompt_len)
             best[r.uid] = max(best[r.uid],
                               _needle_visibility(eng, lane, needle))
+    snap = eng.stats.snapshot()
     stats = {"retrieval_acc": round(float(np.mean(list(best.values()))), 3),
-             "peak_kv_bytes": int(eng.peak_kv_bytes)}
+             "peak_kv_bytes": int(eng.peak_kv_bytes),
+             "kv_device_bytes_query_floor": int(q_floor or 0),
+             "dma_bytes": int(snap["d2h_bytes"] + snap["h2d_bytes"]),
+             "kv_quant": kv_quant}
     if paged:
         stats["thaws"] = eng.ctl.n_thaw
         stats["swaps"] = eng.ctl.n_swap_out + eng.ctl.n_swap_in
+        stats["quantized_pages"] = eng.ctl.n_quantized_pages
     return stats
 
 
 def run_needle_comparison(cfg, params, smoke: bool):
-    """Three arms: contiguous + recovery (the reference), paged + recovery
+    """Four arms: contiguous + recovery (the reference), paged + recovery
     (must match it at lower peak KV), paged without recovery (the
-    eviction-scheme contrast ROADMAP warns about)."""
+    eviction-scheme contrast ROADMAP warns about), and paged + recovery
+    with int8 page quantization (must hold the same retrieval accuracy at
+    lower query-window device KV and lower DMA bytes — the guardrail
+    ``tools/check_bench.py --quant`` enforces)."""
     out = {}
-    for name, paged, recovery in (("contiguous_recovery", False, True),
-                                  ("paged_recovery", True, True),
-                                  ("paged_no_recovery", True, False)):
-        out[name] = run_needle(cfg, params, smoke, paged, recovery)
+    for name, paged, recovery, kv_quant in (
+            ("contiguous_recovery", False, True, "none"),
+            ("paged_recovery", True, True, "none"),
+            ("paged_no_recovery", True, False, "none"),
+            ("paged_recovery_quant", True, True, "int8")):
+        out[name] = run_needle(cfg, params, smoke, paged, recovery,
+                               kv_quant=kv_quant)
     return out
 
 
@@ -531,10 +570,11 @@ def main():
     # ---- needle-in-haystack: recovery keeps frozen context retrievable ---- #
     needle = run_needle_comparison(cfg, params, smoke=args.smoke)
     print(f"\n{'needle retrieval':>22s}  "
-          + "  ".join(f"{k:>20s}" for k in needle))
-    for field in ("retrieval_acc", "peak_kv_bytes"):
-        print(f"{field:>22s}  "
-              + "  ".join(f"{needle[k][field]:>20}" for k in needle))
+          + "  ".join(f"{k:>22s}" for k in needle))
+    for field in ("retrieval_acc", "peak_kv_bytes",
+                  "kv_device_bytes_query_floor", "dma_bytes"):
+        print(f"{field:>26s}  "
+              + "  ".join(f"{needle[k][field]:>22}" for k in needle))
     acc_match = (needle["paged_recovery"]["retrieval_acc"]
                  >= needle["contiguous_recovery"]["retrieval_acc"])
     needle_mem_win = (needle["paged_recovery"]["peak_kv_bytes"]
@@ -543,8 +583,20 @@ def main():
           f"at lower peak KV: {needle_mem_win}   "
           f"(no-recovery contrast: "
           f"{needle['paged_no_recovery']['retrieval_acc']})")
+    quant, base = needle["paged_recovery_quant"], needle["paged_recovery"]
+    quant_kv_win = (quant["kv_device_bytes_query_floor"]
+                    < base["kv_device_bytes_query_floor"])
+    quant_dma_win = quant["dma_bytes"] < base["dma_bytes"]
+    print(f"int8 arm: retrieval {quant['retrieval_acc']}   "
+          f"query-window KV win: {quant_kv_win} "
+          f"({quant['kv_device_bytes_query_floor']} < "
+          f"{base['kv_device_bytes_query_floor']})   "
+          f"DMA win: {quant_dma_win} "
+          f"({quant['dma_bytes']} < {base['dma_bytes']})")
     report.update(needle=needle, needle_acc_match=bool(acc_match),
-                  needle_mem_win=bool(needle_mem_win))
+                  needle_mem_win=bool(needle_mem_win),
+                  quant_kv_win=bool(quant_kv_win),
+                  quant_dma_win=bool(quant_dma_win))
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "continuous_batching.json").write_text(
@@ -575,6 +627,23 @@ def main():
         "blocking_transfers": {
             arm: ab[arm]["blocking_d2h"] + ab[arm]["blocking_h2d"]
             for arm in ("sync", "async")},
+        # quantized-KV guardrail (tools/check_bench.py --quant): the int8
+        # needle arm must hold full retrieval while cutting BOTH the
+        # query-window device-KV gauge and total DMA bytes vs the
+        # unquantized paged+recovery arm
+        "quant": {
+            "retrieval_acc": needle["paged_recovery_quant"]["retrieval_acc"],
+            "baseline_retrieval_acc": needle["paged_recovery"][
+                "retrieval_acc"],
+            "kv_device_bytes_query_floor": {
+                arm: needle[arm]["kv_device_bytes_query_floor"]
+                for arm in ("paged_recovery", "paged_recovery_quant")},
+            "dma_bytes": {
+                arm: needle[arm]["dma_bytes"]
+                for arm in ("paged_recovery", "paged_recovery_quant")},
+            "quantized_pages": needle["paged_recovery_quant"][
+                "quantized_pages"],
+        },
     }
     (pathlib.Path(__file__).resolve().parents[1]
      / "BENCH_continuous_batching.json").write_text(

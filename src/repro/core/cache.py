@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import quant
 
 
 class KVCache(NamedTuple):
@@ -127,6 +128,16 @@ class HostOffloadController:
     stash_bytes: int = 0
     stash_budget_bytes: "int | None" = None
     n_denied_offloads: int = 0
+    # ---- lossy host-stash compression (core/quant.py) ------------------ #
+    # "int8"/"fp8" stores each offloaded page as its 1-byte payload with
+    # per-page per-kv-head scales (stash_bytes counts the payload, so the
+    # budget ladder sees the real cut); restores dequantize HOST-SIDE —
+    # the dense cache has no per-page scale slots, unlike the paged pool's
+    # in-kernel dequant path.  "none" is byte-identical to the old store.
+    kv_quant: str = "none"
+    quant_scales: Dict[Tuple[int, int, int],
+                       Tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def stash_pressure(self) -> float:
@@ -184,11 +195,21 @@ class HostOffloadController:
                 sl = slice(p * pg, (p + 1) * pg)
                 kk = k_host[l, b, sl].copy()
                 vv = v_host[l, b, sl].copy()
+                mode = quant.MODES[self.kv_quant]
+                qm = None
+                if mode:
+                    kk, ks = quant.quantize_page(kk, mode)
+                    vv, vs = quant.quantize_page(vv, mode)
+                    qm = (ks, vs)
+                # budget check on what the stash actually holds — the
+                # 1-byte payload under an active quant mode
                 if self.stash_budget_bytes is not None and \
                         self.stash_bytes + kk.nbytes + vv.nbytes > \
                         self.stash_budget_bytes:
                     self.n_denied_offloads += 1
                     continue       # page stays resident (and frozen)
+                if qm is not None:
+                    self.quant_scales[key] = qm
                 self.store[key] = (kk, vv)
                 self.stash_bytes += kk.nbytes + vv.nbytes
                 self.offloaded.add(key)
@@ -202,6 +223,10 @@ class HostOffloadController:
             if not all_frozen[l, b, p]:
                 kk, vv = self.store.pop(key)
                 self.stash_bytes -= kk.nbytes + vv.nbytes
+                qm = self.quant_scales.pop(key, None)
+                if qm is not None:
+                    kk = quant.dequantize_page(kk, qm[0])
+                    vv = quant.dequantize_page(vv, qm[1])
                 sl = slice(p * pg, (p + 1) * pg)
                 k_host[l, b, sl] = kk
                 v_host[l, b, sl] = vv
@@ -234,5 +259,6 @@ class HostOffloadController:
             kv = self.store.pop(key, None)
             if kv is not None:
                 self.stash_bytes -= kv[0].nbytes + kv[1].nbytes
+            self.quant_scales.pop(key, None)
             self.offloaded.discard(key)
         return len(stale)

@@ -55,6 +55,8 @@ def paged_decode_attention(
     slot_mask: jnp.ndarray,   # (B, P, page) bool
     page_table: Optional[jnp.ndarray] = None,   # (B, P); slots < 0 unmapped
     page_visible: Optional[jnp.ndarray] = None, # (B, P) bool; False = frozen
+    page_quant: Optional[jnp.ndarray] = None,   # (B, P) i32; != 0 = quantized
+    kv_scales: Optional[jnp.ndarray] = None,    # (B, P, 2, KVH) f32
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Decode attention over the active page pool.
 
@@ -66,6 +68,14 @@ def paged_decode_attention(
     the recovery ladder ran): invisible pages contribute nothing and report
     relevance 0, exactly like an unmapped slot, while a page the ladder
     just thawed re-enters both the softmax and the relevance accounting.
+    ``page_quant`` / ``kv_scales`` are the per-page quantization slots
+    (core/quant.py): pages whose flag is non-zero hold an integer-valued
+    payload and are dequantized here by their per-kv-head scales — K by
+    ``kv_scales[..., 0, :]``, V by ``kv_scales[..., 1, :]`` — before the
+    relevance and softmax einsums, so the freeze schedule scores real
+    magnitudes.  Unflagged pages keep their exact bytes (the dequant is a
+    masked select, not a multiply by 1.0), which is what keeps
+    ``kv_quant="none"`` bit-identical to the unquantized path.
     """
     B, H, hd = q.shape
     _, P, page, KVH, _ = k_pages.shape
@@ -76,6 +86,14 @@ def paged_decode_attention(
     G = H // KVH
     qf = q.reshape(B, KVH, G, hd).astype(jnp.float32)
     kf = k_pages.astype(jnp.float32)
+    vf_pages = v_pages.astype(jnp.float32)
+    if page_quant is not None and kv_scales is not None:
+        flag = (page_quant != 0)[:, :, None, None, None]   # (B,P,1,1,1)
+        sc = kv_scales.astype(jnp.float32)
+        sk = sc[:, :, 0][:, :, None, :, None]              # (B,P,1,KVH,1)
+        sv = sc[:, :, 1][:, :, None, :, None]
+        kf = jnp.where(flag, kf * sk, kf)
+        vf_pages = jnp.where(flag, vf_pages * sv, vf_pages)
     raw = jnp.einsum("bkgh,bpskh->bkgps", qf, kf)              # (B,KVH,G,P,page)
     tok_rel = jnp.mean(jnp.abs(raw), axis=(1, 2))              # (B,P,page)
     denom = jnp.maximum(jnp.sum(slot_mask, axis=-1), 1)
@@ -87,7 +105,7 @@ def paged_decode_attention(
     p = jax.nn.softmax(s, axis=-1)
     any_active = jnp.any(slot_mask.reshape(B, 1, 1, -1), axis=-1, keepdims=True)
     p = jnp.where(any_active, p, 0.0)
-    vf = v_pages.astype(jnp.float32).reshape(B, P * page, KVH, hd)
+    vf = vf_pages.reshape(B, P * page, KVH, hd)
     out = jnp.einsum("bkgs,bskh->bkgh", p, vf)
     return out.reshape(B, H, hd).astype(q.dtype), page_rel
 
@@ -274,6 +292,30 @@ class PagedController:
     n_stash_faults: int = 0      # swap-outs skipped by injected alloc fails
     n_trims: int = 0             # redundant resident copies freed (stage 1)
     n_denied_offloads: int = 0   # swap-outs denied by the budget ceiling
+    # ---- per-page KV quantization (core/quant.py) --------------------- #
+    # ``kv_quant`` != "none" quantizes exactly the frozen / stashed pages:
+    # resident frozen pages are quantized in place at the boundary tick
+    # (integer payload in the pool dtype + per-page per-kv-head scales in
+    # the pool's ``page_quant`` / ``kv_scales`` slots — the kernel dequants
+    # at attention time), and every store payload is the 1-byte narrow
+    # form.  ``quant_meta`` carries each stashed page's (K scales,
+    # V scales) parallel to ``store`` — store values stay (k, v) 2-tuples
+    # so the byte-gauge invariant (stash_bytes == Σ nbytes) is unchanged.
+    # A thaw installs the *quantized* payload and its scales (no host
+    # dequant round-trip); only ``ensure_resident`` — the rewind path,
+    # whose tail page must be writable — dequantizes host-side.
+    kv_quant: str = "none"
+    quant_meta: Dict[Tuple[int, int, int],
+                     Tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+    # lane id -> device bytes saved by packed (1-byte) resident quantized
+    # pages — the engine's kv_device_bytes gauge subtracts this (on real
+    # TPU the frozen region of the pool is physically int8/fp8; the CPU
+    # model widens payloads into the one-dtype pool, so the ledger models
+    # the packed layout)
+    resident_quant: Dict[int, int] = dataclasses.field(default_factory=dict)
+    n_quantized_pages: int = 0   # pages quantized fresh (in-place pass,
+    #                              swap-out narrowing, admission stash)
 
     # ---- single entry/exit points for host-stash bytes ---------------- #
     def _store_put(self, key: Tuple[int, int, int],
@@ -299,11 +341,138 @@ class PagedController:
 
     def _store_pop(self, key: Tuple[int, int, int]
                    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-        """The only remover of ``store``; see ``_store_put``."""
+        """The only remover of ``store``; see ``_store_put``.  The page's
+        quant scales (``quant_meta``) live and die with its store entry."""
         kv = self.store.pop(key, None)
         if kv is not None:
             self.stash_bytes -= kv[0].nbytes + kv[1].nbytes
+            self.quant_meta.pop(key, None)
         return kv
+
+    # ---- per-page quantization plumbing ------------------------------- #
+    @property
+    def quant_mode(self) -> int:
+        from repro.core import quant
+        return quant.MODES[self.kv_quant]
+
+    @property
+    def device_savings_bytes(self) -> int:
+        """Device bytes saved by packed resident quantized pages (the
+        engine's kv_device_bytes gauge subtracts this; 0 under
+        ``kv_quant="none"`` so the gauge is exactly the physical pool)."""
+        return sum(self.resident_quant.values())
+
+    def _store_payload(self, pool: dict, l: int, b: int, p: int
+                       ) -> Tuple[Tuple[np.ndarray, np.ndarray],
+                                  Optional[Tuple[np.ndarray, np.ndarray]]]:
+        """The (k, v) bytes a swap-out/eviction of pool slot ``(l, b, p)``
+        should place in the host store, plus the page's quant scales (None
+        when full precision).  An already-quantized pool page narrows to
+        its 1-byte payload with its EXISTING scales — never re-quantized;
+        an unquantized page under an active quant mode is quantized fresh
+        (the freeze-time quantization for pools the in-place pass has not
+        seen, e.g. direct-tick callers without quant slots)."""
+        from repro.core import quant
+        k_page = np.asarray(pool["k"][l, b, p])
+        v_page = np.asarray(pool["v"][l, b, p])
+        mode = self.quant_mode
+        if not mode:
+            return (k_page.copy(), v_page.copy()), None
+        pq = pool.get("page_quant")
+        if pq is not None and pq[l, b, p]:
+            sc = pool["kv_scales"]
+            return ((quant.narrow_payload(k_page, int(pq[l, b, p])),
+                     quant.narrow_payload(v_page, int(pq[l, b, p]))),
+                    (np.array(sc[l, b, p, 0], np.float32),
+                     np.array(sc[l, b, p, 1], np.float32)))
+        pk, sk = quant.quantize_page(k_page, mode)
+        pv, sv = quant.quantize_page(v_page, mode)
+        self.n_quantized_pages += 1
+        return (pk, pv), (sk, sv)
+
+    def _clear_quant_slot(self, pool: dict, l: int, b: int, p: int) -> None:
+        if "page_quant" in pool:
+            pool["page_quant"][l, b, p] = 0
+            pool["kv_scales"][l, b, p] = 1.0
+
+    def _install_kv(self, pool: dict, l: int, b: int, p: int,
+                    key: Tuple[int, int, int]) -> None:
+        """Write a store payload into pool slot ``(l, b, p)``: a quantized
+        payload installs AS-IS (1-byte values widened into the pool dtype)
+        with its scales in the pool's quant slots — the kernel dequants at
+        attention time, no host round-trip; pools without quant slots
+        (direct-tick tests) get the host-side dequantized page instead."""
+        from repro.core import quant
+        kk, vv = self.store[key]
+        qm = self.quant_meta.get(key)
+        if qm is None:
+            pool["k"][l, b, p] = kk
+            pool["v"][l, b, p] = vv
+            self._clear_quant_slot(pool, l, b, p)
+        elif "page_quant" in pool:
+            pool["k"][l, b, p] = kk
+            pool["v"][l, b, p] = vv
+            pool["page_quant"][l, b, p] = self.quant_mode
+            pool["kv_scales"][l, b, p, 0] = qm[0]
+            pool["kv_scales"][l, b, p, 1] = qm[1]
+        else:
+            pool["k"][l, b, p] = quant.dequantize_page(kk, qm[0])
+            pool["v"][l, b, p] = quant.dequantize_page(vv, qm[1])
+
+    def _quantize_frozen_resident(self, pool: dict, fstate: dict,
+                                  lane_set) -> None:
+        """Quantize every resident frozen page of ``lane_set`` in place —
+        the device-residency arm of the byte cut.  Frozen pages receive no
+        KV writes (the soft-freeze invariant), so the payload is immutable
+        until a thaw/rewind; pages already flagged are skipped (the
+        no-double-quantization guarantee)."""
+        from repro.core import quant
+        mode = self.quant_mode
+        if not mode or "page_quant" not in pool:
+            return
+        k, v, pt = pool["k"], pool["v"], pool["page_table"]
+        pq, sc = pool["page_quant"], pool["kv_scales"]
+        frozen = fstate["frozen"]
+        L, _, P = pt.shape
+        wrote = False
+        for l in range(L):
+            for b in lane_set:
+                for p in range(P):
+                    if pt[l, b, p] < 0 or not frozen[l, b, p] \
+                            or pq[l, b, p]:
+                        continue
+                    pk, skl = quant.quantize_page(np.asarray(k[l, b, p]),
+                                                  mode)
+                    pv, svl = quant.quantize_page(np.asarray(v[l, b, p]),
+                                                  mode)
+                    k[l, b, p] = pk
+                    v[l, b, p] = pv
+                    pq[l, b, p] = mode
+                    sc[l, b, p, 0] = skl
+                    sc[l, b, p, 1] = svl
+                    self.n_quantized_pages += 1
+                    wrote = True
+        if wrote:
+            self.kv_dirty = True
+
+    def refresh_resident_quant(self, pool: dict, b: int,
+                               lane_id: int) -> None:
+        """Rebuild one lane's packed-residency ledger from its pulled pool
+        slice: mapped pages whose quant flag is set occupy 1 byte/elem on a
+        real mixed-precision pool, so the difference to the full-dtype
+        width is credited to ``device_savings_bytes``."""
+        pq = pool.get("page_quant")
+        if pq is None or not self.quant_mode:
+            self.resident_quant.pop(lane_id, None)
+            return
+        pt, k = pool["page_table"], pool["k"]
+        n = int(((pq[:, b] != 0) & (pt[:, b] >= 0)).sum())
+        page_elems = int(np.prod(k.shape[3:]))
+        saved = n * page_elems * (np.dtype(k.dtype).itemsize - 1) * 2
+        if saved:
+            self.resident_quant[lane_id] = saved
+        else:
+            self.resident_quant.pop(lane_id, None)
 
     @property
     def stash_pressure(self) -> float:
@@ -335,8 +504,8 @@ class PagedController:
         snapshot is dropped without resuming (cancelled / shed work the
         scheduler abandoned) — the leak ``import_lane`` would otherwise
         never reclaim.  Returns bytes released."""
-        freed = sum(kv[0].nbytes + kv[1].nbytes
-                    for kv, _meta in pages.values())
+        freed = sum(entry[0][0].nbytes + entry[0][1].nbytes
+                    for entry in pages.values())
         self.exported_bytes = max(0, self.exported_bytes - freed)
         return freed
 
@@ -391,6 +560,11 @@ class PagedController:
         lane_set = range(B) if lanes is None else lanes
         frozen = fstate["frozen"]
         self.n_ticks += 1
+        # 0) quantize resident frozen pages in place (kv_quant != "none"):
+        # frozen pages are write-immutable, so this is the one moment a
+        # page changes representation on device — before any swap-out, so
+        # the store only ever receives the narrow payload
+        self._quantize_frozen_resident(pool, fstate, lane_set)
         # ladder stage 2 (deepen): offloaded timers decrement on even
         # ticks only, so stashed pages stay out ~2x longer under pressure
         deepen_hold = self.deepen_timers and (self.n_ticks % 2 == 1)
@@ -401,10 +575,11 @@ class PagedController:
                 for p in range(P):
                     if pt[l, b, p] >= 0 and frozen[l, b, p]:
                         key = (l, gb, int(pt[l, b, p]))
+                        kv_out, qm = self._store_payload(pool, l, b, p)
                         if self.stash_budget_bytes is not None \
                                 and key not in self.store \
-                                and self.stash_bytes + k[l, b, p].nbytes \
-                                    + v[l, b, p].nbytes \
+                                and self.stash_bytes + kv_out[0].nbytes \
+                                    + kv_out[1].nbytes \
                                     > self.stash_budget_bytes:
                             # budget ceiling: the swap-out is the one
                             # stash producer that is pure optimization,
@@ -415,13 +590,14 @@ class PagedController:
                             self.n_denied_offloads += 1
                             continue
                         try:
-                            self._store_put(
-                                key, (k[l, b, p].copy(), v[l, b, p].copy()))
+                            self._store_put(key, kv_out)
                         except StashAllocError:
                             # allocation failed: the page simply stays
                             # device-resident and frozen; this swap-out
                             # retries at the lane's next boundary tick
                             continue
+                        if qm is not None:
+                            self.quant_meta[key] = qm
                         self.frozen_meta[key] = {
                             "c": int(fstate["c"][l, b, p]),
                             "d": int(fstate["d"][l, b, p]),
@@ -429,6 +605,7 @@ class PagedController:
                         }
                         pt[l, b, p] = -1
                         sm[l, b, p] = False
+                        self._clear_quant_slot(pool, l, b, p)
                         for f in ("c", "d", "frozen", "frozen_at"):
                             fstate[f][l, b, p] = 0
                         self.n_swap_out += 1
@@ -448,9 +625,7 @@ class PagedController:
                             meta["d"] = 1          # retry next step
                             continue
                         p = int(free[0])
-                        kk, vv = self.store[key]
-                        k[l, b, p] = kk
-                        v[l, b, p] = vv
+                        self._install_kv(pool, l, b, p, key)
                         pt[l, b, p] = gp
                         sm[l, b, p] = True
                         fstate["c"][l, b, p] = meta["c"]
@@ -463,6 +638,9 @@ class PagedController:
             self.thaw_lane(pool, fstate, b, gb,
                            keep_gids=(keep_gids or {}).get(b, ()),
                            reserve_slots=reserve_slots)
+        for b in lane_set:
+            gb = lane_ids[b] if lane_ids is not None else b
+            self.refresh_resident_quant(pool, b, gb)
         return pool, fstate
 
     # ---- entropy-guided recovery: early thaw of stashed pages ---------- #
@@ -495,13 +673,15 @@ class PagedController:
         gid = int(pt[l, b, best])
         key = (l, lane_id, gid)
         from repro.serving.faults import StashAllocError
+        kv_out, qm = self._store_payload(pool, l, b, best)
         try:
-            self._store_put(key, (pool["k"][l, b, best].copy(),
-                                  pool["v"][l, b, best].copy()))
+            self._store_put(key, kv_out)
         except StashAllocError:
             # cannot stash the victim -> nothing is evictable right now;
             # callers already treat None as "pool stays as-is, retry later"
             return None
+        if qm is not None:
+            self.quant_meta[key] = qm
         self.frozen_meta[key] = {
             "c": max(int(fstate["c"][l, b, best]), 1),
             "d": self.cfg.freeze.page_size,
@@ -509,6 +689,7 @@ class PagedController:
         }
         pt[l, b, best] = -1
         sm[l, b, best] = False
+        self._clear_quant_slot(pool, l, b, best)
         for f in ("c", "d", "frozen", "frozen_at"):
             fstate[f][l, b, best] = 0
         self.n_swap_out += 1
@@ -520,12 +701,13 @@ class PagedController:
         re-enters attention and relevance accounting immediately);
         how the K/V reaches the device — host-bus upload or device-side
         copy from a staging slot — is ``_kv_transfer``'s call; metadata
-        and the pulled host copy are identical either way.  Returns True
-        when the install was remap-only (staged)."""
+        and the pulled host copy are identical either way.  A quantized
+        page installs its narrow payload + scales verbatim (the kernel
+        dequants at attention time — no host round-trip, and a staged
+        remap stays remap-only).  Returns True when the install was
+        remap-only (staged)."""
         meta = self.frozen_meta.pop(key)
-        kk, vv = self.store[key]           # host copy stays (immutable)
-        pool["k"][l, b, p] = kk
-        pool["v"][l, b, p] = vv
+        self._install_kv(pool, l, b, p, key)   # host copy stays (immutable)
         pool["page_table"][l, b, p] = key[2]
         pool["slot_mask"][l, b, p] = True
         fstate["c"][l, b, p] = meta["c"]
@@ -610,9 +792,13 @@ class PagedController:
         tail position must be attendable and writable before decode
         resumes.  Resident-but-frozen copies are un-frozen in place;
         missing copies are thawed from the host store (evicting the
-        coldest page if the pool is full).  Returns False only if a layer
-        has neither a resident copy, a stashed copy, nor an evictable
-        victim — the engine then skips the rewind."""
+        coldest page if the pool is full).  A quantized copy is
+        dequantized host-side here — uniquely among the thaw paths —
+        because regeneration will *write into* this page (``write_tail``
+        appends full-precision values), which a 1-byte payload cannot
+        absorb.  Returns False only if a layer has neither a resident
+        copy, a stashed copy, nor an evictable victim — the engine then
+        skips the rewind."""
         pt = pool["page_table"]
         L = pt.shape[0]
         for l in range(L):
@@ -621,6 +807,7 @@ class PagedController:
                 p = int(where[0])
                 fstate["frozen"][l, b, p] = False
                 fstate["d"][l, b, p] = 0
+                self._dequantize_resident(pool, l, b, p)
                 continue
             key = (l, lane_id, gid)
             if key not in self.frozen_meta:
@@ -631,12 +818,40 @@ class PagedController:
                                     keep_gids=keep_gids, skip_gids=(gid,))
             if p is None:
                 return False
-            if self._install_page(pool, fstate, l, b, p, key):
+            remap = self._install_page(pool, fstate, l, b, p, key)
+            if remap and self.quant_meta.get(key) is not None:
+                # the staged device copy is the quantized payload, but the
+                # rewind needs the writable full-precision page: cancel
+                # the remap and let the push carry the dequantized bytes
+                self.pending_remaps = [
+                    r for r in self.pending_remaps
+                    if r[:2] != (l, lane_id) or r[3] != p]
+                remap = False
+                self.kv_dirty = True
+            if remap:
                 self.n_thaw_remap += 1
             else:
                 self.n_thaw_upload += 1
             self.n_thaw += 1
+            self._dequantize_resident(pool, l, b, p)
+        self.refresh_resident_quant(pool, b, lane_id)
         return True
+
+    def _dequantize_resident(self, pool: dict, l: int, b: int,
+                             p: int) -> None:
+        """Host-side dequant of one resident pool page (rewind tail-page
+        surgery): payload -> full precision in place, flag cleared."""
+        from repro.core import quant
+        pq = pool.get("page_quant")
+        if pq is None or not pq[l, b, p]:
+            return
+        sc = pool["kv_scales"]
+        pool["k"][l, b, p] = quant.dequantize_page(
+            np.asarray(pool["k"][l, b, p]), np.asarray(sc[l, b, p, 0]))
+        pool["v"][l, b, p] = quant.dequantize_page(
+            np.asarray(pool["v"][l, b, p]), np.asarray(sc[l, b, p, 1]))
+        self._clear_quant_slot(pool, l, b, p)
+        self.kv_dirty = True
 
     def force_free_slot(self, pool: dict, fstate: dict, b: int, lane_id: int,
                         keep_gids=()) -> bool:
@@ -702,28 +917,33 @@ class PagedController:
             self._store_pop(key)
             self.frozen_meta.pop(key, None)
             self.staged_keys.pop(key, None)
+        self.resident_quant.pop(lane, None)   # device-savings gauge entry
         return len(stale)
 
     # ---- whole-lane stash/restore (scheduler preemption) -------------- #
     def export_lane(self, lane: int) -> Dict[Tuple[int, int],
                                              Tuple[Tuple[np.ndarray,
                                                          np.ndarray],
-                                                   Optional[Dict[str, int]]]]:
+                                                   Optional[Dict[str, int]],
+                                                   Optional[Tuple]]]:
         """Move every host-store entry of one lane OUT of the controller:
-        returns ``{(layer, gid): ((k, v), frozen_meta-or-None)}`` and
-        forgets the keys.  This is the suspend path of lane preemption —
-        the pages must survive the lane being reassigned (``write_lane`` /
-        ``drop_lane`` would otherwise delete them with the old occupant's)
-        and come back under a possibly *different* lane id.  Entries
-        without ``frozen_meta`` are the immutable host copies of
-        device-resident pages; they transfer too, so a resumed lane's
-        swap-out path keeps its no-recopy invariant."""
+        returns ``{(layer, gid): ((k, v), frozen_meta-or-None,
+        quant_scales-or-None)}`` and forgets the keys.  This is the
+        suspend path of lane preemption — the pages must survive the lane
+        being reassigned (``write_lane`` / ``drop_lane`` would otherwise
+        delete them with the old occupant's) and come back under a
+        possibly *different* lane id.  Entries without ``frozen_meta``
+        are the immutable host copies of device-resident pages; they
+        transfer too, so a resumed lane's swap-out path keeps its
+        no-recopy invariant.  Quantized payloads travel AS-IS (narrow
+        bytes + scales) — a suspend/resume cycle never re-quantizes."""
         out = {}
         for key in [k for k in self.store if k[1] == lane]:
+            qm = self.quant_meta.get(key)
             kv = self._store_pop(key)
             meta = self.frozen_meta.pop(key, None)
             self.staged_keys.pop(key, None)
-            out[(key[0], key[2])] = (kv, meta)
+            out[(key[0], key[2])] = (kv, meta, qm)
             self.exported_bytes += kv[0].nbytes + kv[1].nbytes
         return out
 
@@ -732,7 +952,7 @@ class PagedController:
         destination — not necessarily the lane the pages left).  Freeze
         timers resume exactly where they stopped: a suspended lane has no
         page-boundary ticks, so no decrements were missed."""
-        for (layer, gid), (kv, meta) in pages.items():
+        for (layer, gid), (kv, meta, qm) in pages.items():
             key = (layer, lane, gid)
             # unguarded: the bytes already exist (moving back from the
             # snapshot's accounting) and a resume must never fail
@@ -741,6 +961,8 @@ class PagedController:
                 0, self.exported_bytes - (kv[0].nbytes + kv[1].nbytes))
             if meta is not None:
                 self.frozen_meta[key] = dict(meta)
+            if qm is not None:
+                self.quant_meta[key] = qm
 
     def drop_pages_from(self, lane: int, first_gid: int) -> int:
         """Forget the host copies of one lane's pages with global id >=
@@ -765,8 +987,17 @@ class PagedController:
         device-side fallback (the pool is full by definition), so this is
         the one unsurvivable stash fault — callers admit the request only
         once the stash can hold its overflow."""
+        from repro.core import quant
         key = (layer, lane, global_page)
-        self._store_put(key, (k.copy(), v.copy()))
+        mode = self.quant_mode
+        if mode:
+            pk, sk = quant.quantize_page(np.asarray(k), mode)
+            pv, sv = quant.quantize_page(np.asarray(v), mode)
+            self._store_put(key, (pk, pv))
+            self.quant_meta[key] = (sk, sv)
+            self.n_quantized_pages += 1
+        else:
+            self._store_put(key, (k.copy(), v.copy()))
         self.frozen_meta[key] = {"c": 1, "d": int(d), "frozen_at": 0}
         self.n_swap_out += 1
 
@@ -795,6 +1026,11 @@ class PagedController:
         sm[:, lane, :] = False
         k[:, lane] = 0
         v[:, lane] = 0
+        if "page_quant" in pool:          # fresh occupant: all pages hot
+            pool["page_quant"][:, lane] = 0
+            pool["kv_scales"][:, lane] = 1.0
+        self.resident_quant.pop(
+            lane if store_lane is None else store_lane, None)
         for f in ("c", "d", "frozen", "frozen_at"):
             fstate[f][:, lane] = 0
         slots = np.zeros((L, n), np.int32)

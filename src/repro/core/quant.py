@@ -1,0 +1,136 @@
+"""Per-page KV quantization for frozen / host-stashed pages.
+
+The soft-freeze invariant — a frozen page receives no KV writes — makes
+frozen pages safe lossy-compression victims: their bytes are immutable
+until a thaw/rewind makes them hot again, so a one-shot symmetric
+quantization at freeze time never has to track in-place updates.  This
+module owns the numeric recipe; `core.paging.PagedController` /
+`core.cache.HostOffloadController` decide *when* a page is quantized and
+`kernels/paged_decode_attn.py` dequantizes on the fly at attention time.
+
+Layout (one page of K or V has shape ``(page, KVH, hd)``):
+
+* **scales** — per-page, per-kv-head symmetric scales, shape ``(KVH,)``
+  float32: ``scale_h = amax(|page[:, h, :]|) / qmax``.  Per-head because
+  K/V magnitudes vary far more across heads than across the positions of
+  one page; per-page because pages are the freeze/stash/thaw granule.
+  An all-zero head gets ``scale = 1.0`` (payload zeros, dequant exact).
+* **int8 payload** — ``clip(rint(x / scale), -127, 127)``, 1 byte/elem,
+  ``qmax = 127``.  Round-trip error is bounded elementwise by
+  ``scale / 2`` (one half quantization step).
+* **fp8 payload** (``float8_e4m3fn`` via ``ml_dtypes``, gated — never a
+  new dependency; jax already ships ml_dtypes) — ``x / scale`` cast to
+  e4m3, ``qmax = 448`` (the e4m3 finite max, so the head's amax lands on
+  a representable value).  Relative error ≤ 2**-4 (half ulp of a 3-bit
+  mantissa) plus a ``scale * 2**-10`` subnormal floor near zero.
+
+Device pools keep ONE dtype: a quantized page stored in the pool holds
+the *integer-valued payload cast into the pool dtype* (int8 values are
+exact in bf16/f32; e4m3 values are exact in bf16 and f32), with the
+page's scales carried next to the page table.  The kernel multiplies by
+``scale`` only where the per-page quant flag is set — hot pages multiply
+by nothing at all, which is what keeps ``kv_quant="none"`` bit-identical
+to the unquantized engine.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+try:  # ml_dtypes ships with jax; gated anyway per repo dependency policy
+    from ml_dtypes import float8_e4m3fn as _FP8
+except ImportError:                              # pragma: no cover
+    _FP8 = None
+
+# per-page quant flag values, as stored next to the page table
+QUANT_NONE, QUANT_INT8, QUANT_FP8 = 0, 1, 2
+MODES = {"none": QUANT_NONE, "int8": QUANT_INT8, "fp8": QUANT_FP8}
+_QMAX = {QUANT_INT8: 127.0, QUANT_FP8: 448.0}
+
+
+def fp8_supported() -> bool:
+    return _FP8 is not None
+
+
+def resolve_mode(kv_quant: str) -> int:
+    """Map a ``--kv-quant`` string to its flag value, validating support."""
+    if kv_quant not in MODES:
+        raise ValueError(f"kv_quant must be one of {sorted(MODES)}, "
+                         f"got {kv_quant!r}")
+    if kv_quant == "fp8" and not fp8_supported():
+        raise ValueError("kv_quant='fp8' needs ml_dtypes.float8_e4m3fn, "
+                         "which this environment does not provide")
+    return MODES[kv_quant]
+
+
+def page_scales(page: np.ndarray, mode: int) -> np.ndarray:
+    """Per-kv-head symmetric scales for one ``(page, KVH, hd)`` page."""
+    amax = np.max(np.abs(page.astype(np.float32)), axis=(0, 2))
+    scales = amax / _QMAX[mode]
+    return np.where(amax > 0, scales, 1.0).astype(np.float32)
+
+
+def quantize_page(page: np.ndarray, mode: int,
+                  scales: Optional[np.ndarray] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantize one page to its 1-byte payload.
+
+    Returns ``(payload, scales)``; payload dtype is int8 (mode int8) or
+    float8_e4m3fn (mode fp8) — 1 byte/elem either way, which is what the
+    host-stash byte gauges count.  Pass precomputed ``scales`` to reuse a
+    page's stored scales instead of re-deriving them from the data; on
+    values already on that grid (a dequantized payload) the result is
+    byte-identical to the original payload, so repeated cycles never
+    compound error.  Note the input is always REAL page values — to
+    narrow an integer-valued payload held in a pool dtype back to bytes,
+    use ``narrow_payload`` (dividing a payload by its scales here would
+    silently re-quantize it).
+    """
+    if scales is None:
+        scales = page_scales(page, mode)
+    x = page.astype(np.float32) / scales[None, :, None]
+    if mode == QUANT_INT8:
+        payload = np.clip(np.rint(x), -127, 127).astype(np.int8)
+    elif mode == QUANT_FP8:
+        if _FP8 is None:
+            raise RuntimeError("fp8 payload requested without ml_dtypes")
+        payload = x.astype(_FP8)
+    else:
+        raise ValueError(f"not a quantized mode: {mode}")
+    return payload, scales
+
+
+def narrow_payload(page: np.ndarray, mode: int) -> np.ndarray:
+    """Cast an already-quantized pool-dtype page back to its 1-byte store
+    dtype.  The values are already on the quantization grid (the pool holds
+    the integer-valued payload — see module docstring), so this is a pure
+    width change: no rounding, no re-derived scales, and in particular no
+    double quantization (the property tests pin this)."""
+    if mode == QUANT_INT8:
+        return np.asarray(page, np.float32).astype(np.int8)
+    if mode == QUANT_FP8:
+        if _FP8 is None:
+            raise RuntimeError("fp8 payload requested without ml_dtypes")
+        return np.asarray(page, np.float32).astype(_FP8)
+    raise ValueError(f"not a quantized mode: {mode}")
+
+
+def dequantize_page(payload: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Exact inverse of the payload representation: f32 page values."""
+    return payload.astype(np.float32) * scales[None, :, None].astype(
+        np.float32)
+
+
+def roundtrip_bound(page: np.ndarray, mode: int,
+                    scales: Optional[np.ndarray] = None) -> np.ndarray:
+    """Elementwise error bound ``|x - dq(q(x))|`` must satisfy — the
+    documented envelope the property tests assert (docs/quantization.md).
+    """
+    if scales is None:
+        scales = page_scales(page, mode)
+    s = scales[None, :, None].astype(np.float32)
+    if mode == QUANT_INT8:
+        return np.broadcast_to(s / 2.0, page.shape)
+    # e4m3: half-ulp relative error + a subnormal absolute floor
+    return np.abs(page.astype(np.float32)) * 2.0**-4 + s * 2.0**-10

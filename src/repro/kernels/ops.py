@@ -34,7 +34,8 @@ def masked_decode_attention(q, k, v, active_mask, force_kernel: bool = False):
 
 @functools.partial(jax.jit, static_argnames=("force_kernel",))
 def paged_decode_attention(q, k_pages, v_pages, slot_mask, page_table=None,
-                           page_visible=None, force_kernel: bool = False):
+                           page_visible=None, page_quant=None, kv_scales=None,
+                           force_kernel: bool = False):
     """(out (B,H,hd), page_relevance (B,P)) — the PagedContinuousEngine
     decode hot path.  `page_table` (B,P) lets the kernel skip unmapped
     slots before reading their mask; None derives it from slot_mask.
@@ -51,16 +52,25 @@ def paged_decode_attention(q, k_pages, v_pages, slot_mask, page_table=None,
     softmax and report relevance 0 regardless of their K/V contents or
     stale `slot_mask` bits (tests/test_async_pipeline.py::
     TestStagingSlotVisibility pins this for both the reference and the
-    Pallas kernel)."""
+    Pallas kernel).
+
+    `page_quant` (B,P) i32 / `kv_scales` (B,P,2,KVH) f32 are the per-page
+    quantization slots (core/quant.py): pages whose flag is non-zero hold
+    an integer-valued payload in the pool dtype and are dequantized in
+    the kernel (K by scales[...,0,:], V by scales[...,1,:]).  None (the
+    default) is bit-identical to the unquantized path."""
     if _on_tpu():
         return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
-                                             page_table, page_visible)
+                                             page_table, page_visible,
+                                             page_quant, kv_scales)
     if force_kernel:
         return paged_decode_attention_kernel(q, k_pages, v_pages, slot_mask,
                                              page_table, page_visible,
+                                             page_quant, kv_scales,
                                              interpret=True)
     return ref.paged_decode_attention_ref(q, k_pages, v_pages, slot_mask,
-                                          page_table, page_visible)
+                                          page_table, page_visible,
+                                          page_quant, kv_scales)
 
 
 def freeze_state_update(state: FreezeState, relevance, pos, step,

@@ -45,7 +45,8 @@ NEG_INF = -1e30
 
 def _kernel(pt_ref,                       # SMEM scalar prefetch: (B, P) i32
             vis_ref,                      # SMEM scalar prefetch: (B, P) i32
-            q_ref, k_ref, v_ref, mask_ref,
+            qt_ref,                       # SMEM scalar prefetch: (B, P) i32
+            q_ref, k_ref, v_ref, sc_ref, mask_ref,
             o_ref, rel_ref,
             m_ref, l_ref, acc_ref,
             *, kv_heads: int, scale: float):
@@ -72,6 +73,16 @@ def _kernel(pt_ref,                       # SMEM scalar prefetch: (B, P) i32
     def _page():
         k = k_ref[0, 0].astype(jnp.float32)        # (page, KVH, hd)
         v = v_ref[0, 0].astype(jnp.float32)
+        # in-kernel dequant of quantized (frozen/thawed) pages: the pool
+        # holds the integer-valued payload in the pool dtype, the per-page
+        # per-kv-head scales ride next to the page table.  Hot pages carry
+        # quant flag 0 and multiply by exactly 1.0 — bitwise identity, so
+        # kv_quant="none" stays bit-identical to the unquantized kernel.
+        quant = qt_ref[b, blk] != 0
+        sk = jnp.where(quant, sc_ref[0, 0, 0], 1.0)            # (KVH,)
+        sv = jnp.where(quant, sc_ref[0, 0, 1], 1.0)
+        k = k * sk[None, :, None]
+        v = v * sv[None, :, None]
         qg = q.reshape(kv_heads, G, hd)
         raw = jnp.einsum("kgh,skh->kgs", qg, k)
         tok_rel = jnp.mean(jnp.abs(raw), axis=(0, 1))          # (page,)
@@ -110,6 +121,8 @@ def paged_decode_attention_kernel(
     slot_mask: jnp.ndarray,   # (B, P, page) bool
     page_table: Optional[jnp.ndarray] = None,   # (B, P) i32; < 0 = unmapped
     page_visible: Optional[jnp.ndarray] = None, # (B, P) bool; False = frozen
+    page_quant: Optional[jnp.ndarray] = None,   # (B, P) i32; != 0 = quantized
+    kv_scales: Optional[jnp.ndarray] = None,    # (B, P, 2, KVH) f32
     *,
     interpret: bool = False,
 ):
@@ -118,6 +131,13 @@ def paged_decode_attention_kernel(
     ``page_visible`` is the recovery ladder's thaw-aware mask (``~frozen``
     after in-step un-freezing): False pages skip their MXU work exactly
     like unmapped slots.  None means all mapped pages are visible.
+
+    ``page_quant`` / ``kv_scales`` are the per-page quantization slots
+    (core/quant.py): where the flag is non-zero the pool holds an
+    integer-valued payload and the kernel multiplies K by
+    ``kv_scales[b, p, 0]`` and V by ``kv_scales[b, p, 1]`` (per kv-head)
+    after the load.  None (or an all-zero flag array) multiplies by 1.0
+    exactly — bit-identical to the unquantized kernel.
     """
     B, H, hd = q.shape
     _, P, page, KVH, _ = k_pages.shape
@@ -127,15 +147,20 @@ def paged_decode_attention_kernel(
         page_table = jnp.where(jnp.any(slot_mask, -1), 0, -1).astype(jnp.int32)
     if page_visible is None:
         page_visible = jnp.ones((B, P), jnp.int32)
+    if page_quant is None:
+        page_quant = jnp.zeros((B, P), jnp.int32)
+    if kv_scales is None:
+        kv_scales = jnp.ones((B, P, 2, KVH), jnp.float32)
 
     # index maps receive the scalar-prefetch refs as trailing arguments
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, H, hd), lambda b, p, *_: (b, 0, 0)),
             pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p, *_: (b, p, 0, 0, 0)),
             pl.BlockSpec((1, 1, page, KVH, hd), lambda b, p, *_: (b, p, 0, 0, 0)),
+            pl.BlockSpec((1, 1, 2, KVH), lambda b, p, *_: (b, p, 0, 0)),
             pl.BlockSpec((1, 1, page), lambda b, p, *_: (b, p, 0)),
         ],
         out_specs=[
@@ -158,5 +183,7 @@ def paged_decode_attention_kernel(
         interpret=interpret,
     )(jnp.asarray(page_table, jnp.int32),
       jnp.asarray(page_visible, jnp.int32),
-      q, k_pages, v_pages, slot_mask.astype(jnp.int8))
+      jnp.asarray(page_quant, jnp.int32),
+      q, k_pages, v_pages, jnp.asarray(kv_scales, jnp.float32),
+      slot_mask.astype(jnp.int8))
     return out, rel

@@ -22,15 +22,18 @@ def freeze_decode_attention_ref(q, k, v, active_mask):
 
 
 def paged_decode_attention_ref(q, k_pages, v_pages, slot_mask,
-                               page_table=None, page_visible=None):
+                               page_table=None, page_visible=None,
+                               page_quant=None, kv_scales=None):
     """Oracle for kernels.paged_decode_attn — (out, page_relevance).
     Unmapped page-table slots (< 0) and invisible pages (page_visible
     False — frozen and not thawed by the recovery ladder) are excluded
     like empty pages.  Exclusion must hold regardless of the slots' K/V
     payload: the async pipeline's staging slots carry speculatively
-    uploaded pages while still unmapped (see kernels/ops.py)."""
+    uploaded pages while still unmapped (see kernels/ops.py).
+    ``page_quant`` / ``kv_scales`` dequantize flagged pages exactly like
+    the kernel (see core/quant.py); None is the unquantized path."""
     return _paged_ref(q, k_pages, v_pages, slot_mask, page_table,
-                      page_visible)
+                      page_visible, page_quant, kv_scales)
 
 
 def relevance_freeze_ref(state: FreezeState, relevance, pos, step,

@@ -104,6 +104,17 @@ def main():
                          "chaos hardening; docs/robustness.md)")
     ap.add_argument("--chaos-rate", type=float, default=0.05,
                     help="per-site fault rate for --chaos-seed")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=("none", "int8", "fp8"),
+                    help="lossy per-page quantization of frozen/stashed KV "
+                         "pages (core/quant.py): on --paged the device "
+                         "pool's frozen pages and the host stash store a "
+                         "1-byte payload with per-page per-kv-head scales "
+                         "(dequantized in-kernel at attention time); on "
+                         "the dense path the host stash alone is "
+                         "quantized.  'fp8' needs ml_dtypes "
+                         "float8_e4m3fn.  'none' is bit-identical to the "
+                         "unquantized engine (docs/quantization.md)")
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
@@ -142,7 +153,8 @@ def main():
                                    ("pull", "push", "ring", "stage")})
     budget = int(args.stash_budget_mb * 2**20) \
         if args.stash_budget_mb is not None else None
-    robust_kw = dict(chaos=chaos, stash_budget_bytes=budget)
+    robust_kw = dict(chaos=chaos, stash_budget_bytes=budget,
+                     kv_quant=args.kv_quant)
     if args.static:
         eng = Engine(cfg, params, max_seq=args.max_seq,
                      enable_freeze=not args.no_freeze)
@@ -201,6 +213,11 @@ def main():
             if eng.ctl.n_thaw:
                 print(f"thaw installs: {eng.ctl.n_thaw_remap} remap-only "
                       f"(staged) / {eng.ctl.n_thaw_upload} uploaded")
+            if args.kv_quant != "none":
+                print(f"kv-quant({args.kv_quant}): "
+                      f"{eng.ctl.n_quantized_pages} pages quantized  "
+                      f"packed device savings now "
+                      f"{eng.ctl.device_savings_bytes} bytes")
         s = eng.stats
         print(f"dma: host-blocked {100 * s.host_blocked_fraction:.0f}% of "
               f"steps ({s.blocked_steps}/{s.steps}; "

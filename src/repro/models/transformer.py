@@ -577,6 +577,13 @@ class PagedDecodeState(NamedTuple):
     mamba: Dict[str, jnp.ndarray]
     rwkv: Dict[str, jnp.ndarray]
     recovery: RecoveryState
+    # per-page quantization slots (core/quant.py): flag != 0 means the pool
+    # holds an integer-valued 1-byte payload cast into the pool dtype, and
+    # attention dequantizes in-kernel by kv_scales (axis -2: 0 = K, 1 = V).
+    # Host-mutated only (freeze-time quantize, thaw/rewind dequantize) —
+    # the jitted step reads them and never writes them back.
+    page_quant: jnp.ndarray   # (L_attn, B, P) i32
+    kv_scales: jnp.ndarray    # (L_attn, B, P, 2, KVH) f32
 
 
 def init_paged_decode_state(cfg: ModelConfig, batch: int,
@@ -621,6 +628,8 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int,
         mamba=mamba,
         rwkv=rwkv,
         recovery=init_recovery_state(batch),
+        page_quant=jnp.zeros((la, batch, P), jnp.int32),
+        kv_scales=jnp.ones((la, batch, P, 2, kvh), jnp.float32),
     )
 
 
@@ -645,6 +654,8 @@ def reset_paged_lane(state: PagedDecodeState, lane) -> PagedDecodeState:
             frozen_at=jnp.where(sel, -1, state.freeze.frozen_at)),
         recovery=RecoveryState(*(jnp.where(sel_b, z.astype(a.dtype), a)
                                  for a, z in zip(state.recovery, rec0))),
+        page_quant=jnp.where(sel, 0, state.page_quant),
+        kv_scales=jnp.where(sel[..., None, None], 1.0, state.kv_scales),
     )
 
 
@@ -688,7 +699,14 @@ def rewind_paged_lane(state: PagedDecodeState, lane, new_pos,
         frozen=fz.frozen & ~(dead | tail_hit),
         frozen_at=jnp.where(dead | tail_hit, -1, fz.frozen_at),
     )
-    return state._replace(page_table=pt_new, slot_mask=slot_mask, freeze=fz)
+    # dead pages lose their quant flags/scales with their mapping; the
+    # surviving tail page's flag is left alone — the host dequantizes it
+    # (``ensure_resident``) and pushes the cleared flag before this jitted
+    # rewind runs, and boundary-landing rewinds never touch the tail.
+    return state._replace(
+        page_table=pt_new, slot_mask=slot_mask, freeze=fz,
+        page_quant=jnp.where(dead, 0, state.page_quant),
+        kv_scales=jnp.where(dead[..., None, None], 1.0, state.kv_scales))
 
 
 def lm_decode_step_paged(
@@ -744,7 +762,9 @@ def lm_decode_step_paged(
                   page_table=rs(state.page_table),
                   slot_mask=rs(state.slot_mask),
                   tail_slot=tail_slot.reshape(n, ia_n, B),
-                  freeze=PageFreezeState(*(rs(a) for a in state.freeze)))
+                  freeze=PageFreezeState(*(rs(a) for a in state.freeze)),
+                  page_quant=rs(state.page_quant),
+                  kv_scales=rs(state.kv_scales))
     if im_n:
         xs["mamba"] = {kk: vv.reshape((n, im_n) + vv.shape[1:])
                        for kk, vv in state.mamba.items()}
@@ -785,7 +805,8 @@ def lm_decode_step_paged(
                 # un-froze last step re-enters attention AND relevance
                 # accounting here.
                 o, prel = OPS.paged_decode_attention(
-                    q, kp, vp, sm, xs_u["page_table"][ia], ~fz.frozen)
+                    q, kp, vp, sm, xs_u["page_table"][ia], ~fz.frozen,
+                    xs_u["page_quant"][ia], xs_u["kv_scales"][ia])
                 if cfg.decode_act_gather:
                     o = L.dag(o, cfg, ".m.")
                 x = x + L.dag(L.attention_out(lp["attn"], o), cfg, ".f") \

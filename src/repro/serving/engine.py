@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FreezeConfig, ModelConfig
+from repro.core import quant
 from repro.core.cache import HostOffloadController, KVCache
 from repro.core.paging import PagedController, PageFreezeState
 from repro.core.recovery import RecoveryState
@@ -822,7 +823,8 @@ class ContinuousEngine(_LaneEngineBase):
                  chaos: Optional[ChaosConfig] = None,
                  stash_budget_bytes: Optional[int] = None,
                  ladder: Optional[LadderConfig] = None,
-                 quarantine_window: int = 64):
+                 quarantine_window: int = 64,
+                 kv_quant: str = "none"):
         super().__init__(cfg, params, max_seq, n_lanes,
                          freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
                          pad_id=pad_id, seed=seed,
@@ -830,6 +832,8 @@ class ContinuousEngine(_LaneEngineBase):
                          async_pipeline=async_pipeline,
                          chaos=chaos, stash_budget_bytes=stash_budget_bytes,
                          ladder=ladder, quarantine_window=quarantine_window)
+        quant.resolve_mode(kv_quant)
+        self.kv_quant = kv_quant
         self.max_rewinds = max_rewinds
         self.rewind_cooldown = rewind_cooldown
         # legacy knob, no longer a wall-clock cadence: the freeze mask now
@@ -852,6 +856,7 @@ class ContinuousEngine(_LaneEngineBase):
             if (offload and enable_freeze) else None
         if self.offloader is not None:
             self.offloader.stash_budget_bytes = stash_budget_bytes
+            self.offloader.kv_quant = kv_quant
 
     def _stash_bytes(self) -> int:
         return self.offloader.stash_bytes if self.offloader else 0
@@ -1287,6 +1292,7 @@ class PagedContinuousEngine(_LaneEngineBase):
                  stash_budget_bytes: Optional[int] = None,
                  ladder: Optional[LadderConfig] = None,
                  quarantine_window: int = 64,
+                 kv_quant: str = "none",
                  debug_invariants: bool = False):
         super().__init__(cfg, params, max_seq, n_lanes,
                          freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
@@ -1295,6 +1301,8 @@ class PagedContinuousEngine(_LaneEngineBase):
                          async_pipeline=async_pipeline,
                          chaos=chaos, stash_budget_bytes=stash_budget_bytes,
                          ladder=ladder, quarantine_window=quarantine_window)
+        quant.resolve_mode(kv_quant)          # fail fast on bad/unsupported
+        self.kv_quant = kv_quant
         self.debug_invariants = debug_invariants
         assert max_active_pages >= 3, "pool needs tail + swap headroom"
         assert prefill_chunk >= 1
@@ -1388,6 +1396,7 @@ class PagedContinuousEngine(_LaneEngineBase):
             "paged continuous batching requires an attention-only stack"
         self.ctl = PagedController(cfg=cfg, batch=n_lanes,
                                    max_active_pages=max_active_pages)
+        self.ctl.kv_quant = kv_quant
         self.ctl.stash_budget_bytes = stash_budget_bytes
         if self.injector is not None:
             self.ep_stash = chaos.build_endpoint(
@@ -1406,8 +1415,14 @@ class PagedContinuousEngine(_LaneEngineBase):
     @property
     def kv_device_bytes(self) -> int:
         """Live device KV footprint — O(n_lanes * P * page), independent of
-        context length (the benchmark's peak-memory metric)."""
-        return self.state.k.nbytes + self.state.v.nbytes
+        context length (the benchmark's peak-memory metric).  Quantized
+        resident pages count at their packed width (1 byte/elem): the CPU
+        pool stores the integer-valued payload widened into the pool dtype
+        (the kernel dequantizes in place), but on a real TPU the frozen
+        region is physically int8/fp8 — the gauge models that layout, so
+        the quantized arm's measured reduction is the deployable one."""
+        return (self.state.k.nbytes + self.state.v.nbytes
+                - self.ctl.device_savings_bytes)
 
     def _offloaded_tokens_lane(self, lane: int) -> int:
         n = sum(1 for key in self.ctl.frozen_meta if key[1] == lane)
@@ -1433,9 +1448,15 @@ class PagedContinuousEngine(_LaneEngineBase):
     # when the controller actually wrote some (kv_dirty) — a tick that
     # only flipped metadata (page-table remaps, freeze counters) moves a
     # few KB, not the pool.
-    _POOL_FIELDS = ("k", "v", "page_table", "slot_mask")
+    # page_quant / kv_scales travel with BOTH field sets: a metadata-only
+    # push (staged-remap tick) must still land the target slots' quant
+    # flags + scales — the remap copies the quantized payload device-side,
+    # so only the metadata crosses the bus
+    _POOL_FIELDS = ("k", "v", "page_table", "slot_mask",
+                    "page_quant", "kv_scales")
     _FZ_FIELDS = ("c", "d", "frozen", "frozen_at")
-    _META_FIELDS = ("page_table", "slot_mask") + _FZ_FIELDS
+    _META_FIELDS = ("page_table", "slot_mask",
+                    "page_quant", "kv_scales") + _FZ_FIELDS
 
     def _state_arrs(self, fields=None):
         st = self.state
@@ -1447,6 +1468,22 @@ class PagedContinuousEngine(_LaneEngineBase):
         idx = np.full(self.n_lanes, lanes[0], np.int32)
         idx[:len(lanes)] = lanes
         return idx
+
+    @staticmethod
+    def _quant_packing_savings(pool: dict) -> int:
+        """Bytes a real TPU transfer would NOT move for this pool slice:
+        quantized mapped pages cross the bus at 1 byte/elem (K and V), not
+        at the pool dtype's width.  The CPU reference path moves the
+        widened payload, so the gauges subtract the packing delta to model
+        the deployable transfer size (docs/quantization.md)."""
+        pq = pool.get("page_quant")
+        if pq is None:
+            return 0
+        n = int(((np.asarray(pq) != 0)
+                 & (np.asarray(pool["page_table"]) >= 0)).sum())
+        k = pool["k"]
+        page_elems = int(np.prod(k.shape[3:]))
+        return n * page_elems * (k.dtype.itemsize - 1) * 2
 
     def _pull_lanes(self, lanes: List[int]) -> Tuple[dict, dict]:
         m = len(lanes)
@@ -1469,7 +1506,8 @@ class PagedContinuousEngine(_LaneEngineBase):
         out = {}
         for name, arr in zip(names, host):
             out[name] = self.staging.put(f"pull_{name}_{m}", arr[:, :m])
-        self.stats.note_blocking(sum(a.nbytes for a in out.values()),
+        self.stats.note_blocking(sum(a.nbytes for a in out.values())
+                                 - self._quant_packing_savings(out),
                                  d2h=True, seconds=dt)
         return ({f: out[f] for f in self._POOL_FIELDS},
                 {f: out[f] for f in self._FZ_FIELDS})
@@ -1510,7 +1548,10 @@ class PagedContinuousEngine(_LaneEngineBase):
                           if f in upd})
         # the K/V of a metadata-only push never crossed the bus: remapped
         # staging slots already hold their page data on device
-        self.stats.note_blocking(nbytes, d2h=False) if kv else \
+        if kv:
+            nbytes -= self._quant_packing_savings(pool)
+            self.stats.note_blocking(nbytes, d2h=False)
+        else:
             self.stats.note_async(nbytes, d2h=False)
 
     # ---------------- admission (chunked) ---------------- #
@@ -1700,7 +1741,9 @@ class PagedContinuousEngine(_LaneEngineBase):
         pool = {"k": np.zeros((L, 1, P_total, page, kvh, hd), dt),
                 "v": np.zeros((L, 1, P_total, page, kvh, hd), dt),
                 "page_table": np.full((L, 1, P_total), -1, np.int32),
-                "slot_mask": np.zeros((L, 1, P_total, page), bool)}
+                "slot_mask": np.zeros((L, 1, P_total, page), bool),
+                "page_quant": np.zeros((L, 1, P_total), np.int32),
+                "kv_scales": np.ones((L, 1, P_total, 2, kvh), np.float32)}
         fstate = {"c": np.zeros((L, 1, P_total), np.int32),
                   "d": np.zeros((L, 1, P_total), np.int32),
                   "frozen": np.zeros((L, 1, P_total), bool),
@@ -2045,6 +2088,7 @@ class PagedContinuousEngine(_LaneEngineBase):
             v_buf = self.staging.buf("stage_v",
                                      (self.L_attn, page, kvh, hd),
                                      np.dtype(self.state.v.dtype))
+            sent = 0
             for l in range(self.L_attn):
                 key = (l, lane, gid)
                 if key not in self.ctl.frozen_meta:
@@ -2053,9 +2097,14 @@ class PagedContinuousEngine(_LaneEngineBase):
                          if s not in occupied.get(l, ())]
                 if not avail:
                     continue
+                # a quantized store entry is a 1-byte payload; assigning it
+                # into the pool-dtype buffer widens the integer values
+                # exactly (the kernel dequantizes once the page is mapped,
+                # scales riding the metadata push)
                 kk, vv = self.ctl.store[key]
                 k_buf[l] = kk
                 v_buf[l] = vv
+                sent += kk.nbytes + vv.nbytes
                 slots[l] = avail[0]
                 valid[l] = True
             if not valid.any():
@@ -2079,9 +2128,9 @@ class PagedContinuousEngine(_LaneEngineBase):
             for l in range(self.L_attn):
                 if valid[l]:
                     self.ctl.staged_keys[(l, lane, gid)] = int(slots[l])
-            self.stats.note_async(
-                int(valid.sum()) * (k_buf[0].nbytes + v_buf[0].nbytes),
-                d2h=False)
+            # count what the host store actually holds — a quantized page
+            # crosses the bus packed (1 byte/elem), not pool-width
+            self.stats.note_async(sent, d2h=False)
             return True
         return False
 
@@ -2093,8 +2142,18 @@ class PagedContinuousEngine(_LaneEngineBase):
         next page-boundary tick) and their stale host copies are dropped —
         the replayed pages must never collide with a stashed copy of the
         rewound generation.  Returns False (rewind skipped, nothing
-        mutated) if the tail page cannot be made resident."""
+        mutated) if the tail page cannot be made resident.
+
+        The in-flight fetch (async pipeline) is consumed first: its commit
+        carries a token for the PRE-rewind position, and applying it after
+        the surgery below would clobber the rewound clocks and replay
+        token.  Draining makes the host bookkeeping current at the
+        injection point in both pipeline modes (re-entrant calls from
+        ``_commit_step``'s RR path see an already-empty ring — no-op)."""
+        self._retired_backlog += self._drain_ring()
         l = self.lanes[lane]
+        if l.request is None:        # the drained commit retired this lane
+            return False
         nback = self.fcfg.rewalk_tokens
         new_pos = int(self.pos[lane]) - nback
         if new_pos <= 0:
@@ -2234,6 +2293,9 @@ class PagedContinuousEngine(_LaneEngineBase):
         # pushed page table expects to find stashed
         self.ctl.import_lane(lane, snap.stashed)
         self._push_lanes(snap.pool, snap.fstate, [lane])
+        # the snapshot's pool slice may carry quantized resident pages —
+        # rebuild the destination lane's packed-residency ledger
+        self.ctl.refresh_resident_quant(snap.pool, 0, lane)
         for lyr in range(self.L_attn):
             self.ctl.stage_slots[(lyr, lane)] = \
                 list(range(self.P, self.P_total))

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import FreezeConfig
+from repro.core import quant
 from repro.core.freeze import init_freeze_state
 from repro.kernels import ref
 from repro.kernels.freeze_decode_attn import freeze_decode_attention
@@ -14,6 +15,36 @@ from repro.kernels.relevance_freeze import relevance_freeze_update
 
 TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
         jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+# Documented numerics envelope for quantized paged attention vs the
+# full-precision oracle (docs/quantization.md).  Per-element K/V error is
+# bounded by core.quant.roundtrip_bound (int8: scale/2 with scale =
+# max|x|/127; fp8 e4m3: ~6% relative); softmax mixing keeps the output
+# error the same order as the payload error, and these bounds hold with
+# >2x margin across the sweep below.  bf16 pools are covered too: int8
+# payloads (ints <= 127) and fp8 payloads (3 mantissa bits) are exact in
+# bf16, so the envelope — which dominates bf16's own 2e-2 — is unchanged.
+QUANT_TOLS = {"int8": dict(rtol=5e-2, atol=5e-2),
+              "fp8": dict(rtol=2e-1, atol=1e-1)}
+
+
+def _quantize_pool(pool, flags, mode):
+    """Quantize the flagged pages of a (B, P, page, KVH, hd) pool the way
+    the controller stores them: integer-valued payload cast back into the
+    pool dtype, per-page per-kv-head scales ((B, P, KVH) f32, 1.0 where
+    unflagged)."""
+    arr = np.asarray(pool, np.float32)
+    B, P, _, KVH, _ = arr.shape
+    scales = np.ones((B, P, KVH), np.float32)
+    out = arr.copy()
+    for b in range(B):
+        for p in range(P):
+            if not flags[b, p]:
+                continue
+            payload, sc = quant.quantize_page(arr[b, p], mode)
+            out[b, p] = np.asarray(payload, np.float32)
+            scales[b, p] = sc
+    return jnp.asarray(out, pool.dtype), scales
 
 
 @pytest.mark.parametrize("B,S,H,KVH,hd,blk", [
@@ -157,6 +188,117 @@ def test_paged_decode_attn_page_visible(B, P, page, H, KVH, hd, dtype):
                                                  interpret=True)
     np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_n))
     np.testing.assert_array_equal(np.asarray(rel_t), np.asarray(rel_n))
+
+
+@pytest.mark.parametrize("B,P,page,H,KVH,hd", [
+    (1, 4, 128, 8, 8, 64),
+    (2, 8, 64, 8, 2, 64),     # GQA
+    (2, 6, 128, 4, 1, 128),   # MQA
+    (3, 5, 32, 16, 8, 128),   # non-pow2 batch/pool, small pages
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode_name", ["int8", "fp8"])
+def test_paged_decode_attn_quant_sweep(B, P, page, H, KVH, hd, dtype,
+                                       mode_name):
+    """Quantized paged attention with a MIXED pool per lane — hot
+    (full-precision), frozen-invisible, and quantized pages coexisting —
+    checked two ways: kernel vs the dequantizing reference at baseline
+    tightness (same math), and kernel vs the FULL-PRECISION f32 oracle
+    within the documented QUANT_TOLS envelope (the lossy bound this PR
+    ships under)."""
+    if mode_name == "fp8" and not quant.fp8_supported():
+        pytest.skip("ml_dtypes float8_e4m3fn unavailable")
+    mode = quant.MODES[mode_name]
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (B, P, page, KVH, hd), dtype)
+    vp = jax.random.normal(ks[2], (B, P, page, KVH, hd), dtype)
+    sm = jax.random.bernoulli(ks[3], 0.7, (B, P, page)).at[:, 0, 0].set(True)
+    pt = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    # page states: slot 1 frozen-invisible everywhere, odd slots quantized
+    vis = jnp.ones((B, P), bool).at[:, 1].set(False)
+    flags = np.zeros((B, P), bool)
+    flags[:, 1::2] = True            # includes the invisible slot 1
+    kq, ksc = _quantize_pool(kp, flags, mode)
+    vq, vsc = _quantize_pool(vp, flags, mode)
+    pq = jnp.asarray(flags.astype(np.int32))
+    sc = jnp.asarray(np.stack([ksc, vsc], axis=2))      # (B, P, 2, KVH)
+    out_k, rel_k = paged_decode_attention_kernel(q, kq, vq, sm, pt, vis,
+                                                 pq, sc, interpret=True)
+    out_r, rel_r = ref.paged_decode_attention_ref(q, kq, vq, sm, pt, vis,
+                                                  pq, sc)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), **TOLS[dtype])
+    np.testing.assert_allclose(np.asarray(rel_k), np.asarray(rel_r),
+                               **TOLS[dtype])
+    np.testing.assert_array_equal(np.asarray(rel_k[:, 1]), 0.0)
+    # lossy envelope vs the full-precision oracle on the ORIGINAL pool
+    out_f, rel_f = ref.paged_decode_attention_ref(
+        jnp.asarray(q, jnp.float32), jnp.asarray(kp, jnp.float32),
+        jnp.asarray(vp, jnp.float32), sm, pt, vis)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_f), **QUANT_TOLS[mode_name])
+    np.testing.assert_allclose(np.asarray(rel_k), np.asarray(rel_f),
+                               **QUANT_TOLS[mode_name])
+
+
+def test_paged_decode_attn_quant_none_bit_identical():
+    """kv_quant="none" must not perturb a single bit: explicit all-zero
+    flags + all-one scales equals omitting the quant operands entirely
+    (the kernel's where(quant, scale, 1.0) multiply is identity)."""
+    B, P, page, H, KVH, hd = 2, 6, 64, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (B, P, page, KVH, hd))
+    vp = jax.random.normal(ks[2], (B, P, page, KVH, hd))
+    sm = jax.random.bernoulli(ks[3], 0.5, (B, P, page)).at[:, 0, 0].set(True)
+    pt = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    pq = jnp.zeros((B, P), jnp.int32)
+    sc = jnp.ones((B, P, 2, KVH), jnp.float32)
+    out_q, rel_q = paged_decode_attention_kernel(q, kp, vp, sm, pt, None,
+                                                 pq, sc, interpret=True)
+    out_n, rel_n = paged_decode_attention_kernel(q, kp, vp, sm, pt,
+                                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_q), np.asarray(out_n))
+    np.testing.assert_array_equal(np.asarray(rel_q), np.asarray(rel_n))
+    out_rq, rel_rq = ref.paged_decode_attention_ref(q, kp, vp, sm, pt, None,
+                                                    pq, sc)
+    out_rn, rel_rn = ref.paged_decode_attention_ref(q, kp, vp, sm, pt)
+    np.testing.assert_array_equal(np.asarray(out_rq), np.asarray(out_rn))
+    np.testing.assert_array_equal(np.asarray(rel_rq), np.asarray(rel_rn))
+
+
+def test_paged_decode_attn_quant_skipped_pages_inert():
+    """A quantized page that is unmapped (page_table -1) or invisible
+    (page_visible False) must be skipped BEFORE its scale is ever applied:
+    poison those pages' scales with 1e9 — any leak would blow up the
+    softmax — and require bit-equality with the unquantized run plus
+    exact relevance 0 on the skipped slots."""
+    B, P, page, H, KVH, hd = 2, 6, 64, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (B, P, page, KVH, hd))
+    vp = jax.random.normal(ks[2], (B, P, page, KVH, hd))
+    sm = jnp.ones((B, P, page), bool)
+    pt = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    pt = pt.at[:, 1].set(-1)                      # slot 1 unmapped
+    vis = jnp.ones((B, P), bool).at[:, 2].set(False)   # slot 2 frozen
+    pq = jnp.zeros((B, P), jnp.int32).at[:, 1].set(1).at[:, 2].set(1)
+    sc = jnp.ones((B, P, 2, KVH), jnp.float32)
+    sc = sc.at[:, 1].set(1e9).at[:, 2].set(1e9)   # poison skipped slots
+    out_q, rel_q = paged_decode_attention_kernel(q, kp, vp, sm, pt, vis,
+                                                 pq, sc, interpret=True)
+    out_n, rel_n = paged_decode_attention_kernel(q, kp, vp, sm, pt, vis,
+                                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_q), np.asarray(out_n))
+    np.testing.assert_array_equal(np.asarray(rel_q), np.asarray(rel_n))
+    np.testing.assert_array_equal(np.asarray(rel_q[:, 1:3]), 0.0)
+    assert np.isfinite(np.asarray(out_q)).all()
+    out_rq, rel_rq = ref.paged_decode_attention_ref(q, kp, vp, sm, pt, vis,
+                                                    pq, sc)
+    out_rn, _ = ref.paged_decode_attention_ref(q, kp, vp, sm, pt, vis)
+    np.testing.assert_array_equal(np.asarray(out_rq), np.asarray(out_rn))
+    np.testing.assert_array_equal(np.asarray(rel_rq[:, 1:3]), 0.0)
 
 
 @pytest.mark.parametrize("B,S,blk", [(1, 256, 64), (2, 1024, 256), (4, 512, 512)])

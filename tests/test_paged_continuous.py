@@ -196,11 +196,17 @@ class TestRecovery:
         for i, (x, y) in enumerate(zip(a, b)):
             np.testing.assert_array_equal(x, y, err_msg=f"request {i}")
 
-    def test_rewind_landing_on_page_boundary(self, tiny_f32):
+    @pytest.mark.parametrize("async_pipeline", [False, True])
+    def test_rewind_landing_on_page_boundary(self, tiny_f32, async_pipeline):
         """A rewind whose target position is exactly a page boundary must
         unmap the (now wholly invalid) tail page and leave its
         re-allocation to the next page-boundary tick; greedy replay then
-        reproduces the never-rewound stream."""
+        reproduces the never-rewound stream.  Runs in BOTH pipeline
+        modes: `_rewind_lane` drains the async result ring at entry, so
+        an injected rewind sees current host bookkeeping instead of
+        surgery computed against a position one deferred commit stale
+        (the per-iteration flush below only keeps the drive loop's pos
+        reads exact — the drain is what makes the rewind itself safe)."""
         cfg, params = tiny_f32
         fc = dataclasses.replace(cfg.freeze, recovery_enabled=True,
                                  entropy_abs_threshold=1e9,  # no organic RR
@@ -210,19 +216,19 @@ class TestRecovery:
         prompt = rng.randint(0, cfg.vocab_size, size=14).astype(np.int32)
 
         def run(rewind):
-            # sync pipeline: the test injects _rewind_lane mid-run, which
-            # requires the host bookkeeping to be current at the injection
-            # point (the async ring defers it by one step)
             eng = PagedContinuousEngine(cfg, params, max_seq=96, n_lanes=1,
                                         max_active_pages=10, prefill_chunk=8,
-                                        async_pipeline=False)
+                                        async_pipeline=async_pipeline)
             req = Request(1, prompt, 30, SamplingParams.greedy())
             eng.admit(req)
             while eng.prefills:
                 eng.step_once()
-            # bucket 16 -> pos starts 16; 16 commits -> pos 32
+            # bucket 16 -> pos starts 16; 16 commits -> pos 32 (flush per
+            # iteration so the async ring's deferred commit can't make the
+            # loop overshoot the boundary-landing target)
             while int(eng.pos[0]) < 32:
                 eng.step_once()
+                eng.flush()
             if rewind:
                 assert eng._rewind_lane(0)
                 assert int(eng.pos[0]) == 24 and 24 % eng.page == 0
@@ -231,6 +237,7 @@ class TestRecovery:
                     "wholly-rewound pages must be unmapped"
             while eng.lanes[0].request is not None:
                 eng.step_once()
+                eng.flush()
             return req.result
 
         base, rew = run(False), run(True)

@@ -1,0 +1,101 @@
+"""Deterministic seeded checks for core.quant — the always-on mirror of
+the hypothesis properties in tests/test_quant_properties.py (which skip
+entirely when the library is absent, as in the pinned CI image).
+
+Covers the same invariants on fixed RandomState pages: the elementwise
+round-trip bound across magnitudes, scale correctness on degenerate
+pages (all-zero, single-outlier), and payload byte-stability across
+freeze->stash->thaw->rewind width changes (no double quantization).
+"""
+import numpy as np
+import pytest
+
+from repro.core import quant
+
+MODES = [quant.QUANT_INT8] + (
+    [quant.QUANT_FP8] if quant.fp8_supported() else [])
+_QMAX = {quant.QUANT_INT8: 127.0, quant.QUANT_FP8: 448.0}
+
+
+def _page(seed: int, mag: int = 0, page=8, kvh=4, hd=8) -> np.ndarray:
+    rs = np.random.RandomState(seed)
+    return (rs.standard_normal((page, kvh, hd)) * 10.0 ** mag
+            ).astype(np.float32)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("mag", [-20, -6, -1, 0, 1, 6, 20])
+def test_roundtrip_error_within_bound(mode, mag):
+    for seed in range(5):
+        page = _page(seed, mag)
+        payload, sc = quant.quantize_page(page, mode)
+        assert payload.dtype.itemsize == 1          # the stash stores bytes
+        assert np.isfinite(sc).all()
+        dq = quant.dequantize_page(payload, sc)
+        bound = quant.roundtrip_bound(page, mode, sc)
+        assert (np.abs(page - dq) <= bound).all()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_all_zero_page_and_head(mode):
+    payload, sc = quant.quantize_page(np.zeros((8, 4, 8), np.float32), mode)
+    np.testing.assert_array_equal(sc, 1.0)          # identity, never 0/inf
+    np.testing.assert_array_equal(quant.dequantize_page(payload, sc), 0.0)
+    page = _page(0)
+    page[:, 2, :] = 0.0                             # one dead head
+    payload, sc = quant.quantize_page(page, mode)
+    assert sc[2] == 1.0
+    np.testing.assert_array_equal(
+        quant.dequantize_page(payload, sc)[:, 2, :], 0.0)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("sign", [-1.0, 1.0])
+def test_single_outlier_pins_head_scale(mode, sign):
+    page = _page(1, mag=-2)
+    page[3, 1, 2] = sign * 5e4
+    payload, sc = quant.quantize_page(page, mode)
+    np.testing.assert_allclose(sc[1], 5e4 / _QMAX[mode], rtol=1e-6)
+    dq = quant.dequantize_page(payload, sc)
+    np.testing.assert_allclose(dq[3, 1, 2], page[3, 1, 2], rtol=1e-5)
+    assert (np.abs(page - dq) <=
+            quant.roundtrip_bound(page, mode, sc)).all()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_cycles_never_double_quantize(mode):
+    """quantize once, then stash/thaw width changes forever after: the
+    payload bytes must be stable (narrow_payload and scale-carrying
+    quantize_page are pure width casts on an already-quantized page)."""
+    pool_dtypes = [np.float32]
+    try:
+        from ml_dtypes import bfloat16
+        pool_dtypes.append(bfloat16)
+    except ImportError:                             # pragma: no cover
+        pass
+    for pool_dtype in pool_dtypes:
+        page = _page(2)
+        payload, sc = quant.quantize_page(page, mode)
+        ref_bytes = payload.tobytes()
+        pool_page = np.asarray(payload, np.float32).astype(pool_dtype)
+        for _ in range(3):
+            stashed = quant.narrow_payload(pool_page, mode)
+            assert stashed.tobytes() == ref_bytes
+            # quantizing on-grid values with the stored scales is a no-op:
+            # a host-dequantized page re-quantizes to the same bytes
+            requant, _ = quant.quantize_page(
+                quant.dequantize_page(stashed, sc), mode, scales=sc)
+            assert requant.tobytes() == ref_bytes
+            pool_page = np.asarray(stashed, np.float32).astype(pool_dtype)
+        dq = quant.dequantize_page(quant.narrow_payload(pool_page, mode), sc)
+        assert (np.abs(page - dq) <=
+                quant.roundtrip_bound(page, mode, sc)).all()
+
+
+def test_resolve_mode_validation():
+    assert quant.resolve_mode("none") == quant.QUANT_NONE
+    assert quant.resolve_mode("int8") == quant.QUANT_INT8
+    with pytest.raises(ValueError, match="kv_quant"):
+        quant.resolve_mode("int4")
+    if quant.fp8_supported():
+        assert quant.resolve_mode("fp8") == quant.QUANT_FP8

@@ -1,0 +1,131 @@
+"""Property-based tests for core.quant — hypothesis-driven widening of the
+deterministic seeded checks in tests/test_quant.py.
+
+The whole module skips when ``hypothesis`` is unavailable (the pinned CI
+image does not ship it, and the repo policy is to gate — never install —
+missing dependencies).  Coverage does not regress on skip: the seeded
+sweeps in tests/test_quant.py exercise the same invariants on fixed
+RandomState pages, so these tests only *widen* the searched page space
+when the library happens to be present.
+
+Properties (docs/quantization.md documents the envelope):
+
+* **round-trip bound** — for any page at any magnitude,
+  ``|x - dequantize(quantize(x))| <= roundtrip_bound(x)`` elementwise
+  (int8: half a quantization step ``scale/2``; fp8 e4m3: half-ulp
+  relative plus a subnormal floor),
+* **scale correctness** — all-zero heads get scale exactly 1.0 with an
+  all-zero payload (dequant exact); a single outlier pins its head's
+  scale to ``|outlier| / qmax`` and survives the round trip to within
+  float32 arithmetic; extreme magnitudes (1e-20 .. 1e20) keep scales
+  finite and the bound intact,
+* **no double quantization** — any freeze->stash->thaw->rewind cycle
+  (quantize once, then arbitrarily interleaved pool-dtype installs and
+  ``narrow_payload`` stashes) leaves the payload BYTE-stable: the error
+  never compounds past the single round-trip bound.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings                # noqa: E402
+from hypothesis import strategies as st               # noqa: E402
+
+from repro.core import quant                          # noqa: E402
+
+MODES = [quant.QUANT_INT8] + (
+    [quant.QUANT_FP8] if quant.fp8_supported() else [])
+_QMAX = {quant.QUANT_INT8: 127.0, quant.QUANT_FP8: 448.0}
+
+# the device pool dtypes a quantized payload round-trips through
+POOL_DTYPES = [np.float32]
+try:                                                  # bf16 pool, if present
+    from ml_dtypes import bfloat16 as _BF16
+    POOL_DTYPES.append(_BF16)
+except ImportError:                                   # pragma: no cover
+    pass
+
+
+def _page(seed: int, mag: int, page=8, kvh=4, hd=8) -> np.ndarray:
+    rs = np.random.RandomState(seed)
+    return (rs.standard_normal((page, kvh, hd)) * 10.0 ** mag
+            ).astype(np.float32)
+
+
+@given(seed=st.integers(0, 2**31 - 1), mag=st.integers(-20, 20),
+       mode=st.sampled_from(MODES))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_error_within_bound(seed, mag, mode):
+    page = _page(seed, mag)
+    payload, sc = quant.quantize_page(page, mode)
+    assert payload.dtype.itemsize == 1
+    assert np.isfinite(sc).all()
+    dq = quant.dequantize_page(payload, sc)
+    bound = quant.roundtrip_bound(page, mode, sc)
+    assert (np.abs(page - dq) <= bound).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1), mode=st.sampled_from(MODES),
+       zero_head=st.integers(0, 3))
+@settings(max_examples=100, deadline=None)
+def test_all_zero_head_scale_is_identity(seed, mode, zero_head):
+    page = _page(seed, mag=0)
+    page[:, zero_head, :] = 0.0
+    payload, sc = quant.quantize_page(page, mode)
+    assert sc[zero_head] == 1.0
+    dq = quant.dequantize_page(payload, sc)
+    np.testing.assert_array_equal(dq[:, zero_head, :], 0.0)
+    # fully-zero page: every head degrades to the identity scale
+    z_payload, z_sc = quant.quantize_page(np.zeros_like(page), mode)
+    np.testing.assert_array_equal(z_sc, 1.0)
+    np.testing.assert_array_equal(
+        quant.dequantize_page(z_payload, z_sc), 0.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1), mode=st.sampled_from(MODES),
+       outlier=st.floats(1e3, 1e6, allow_nan=False, allow_infinity=False),
+       sign=st.sampled_from([-1.0, 1.0]))
+@settings(max_examples=100, deadline=None)
+def test_single_outlier_pins_head_scale(seed, mode, outlier, sign):
+    page = _page(seed, mag=-2)          # background far below the outlier
+    page[3, 1, 2] = sign * outlier
+    payload, sc = quant.quantize_page(page, mode)
+    np.testing.assert_allclose(sc[1], outlier / _QMAX[mode], rtol=1e-6)
+    # the outlier itself sits on the grid's endpoint and survives exactly
+    # (to f32 arithmetic); the swamped background stays inside the bound
+    dq = quant.dequantize_page(payload, sc)
+    np.testing.assert_allclose(dq[3, 1, 2], page[3, 1, 2], rtol=1e-5)
+    bound = quant.roundtrip_bound(page, mode, sc)
+    assert (np.abs(page - dq) <= bound).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1), mode=st.sampled_from(MODES),
+       mag=st.integers(-3, 3), cycles=st.integers(1, 4),
+       pool_dtype=st.sampled_from(POOL_DTYPES))
+@settings(max_examples=100, deadline=None)
+def test_freeze_stash_thaw_cycles_never_double_quantize(
+        seed, mode, mag, cycles, pool_dtype):
+    """Model the controller's page lifecycle: freeze-time quantize once,
+    then any number of stash (``narrow_payload`` from the pool dtype) /
+    thaw (payload re-installed into the pool dtype) round trips.  The
+    payload must be byte-stable across every cycle — re-quantization
+    would drift it — and the final dequant error stays within the ONE
+    round-trip bound."""
+    page = _page(seed, mag)
+    payload, sc = quant.quantize_page(page, mode)
+    ref_bytes = payload.tobytes()
+    pool_page = np.asarray(payload, np.float32).astype(pool_dtype)
+    for _ in range(cycles):
+        stashed = quant.narrow_payload(pool_page, mode)     # stash
+        assert stashed.tobytes() == ref_bytes
+        # quantizing ON-GRID values with the stored scales is a no-op: a
+        # host-dequantized page (the ensure_resident path) re-quantizes
+        # to the same bytes instead of drifting
+        requant, _ = quant.quantize_page(
+            quant.dequantize_page(stashed, sc), mode, scales=sc)
+        assert requant.tobytes() == ref_bytes
+        pool_page = np.asarray(stashed, np.float32).astype(pool_dtype)  # thaw
+    dq = quant.dequantize_page(quant.narrow_payload(pool_page, mode), sc)
+    bound = quant.roundtrip_bound(page, mode, sc)
+    assert (np.abs(page - dq) <= bound).all()

@@ -57,6 +57,17 @@ REPO_CONFIG = Config(
         "PagedController.ensure_resident",
         # budget-guarded host-stash writer (every stash allocation)
         "PagedController._store_put",
+        # per-page quantization: freeze-time in-place pass + swap-out
+        # narrowing + thaw installs all run inside the boundary tick
+        "PagedController._quantize_frozen_resident",
+        "PagedController._store_payload",
+        "PagedController._install_kv",
+        # core.quant numeric recipe (module-level, hence bare names):
+        # called per quantized page on freeze/stash/thaw/rewind
+        "quantize_page",
+        "dequantize_page",
+        "page_scales",
+        "narrow_payload",
         # page-batched offload round-trip (dense engine's commit path)
         "HostOffloadController.sync",
     }),

@@ -90,6 +90,40 @@ def check_bench(path: pathlib.Path, max_retraces=None) -> None:
               f"{max_retraces}; per arm: {b['n_retraces']})")
 
 
+def check_quant(bench_path: pathlib.Path) -> None:
+    """Named criteria bounding the lossy KV-quantization change (the int8
+    needle arm written by benchmarks/continuous_batching.py): retrieval
+    accuracy must stay at the unquantized arm's level (floor 1.0), and
+    BOTH the query-window device-KV gauge and total DMA bytes must drop
+    strictly below the unquantized paged+recovery arm."""
+    print(f"== {bench_path} [--quant]")
+    b = json.loads(bench_path.read_text())
+    if not require_keys("quant", b.get("quant", {}), (
+            "retrieval_acc", "baseline_retrieval_acc",
+            "kv_device_bytes_query_floor", "dma_bytes", "quantized_pages")):
+        return
+    q = b["quant"]
+    check("quant-pages-nonzero", q["quantized_pages"] > 0,
+          "the int8 arm must actually quantize pages, else every other "
+          f"quant assertion is vacuous (quantized_pages={q['quantized_pages']})")
+    check("quant-retrieval-floor", q["retrieval_acc"] >= 1.0,
+          "int8 arm must keep needle retrieval accuracy at 1.0 "
+          f"(got {q['retrieval_acc']}, unquantized arm "
+          f"{q['baseline_retrieval_acc']})")
+    kv = q["kv_device_bytes_query_floor"]
+    check("quant-device-kv-win",
+          kv["paged_recovery_quant"] < kv["paged_recovery"],
+          "int8 arm must cut the query-window device-KV gauge floor "
+          f"(quant={kv['paged_recovery_quant']} vs "
+          f"unquantized={kv['paged_recovery']} bytes)")
+    dma = q["dma_bytes"]
+    check("quant-dma-win",
+          dma["paged_recovery_quant"] < dma["paged_recovery"],
+          "int8 arm must cut total host<->device DMA bytes "
+          f"(quant={dma['paged_recovery_quant']} vs "
+          f"unquantized={dma['paged_recovery']} bytes)")
+
+
 def check_scheduling(path: pathlib.Path, max_retraces=None) -> None:
     print(f"== {path}")
     s = json.loads(path.read_text())
@@ -209,6 +243,11 @@ def main(argv=None) -> int:
     ap.add_argument("--chaos", type=pathlib.Path, default=None,
                     help="BENCH_chaos.json (fault-injection / "
                          "degradation-ladder criteria, benchmarks/chaos.py)")
+    ap.add_argument("--quant", action="store_true",
+                    help="assert the quantized-KV guardrail block in the "
+                         "bench summary (int8 needle arm: accuracy floor "
+                         "1.0, device-KV and DMA-byte cuts vs the "
+                         "unquantized arm)")
     ap.add_argument("--max-retraces", type=int, default=None,
                     metavar="N",
                     help="assert the benchmarks' steady-state jit "
@@ -219,6 +258,8 @@ def main(argv=None) -> int:
     FAILURES.clear()            # main() is re-entrant for the unit tests
     check_report(args.report)
     check_bench(args.bench, max_retraces=args.max_retraces)
+    if args.quant:
+        check_quant(args.bench)
     if args.scheduling is not None:
         check_scheduling(args.scheduling, max_retraces=args.max_retraces)
     if args.chaos is not None:
