@@ -1,0 +1,318 @@
+"""Replica-failover benchmark: mid-trace replica kill under a mixed-SLO
+trace, served by ``ReplicaRouter`` over N in-process engine replicas.
+
+* **Workload** — background requests (priority 5, moderate mixed-length
+  generations, no deadline) flood every lane of every replica at t=0;
+  interactive foreground requests (priority 0, short generations, tight
+  calibrated deadlines) arrive spread across the run so several are
+  in flight when the kill lands.
+
+* **Kill** — one replica is crashed at an explicit mid-trace router tick
+  (``kill_at``, the same deterministic ``replica_crash`` fault site
+  ``--kill-replica-at`` drives), after at least two checkpoint cadences
+  (``checkpoint_every`` ticks apart) so most of its in-flight lanes have
+  a router-side checkpoint to resume from on the survivors.
+
+* **Headline** (asserted by ``tools/check_bench.py --failover`` in CI
+  tier-2): **zero lost requests** across the kill; every
+  checkpoint-recovered request **token-identical** to an uninterrupted
+  solo run of the same request (greedy + f32 + ``burst_prefill=False``
+  — the repo's parity methodology: a lane's token stream is a pure
+  function of its own request, so the reference is exact, and it holds
+  across a *replica boundary* because a ``LaneSnapshot``'s payload is
+  host-side numpy valid on any same-config engine); and **bounded
+  deadline-hit degradation** — foreground requests whose lifetime
+  overlaps the failover window still hit >= 80% of their deadlines.
+
+* **Consistency** — the router journals every lane's committed tokens
+  each tick; this bench runs recovery OFF (no entropy rewinds), so the
+  journal is append-only and each recovered request's final tokens must
+  extend its journal-at-failure prefix exactly.  The surviving
+  replicas' controllers must also pass the exact stash/exported-bytes
+  accounting audit (``repro.analysis.invariants.audit_controller``).
+
+Foreground deadlines are calibrated from the measured per-tick wall time
+(``DEADLINE_STEPS`` router ticks' worth, measured while every replica is
+busy), so pass/fail is machine-speed independent.  The warmup phase runs
+the same trace shape through a throwaway router over the *same engines*
+and drains two replicas mid-run, compiling every shape the timed run
+hits — prefill/decode, the checkpoint pull, and the cross-replica
+resume push — before anything is timed.
+
+    PYTHONPATH=src python -m benchmarks.failover           # full
+    PYTHONPATH=src python -m benchmarks.failover --smoke   # CI tier-2
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import numpy as np
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+N_REPLICAS = 3
+N_LANES = 2                  # per replica
+CHECKPOINT_EVERY = 4         # router ticks between checkpoint cadences
+# foreground deadline in calibrated router ticks: comfortably above the
+# foreground's own service time, below a background generation's
+# remaining length (same construction as benchmarks/scheduling.py)
+DEADLINE_STEPS = 26
+# a foreground request is "in the failover window" when its lifetime
+# overlaps [kill_tick, kill_tick + FG_WINDOW_TICKS] — wide enough to
+# cover the re-place + resume of every recovered lane
+FG_WINDOW_TICKS = 24
+FG_HIT_FLOOR = 0.8
+
+
+def failover_config(cfg):
+    """Freeze pressure on (every lane carries real frozen/stashed pages
+    across the replica boundary) with recovery OFF: no entropy rewinds,
+    so the committed-token journal is append-only and the
+    journal-consistency check below is exact."""
+    fc = dataclasses.replace(cfg.freeze, page_size=16, window=16,
+                             tau_mode="quantile", quantile=0.5, k_soft=1.0,
+                             recovery_enabled=False)
+    return dataclasses.replace(cfg, freeze=fc, dtype="float32")
+
+
+def mk_engine(cfg, params, smoke: bool):
+    from repro.serving.engine import PagedContinuousEngine
+    return PagedContinuousEngine(
+        cfg, params, max_seq=256 if smoke else 512, n_lanes=N_LANES,
+        max_active_pages=4 if smoke else 5, prefill_chunk=16,
+        # deterministic chunk split: the solo parity reference interleaves
+        # differently, and burst chunks would change flash-attention
+        # summation order
+        burst_prefill=False)
+
+
+def make_trace(cfg, smoke: bool, tick_s: float):
+    """(arrival_s, submit-kwargs, role) tuples.  Background floods all
+    N_REPLICAS * N_LANES lanes at t=0 with enough queued backlog that
+    every replica is still busy at the kill tick; foregrounds arrive
+    spread over the background-dominated span so several straddle the
+    failover window."""
+    from repro.serving.sampling import SamplingParams
+    rng = np.random.RandomState(23)
+    lanes = N_REPLICAS * N_LANES
+    n_bg, bg_lo, bg_hi = (10, 20, 33) if smoke else (14, 24, 44)
+    n_fg, fg_tok = (4, 6) if smoke else (8, 8)
+    greedy = SamplingParams.greedy()
+    trace = []
+    bg_total = 0
+    for _ in range(n_bg):
+        n = int(rng.randint(bg_lo, bg_hi))
+        bg_total += n
+        trace.append((0.0, dict(
+            prompt=rng.randint(0, cfg.vocab_size, size=24),
+            n_tokens=n, sampling=greedy, priority=5), "bg"))
+    # spread foregrounds across the background span (lanes lanes); the
+    # deadline is DEADLINE_STEPS calibrated ticks from arrival
+    gap = 0.6 * (bg_total / lanes) * tick_s / max(n_fg, 1)
+    for i in range(n_fg):
+        trace.append(((i + 0.35) * gap, dict(
+            prompt=rng.randint(0, cfg.vocab_size, size=12),
+            n_tokens=fg_tok, sampling=greedy, priority=0,
+            deadline_ms=1e3 * DEADLINE_STEPS * tick_s), "fg"))
+    return trace
+
+
+def drive(router, trace):
+    """Run timed arrivals through the router (idle gaps before the first
+    pending arrival fast-forward, as in benchmarks/scheduling.drive).
+    Returns per-role uid lists, per-uid submit/finish router ticks, and
+    per-tick wall latencies tagged with how many replicas were busy."""
+    pending = sorted(trace, key=lambda t: t[0])
+    roles: Dict[str, List[int]] = {"bg": [], "fg": []}
+    submit_tick: Dict[int, int] = {}
+    finish_tick: Dict[int, int] = {}
+    seen_done: set = set()
+    tick_lat: List[tuple] = []
+    t0 = time.monotonic()
+    while pending or router.busy:
+        now = time.monotonic() - t0
+        if not router.busy and pending and pending[0][0] > now:
+            t0 -= pending[0][0] - now
+            now = pending[0][0]
+        while pending and pending[0][0] <= now:
+            _, kw, role = pending.pop(0)
+            uid = router.submit(**kw)
+            roles[role].append(uid)
+            submit_tick[uid] = router.tick
+        n_busy = sum(1 for r in router.replicas if r.alive and r.busy)
+        ts = time.perf_counter()
+        router.step()
+        tick_lat.append((n_busy, time.perf_counter() - ts))
+        # failover harvests retirements straight into router.done without
+        # routing them through step()'s return — diff the done set
+        for uid in router.done.keys() - seen_done:
+            finish_tick[uid] = router.tick
+            seen_done.add(uid)
+    return roles, submit_tick, finish_tick, tick_lat
+
+
+def solo_reference(cfg, params, requests, smoke: bool):
+    """Uninterrupted per-request token streams on a single dedicated
+    engine (same construction kwargs as every replica), each request
+    served alone — the exact reference the parity audit compares
+    against.  Reusing one engine reuses its jit caches."""
+    from repro.serving.engine import Request
+    from repro.serving.sampling import SamplingParams
+    eng = mk_engine(cfg, params, smoke)
+    out = {}
+    for uid, req in sorted(requests.items()):
+        ref = Request(uid, np.asarray(req.prompt, np.int32), req.n_tokens,
+                      SamplingParams.greedy())
+        eng.admit(ref)
+        while ref.result is None:
+            eng.step_once()
+        out[uid] = np.asarray(ref.result)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced trace for the CI tier-2 smoke job")
+    args = ap.parse_args()
+
+    import jax
+    from benchmarks.common import bench_config
+    from repro.models import model as MD
+    from repro.serving.router import ReplicaRouter
+    from repro.analysis.invariants import audit_controller
+
+    cfg = failover_config(bench_config())
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)   # f32 weights
+    engines = [mk_engine(cfg, params, args.smoke)
+               for _ in range(N_REPLICAS)]
+
+    # ---- warmup + tick-time calibration: a throwaway router over the
+    # SAME engines (their jit caches persist), running the same trace
+    # shape and draining two replicas MID-run so the checkpoint pull and
+    # the cross-replica suspend/resume push compile before anything is
+    # timed ---- #
+    warm = ReplicaRouter(engines, checkpoint_every=CHECKPOINT_EVERY)
+    for _, kw, _ in sorted(make_trace(cfg, smoke=True, tick_s=5e-3),
+                           key=lambda t: t[0]):
+        warm.submit(**kw)
+    warm_lat = []
+    while warm.pending_uids():
+        n_busy = sum(1 for r in warm.replicas if r.alive and r.busy)
+        ts = time.perf_counter()
+        warm.step()
+        warm_lat.append((n_busy, time.perf_counter() - ts))
+        if warm.tick == 2 * CHECKPOINT_EVERY:
+            warm.drain_replica(0)
+            warm.drain_replica(1)
+    busy_lat = [dt for n, dt in warm_lat if n == N_REPLICAS]
+    tick_s = float(np.median(busy_lat if busy_lat
+                             else [dt for _, dt in warm_lat]))
+    trace = make_trace(cfg, args.smoke, tick_s)
+    # kill after two checkpoint cadences, while the background backlog
+    # still occupies every replica
+    kill_tick = 3 * CHECKPOINT_EVERY if args.smoke else 4 * CHECKPOINT_EVERY
+    print(f"calibrated tick time: {1e3 * tick_s:.1f} ms -> foreground "
+          f"deadline {1e3 * DEADLINE_STEPS * tick_s:.0f} ms, "
+          f"kill replica 0 at tick {kill_tick}")
+
+    router = ReplicaRouter(engines, checkpoint_every=CHECKPOINT_EVERY,
+                           kill_at=(0, kill_tick))
+    roles, submit_tick, finish_tick, tick_lat = drive(router, trace)
+    rep = router.report()
+
+    # ---- parity + consistency audits ---- #
+    refs = solo_reference(cfg, params, router.requests, args.smoke)
+    parity_by_uid = {u: bool(np.array_equal(refs[u],
+                                            np.asarray(router.done[u].result)))
+                     for u in sorted(router.done)}
+    all_parity = all(parity_by_uid.values()) and len(parity_by_uid) > 0
+    ck_uids = sorted({e["uid"] for e in router.events
+                      if e["event"] == "recover" and e["from_checkpoint"]})
+    ck_parity = all(parity_by_uid[u] for u in ck_uids) and len(ck_uids) > 0
+
+    journal_by_uid = {}
+    for uid, j in sorted(router.journal_at_fail.items()):
+        final = list(np.asarray(router.done[uid].result)) \
+            if uid in router.done else []
+        journal_by_uid[uid] = bool(final[:len(j)] == list(j))
+    journal_ok = all(journal_by_uid.values()) and len(journal_by_uid) > 0
+
+    invariants_ok = True
+    for r in router.replicas:
+        if not r.alive:
+            continue
+        try:
+            audit_controller(r.engine.ctl)
+        except AssertionError as e:
+            invariants_ok = False
+            print(f"replica {r.rid} invariant violation: {e}")
+
+    # ---- foreground deadline hits, overall + failover window ---- #
+    m = router.metrics
+    fg_hits = [bool(m[u]["deadline_hit"]) for u in roles["fg"]]
+    window = (kill_tick, kill_tick + FG_WINDOW_TICKS)
+    fg_window = [u for u in roles["fg"]
+                 if submit_tick[u] <= window[1]
+                 and finish_tick.get(u, window[1]) >= window[0]]
+    fg_window_hits = [bool(m[u]["deadline_hit"]) for u in fg_window]
+    hit_rate = sum(fg_hits) / max(len(fg_hits), 1)
+    hit_window = (sum(fg_window_hits) / len(fg_window_hits)
+                  if fg_window_hits else 1.0)
+
+    print(f"\n{'replica-kill trace':>28s}  {'value':>8s}")
+    rows = [
+        ("ticks", rep["ticks"]), ("kill_tick", kill_tick),
+        ("submitted", rep["submitted"]), ("completed", rep["completed"]),
+        ("lost_requests", rep["lost_requests"]),
+        ("n_failovers", rep["n_failovers"]),
+        ("recovered_with_checkpoint", rep["recovered_with_checkpoint"]),
+        ("recovered_reprefill", rep["recovered_reprefill"]),
+        ("requeued_items", rep["requeued_items"]),
+        ("checkpoint_parity", ck_parity),
+        ("all_token_parity", all_parity),
+        ("journal_consistent", journal_ok),
+        ("invariants_ok", invariants_ok),
+        ("fg_deadline_hit_rate", round(hit_rate, 3)),
+        ("fg_deadline_hit_window", round(hit_window, 3)),
+        ("fg_in_window", len(fg_window)),
+    ]
+    for k, v in rows:
+        print(f"{k:>28s}  {v!s:>8s}")
+
+    report = {
+        "n_replicas": N_REPLICAS,
+        "n_lanes": N_LANES,
+        "checkpoint_every": CHECKPOINT_EVERY,
+        "deadline_steps": DEADLINE_STEPS,
+        "fg_window_ticks": FG_WINDOW_TICKS,
+        "fg_hit_floor": FG_HIT_FLOOR,
+        "calibrated_tick_ms": round(1e3 * tick_s, 3),
+        "kill_tick": kill_tick,
+        "parity_by_uid": parity_by_uid,
+        "checkpoint_recovered_uids": ck_uids,
+        "journal_by_uid": journal_by_uid,
+        "events": router.events,
+        "router": rep,
+        **dict(rows),
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "failover.json").write_text(json.dumps(report, indent=2))
+    # machine-readable summary at the repo root (CI tier-2 asserts on it
+    # via tools/check_bench.py --failover)
+    bench = dict(rows)
+    bench["checkpoint_audited"] = len(ck_uids)
+    bench["journal_audited"] = len(journal_by_uid)
+    bench["fg_hit_floor"] = FG_HIT_FLOOR
+    bench["n_live"] = rep["n_live"]
+    (pathlib.Path(__file__).resolve().parents[1]
+     / "BENCH_failover.json").write_text(json.dumps(bench, indent=2))
+
+
+if __name__ == "__main__":
+    main()

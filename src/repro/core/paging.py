@@ -763,8 +763,14 @@ class PagedController:
         for l in range(L):
             cand = [key for key in self.frozen_meta
                     if key[0] == l and key[1] == lane_id]
-            cand.sort(key=lambda key: -thaw_priority(
-                self.frozen_meta[key]["c"], self.frozen_meta[key]["frozen_at"]))
+            # canonical tie-break: equal-priority candidates must rank
+            # the same no matter the dict's insertion history — a lane
+            # whose metas were rebuilt by ``import_lane`` (suspend/resume
+            # migration) has to thaw the exact pages the uninterrupted
+            # run would have
+            cand.sort(key=lambda key: (-thaw_priority(
+                self.frozen_meta[key]["c"],
+                self.frozen_meta[key]["frozen_at"]), key))
             done_gids = []
             for key in cand[:budget]:
                 free = self._free_slots(pt, l, b, lane_id)
@@ -936,33 +942,67 @@ class PagedController:
         are the immutable host copies of device-resident pages; they
         transfer too, so a resumed lane's swap-out path keeps its
         no-recopy invariant.  Quantized payloads travel AS-IS (narrow
-        bytes + scales) — a suspend/resume cycle never re-quantizes."""
+        bytes + scales) — a suspend/resume cycle never re-quantizes.
+        The page's speculative staging slot (``staged_keys``) rides along
+        as the 4th element: the slot index is lane-relative to the shared
+        ``[P, P_total)`` staging range, so the resume destination can
+        re-upload the page and keep the thaw-remap schedule — and with it
+        any entropy-triggered Rewalk — exactly on the uninterrupted run's
+        path."""
         out = {}
         for key in [k for k in self.store if k[1] == lane]:
             qm = self.quant_meta.get(key)
             kv = self._store_pop(key)
             meta = self.frozen_meta.pop(key, None)
-            self.staged_keys.pop(key, None)
-            out[(key[0], key[2])] = (kv, meta, qm)
+            staged = self.staged_keys.pop(key, None)
+            out[(key[0], key[2])] = (kv, meta, qm, staged)
             self.exported_bytes += kv[0].nbytes + kv[1].nbytes
         return out
 
-    def import_lane(self, lane: int, pages: Dict) -> None:
+    def copy_lane(self, lane: int) -> Dict[Tuple[int, int], Tuple]:
+        """Checkpoint variant of ``export_lane``: the same mapping, but
+        the controller keeps its entries and no accounting moves — the
+        caller gets a consistent point-in-time view for an off-engine
+        mirror.  Freeze metas are copied (timers mutate in place); the
+        page payloads are shared (store pages are immutable by
+        convention — every mutation path re-``_store_put``s a fresh
+        array)."""
+        out = {}
+        for key in [k for k in self.store if k[1] == lane]:
+            meta = self.frozen_meta.get(key)
+            out[(key[0], key[2])] = (
+                self.store[key],
+                dict(meta) if meta is not None else None,
+                self.quant_meta.get(key),
+                self.staged_keys.get(key))
+        return out
+
+    def import_lane(self, lane: int, pages: Dict,
+                    counted: bool = True) -> None:
         """Inverse of ``export_lane``, rekeyed to ``lane`` (the resume
         destination — not necessarily the lane the pages left).  Freeze
         timers resume exactly where they stopped: a suspended lane has no
-        page-boundary ticks, so no decrements were missed."""
-        for (layer, gid), (kv, meta, qm) in pages.items():
+        page-boundary ticks, so no decrements were missed.  Accepts
+        legacy 3-tuples (no staged slot) alongside 4-tuples.
+        ``counted=False`` skips the ``exported_bytes`` decrement — for
+        checkpoint snapshots (``copy_lane``) whose bytes were never
+        moved out of the controller's accounting."""
+        for (layer, gid), entry in pages.items():
+            kv, meta, qm = entry[0], entry[1], entry[2]
+            staged = entry[3] if len(entry) > 3 else None
             key = (layer, lane, gid)
             # unguarded: the bytes already exist (moving back from the
             # snapshot's accounting) and a resume must never fail
             self._store_put(key, kv, guarded=False)
-            self.exported_bytes = max(
-                0, self.exported_bytes - (kv[0].nbytes + kv[1].nbytes))
+            if counted:
+                self.exported_bytes = max(
+                    0, self.exported_bytes - (kv[0].nbytes + kv[1].nbytes))
             if meta is not None:
                 self.frozen_meta[key] = dict(meta)
             if qm is not None:
                 self.quant_meta[key] = qm
+            if staged is not None:
+                self.staged_keys[key] = staged
 
     def drop_pages_from(self, lane: int, first_gid: int) -> int:
         """Forget the host copies of one lane's pages with global id >=

@@ -70,6 +70,22 @@ def main():
                          "on --paged this includes host thaws of stashed "
                          "pages and page-granular rewinds "
                          "(--no-recovery = freeze-timer expiry only)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through ReplicaRouter over N in-process "
+                         "engine replicas: SLO-aware placement, heartbeat "
+                         "health-checking, incremental lane checkpoints "
+                         "and zero-loss failover via freeze-native lane "
+                         "migration (docs/robustness.md)")
+    ap.add_argument("--kill-replica-at", type=int, default=None,
+                    metavar="TICK",
+                    help="crash replica 0 at this router tick (the "
+                         "deterministic replica_crash fault site) to demo "
+                         "failover; requires --replicas > 1")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="router ticks between incremental lane "
+                         "checkpoints (--replicas > 1; smaller = less "
+                         "repeated decode after a crash, more checkpoint "
+                         "DMA)")
     ap.add_argument("--priority", type=int, default=0,
                     help="strict priority class for the submitted requests "
                          "(0 = most important; higher classes can be "
@@ -155,25 +171,38 @@ def main():
         if args.stash_budget_mb is not None else None
     robust_kw = dict(chaos=chaos, stash_budget_bytes=budget,
                      kv_quant=args.kv_quant)
+    def mk_engine():
+        if args.paged:
+            return PagedContinuousEngine(cfg, params, max_seq=args.max_seq,
+                                         n_lanes=args.batch,
+                                         max_active_pages=args.pages,
+                                         enable_freeze=not args.no_freeze,
+                                         prefill_chunk=args.prefill_chunk,
+                                         async_pipeline=args.async_pipeline,
+                                         **robust_kw)
+        return ContinuousEngine(cfg, params, max_seq=args.max_seq,
+                                n_lanes=args.batch,
+                                enable_freeze=not args.no_freeze,
+                                async_pipeline=args.async_pipeline,
+                                **robust_kw)
+
+    router = None
     if args.static:
         eng = Engine(cfg, params, max_seq=args.max_seq,
                      enable_freeze=not args.no_freeze)
         sched = StaticScheduler(eng, batch_size=args.batch)
-    elif args.paged:
-        eng = PagedContinuousEngine(cfg, params, max_seq=args.max_seq,
-                                    n_lanes=args.batch,
-                                    max_active_pages=args.pages,
-                                    enable_freeze=not args.no_freeze,
-                                    prefill_chunk=args.prefill_chunk,
-                                    async_pipeline=args.async_pipeline,
-                                    **robust_kw)
-        sched = Scheduler(eng, preemption=args.preempt)
+    elif args.replicas > 1:
+        from repro.serving.router import ReplicaRouter
+        kill = None if args.kill_replica_at is None \
+            else (0, args.kill_replica_at)
+        router = ReplicaRouter([mk_engine() for _ in range(args.replicas)],
+                               checkpoint_every=args.checkpoint_every,
+                               kill_at=kill,
+                               sched_kw=dict(preemption=args.preempt))
+        eng = None
+        sched = router   # submit()/run()/done/metrics-compatible front end
     else:
-        eng = ContinuousEngine(cfg, params, max_seq=args.max_seq,
-                               n_lanes=args.batch,
-                               enable_freeze=not args.no_freeze,
-                               async_pipeline=args.async_pipeline,
-                               **robust_kw)
+        eng = mk_engine()
         sched = Scheduler(eng, preemption=args.preempt)
     rng = np.random.RandomState(0)
     if not args.static:
@@ -199,7 +228,18 @@ def main():
     total = sum(len(r.result) for r in sched.done.values())
     print(f"served {len(sched.done)} requests / {total} tokens in {dt:.1f}s "
           f"({1e3*dt/max(total,1):.1f} ms/token)")
-    if not args.static:
+    if router is not None:
+        rep = router.report()
+        steps = sum(h["health"]["wall_step"] for h in rep["replicas"])
+        print(f"router: {rep['n_replicas']} replicas ({rep['n_live']} "
+              f"live)  {rep['ticks']} ticks / {steps} engine steps  "
+              f"failovers={rep['n_failovers']} "
+              f"(ckpt-recovered={rep['recovered_with_checkpoint']} "
+              f"reprefill={rep['recovered_reprefill']} "
+              f"requeued={rep['requeued_items']})  "
+              f"rebalanced={rep['n_rebalanced']}  "
+              f"lost={rep['lost_requests']}")
+    if not args.static and router is None:
         # first token of each request comes from its prefill, not a decode
         # step, so decode-step utilization excludes it
         decode_tokens = total - len(sched.done)
@@ -224,17 +264,6 @@ def main():
               f"{'async' if args.async_pipeline else 'sync'} pipeline)  "
               f"blocking {s.blocking_d2h} D2H / {s.blocking_h2d} H2D  "
               f"async {s.async_d2h} D2H / {s.async_h2d} H2D")
-        if args.recovery:
-            rewinds = sum(r.telemetry.rewinds for r in sched.done.values()
-                          if r.telemetry is not None)
-            print(f"recovery: {rewinds} rewalk rewinds")
-        # per-request terminal status: every request ends completed,
-        # shed-resumed (survived a ladder shed) or quarantined
-        statuses = {}
-        for r in sched.done.values():
-            statuses[r.status] = statuses.get(r.status, 0) + 1
-        print("terminal: " + "  ".join(
-            f"{k}={v}" for k, v in sorted(statuses.items())))
         if chaos is not None or budget is not None:
             rs = eng.robust_snapshot()
             print(f"chaos: injected={rs['injected']} "
@@ -247,11 +276,25 @@ def main():
                   f"stash peak {rs['peak_stash_bytes']}B"
                   + (f" / budget {rs['stash_budget_bytes']}B"
                      if budget is not None else ""))
+    if not args.static:
+        if args.recovery:
+            rewinds = sum(r.telemetry.rewinds for r in sched.done.values()
+                          if r.telemetry is not None)
+            print(f"recovery: {rewinds} rewalk rewinds")
+        # per-request terminal status: every request ends completed,
+        # shed-resumed (survived a ladder shed) or quarantined
+        statuses = {}
+        for r in sched.done.values():
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+        print("terminal: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(statuses.items())))
+        n_pre = sum(r.sched.n_preemptions for r in router.replicas) \
+            if router is not None else sched.n_preemptions
         hits = [m["deadline_hit"] for m in sched.metrics.values()
                 if m["deadline_hit"] is not None]
-        if hits or sched.n_preemptions:
+        if hits or n_pre:
             rate = 100 * sum(hits) / len(hits) if hits else 100.0
-            print(f"slo: {sched.n_preemptions} preemptions  "
+            print(f"slo: {n_pre} preemptions  "
                   f"deadline hit rate {rate:.0f}% "
                   f"({sum(hits)}/{len(hits)} deadlined requests)")
 

@@ -211,6 +211,11 @@ class LaneSnapshot:
     stashed: Optional[Dict[Tuple[int, int], Any]] = None  # host-store pages
     pending_thaw: bool = False
     urgency: float = 0.0
+    # False for checkpoint snapshots (``checkpoint_lane``): the stashed
+    # pages are shared copies still owned by the live controller, so no
+    # ``exported_bytes`` accounting moved and none must move back on
+    # resume/discard
+    exported: bool = True
 
     @property
     def started(self) -> bool:
@@ -612,6 +617,21 @@ class _LaneEngineBase:
     @property
     def has_free_lane(self) -> bool:
         return any(l.request is None for l in self.lanes)
+
+    def health(self) -> Dict[str, Any]:
+        """Replica-facing liveness/occupancy facade, read by the router's
+        placement scorer and heartbeat monitor.  Host-side gauges only —
+        no device sync."""
+        return {
+            "wall_step": self.wall_step,
+            "n_lanes": self.n_lanes,
+            "n_active_lanes": self.n_active_lanes,
+            "has_free_lane": self.has_free_lane,
+            "admission_pressure": self.admission_pressure,
+            "ladder_stage": self.ladder_stage,
+            "active_uids": sorted(l.request.uid for l in self.lanes
+                                  if l.request is not None),
+        }
 
     def _free_lane(self) -> int:
         for i, l in enumerate(self.lanes):
@@ -2075,7 +2095,11 @@ class PagedContinuousEngine(_LaneEngineBase):
         for k, slot in self.ctl.staged_keys.items():
             if k[1] == lane:
                 occupied.setdefault(k[0], set()).add(slot)
-        want = sorted(gid_score, key=lambda g: -gid_score[g])[:self.S_stage]
+        # canonical tie-break (gid) mirrors thaw_lane's: the staging
+        # schedule must be invariant to frozen_meta insertion order, which
+        # a suspend/resume migration rebuilds
+        want = sorted(gid_score,
+                      key=lambda g: (-gid_score[g], g))[:self.S_stage]
         page, kvh, hd = self.state.k.shape[3:]
         for gid in want:
             if gid in staged_gids:
@@ -2243,11 +2267,16 @@ class PagedContinuousEngine(_LaneEngineBase):
         if l.request is None:
             return None
         snap = self._snap_host(lane)
-        # speculative staged copies are device bytes in THIS lane's staging
-        # slots — they don't survive the lane changing hands; forget them
-        # (a misprediction-grade loss: re-prefetch is cheap)
-        for key in [k for k in self.ctl.staged_keys if k[1] == lane]:
-            del self.ctl.staged_keys[key]
+        # speculative staged copies survive the lane changing hands: the
+        # pulled pool slice spans all P_total slots (staging included) and
+        # every lane reserves the same [P, P_total) staging range, so the
+        # slice push restores the bytes verbatim on any destination lane.
+        # The slot bookkeeping rides the export (4th tuple element) —
+        # dropping it here is what used to break ≥4-cycle parity under
+        # recovery: a forgotten staged page de-scheduled the resumed
+        # lane's thaw remap, and the timing shift fed an
+        # entropy-triggered Rewalk a different path
+        # (docs/robustness.md parity envelope)
         pool, fstate = self._pull_lanes([lane])
         # deep-copy out of the reused staging buffers — the next pull
         # overwrites them, the snapshot may outlive many ticks
@@ -2290,8 +2319,10 @@ class PagedContinuousEngine(_LaneEngineBase):
         assert l.request is None, f"lane {lane} is busy"
         assert lane not in self.prefills, f"lane {lane} has a prefill queued"
         # host store first: thaw/swap bookkeeping must see the pages the
-        # pushed page table expects to find stashed
-        self.ctl.import_lane(lane, snap.stashed)
+        # pushed page table expects to find stashed.  A checkpoint
+        # snapshot's bytes were never moved out of the controller's
+        # accounting, so nothing moves back (counted=False)
+        self.ctl.import_lane(lane, snap.stashed, counted=snap.exported)
         self._push_lanes(snap.pool, snap.fstate, [lane])
         # the snapshot's pool slice may carry quantized resident pages —
         # rebuild the destination lane's packed-residency ledger
@@ -2320,10 +2351,50 @@ class PagedContinuousEngine(_LaneEngineBase):
         the controller store precisely so lane reuse could not drop
         them).  Dropping the snapshot without this call leaks both the
         page bytes and the ``exported_bytes`` gauge they are counted
-        under — the budget ladder would see phantom pressure forever."""
-        if snap.stashed:
+        under — the budget ladder would see phantom pressure forever.
+        Checkpoint snapshots (``exported=False``) never moved accounting
+        out of the controller, so dropping them is free."""
+        if snap.stashed and snap.exported:
             self.ctl.release_exported(snap.stashed)
-            snap.stashed = None
+        snap.stashed = None
+
+    def checkpoint_lane(self, lane: int) -> Optional[LaneSnapshot]:
+        """Non-destructive ``_suspend_decode``: capture a resume-exact
+        snapshot of a decoding lane WITHOUT freeing it — the replica
+        router's periodic checkpoint, mirrored off-engine so a crashed
+        replica's lanes can be re-placed on a survivor token-identically
+        from the last checkpoint.
+
+        The lane keeps running; the controller keeps owning its host
+        store (``copy_lane`` shares the immutable page payloads and
+        copies the mutable freeze metas), so ``exported_bytes`` does not
+        move — the snapshot is marked ``exported=False`` and both
+        ``resume_lane`` and ``discard_snapshot`` skip the accounting they
+        would move back for a real export.  Returns None for an idle lane
+        or one still mid-chunked-prefill (no decode progress to
+        checkpoint — failover re-prefills those)."""
+        self.flush()
+        l = self.lanes[lane]
+        pp = self.prefills.get(lane)
+        if l.request is None or (pp is not None and not pp.over):
+            return None
+        snap = self._snap_host(lane)
+        pool, fstate = self._pull_lanes([lane])
+        snap.pool = {f: a.copy() for f, a in pool.items()}
+        snap.fstate = {f: a.copy() for f, a in fstate.items()}
+        rec = jax.device_get(self.state.recovery)
+        snap.recovery = {f: np.asarray(a)[lane].item()
+                         for f, a in zip(RecoveryState._fields, rec)}
+        snap.tail_slot = self.tail_slot[:, lane].copy()
+        snap.stashed = self.ctl.copy_lane(lane)
+        snap.pending_thaw = lane in self.pending_thaws
+        snap.urgency = float(self._urgency[lane])
+        snap.exported = False
+        self.events.append({"event": "checkpoint", "uid": snap.req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "generated": len(snap.generated),
+                            "stashed_pages": len(snap.stashed)})
+        return snap
 
     def _retire(self, lane: int) -> Request:
         l = self.lanes[lane]

@@ -47,8 +47,15 @@ import time
 import zlib
 from typing import Any, Callable, Dict, Optional, Tuple
 
-# the injection-point catalogue (docs/robustness.md keeps the prose)
-SITES = ("pull", "push", "ring", "stage", "stash", "nan")
+# the injection-point catalogue (docs/robustness.md keeps the prose).
+# The replica_* sites are consulted by the router's per-replica step
+# driver, not by engine endpoints: ``replica_crash`` permanently fences
+# the replica (kind "crash"), ``replica_hang`` makes it skip
+# ``attempts`` consecutive steps without progress (kind "hang" — the
+# router's heartbeat monitor declares it dead past its threshold),
+# ``replica_slow`` sleeps ``delay_s`` before the step (kind "slow")
+SITES = ("pull", "push", "ring", "stage", "stash", "nan",
+         "replica_crash", "replica_hang", "replica_slow")
 
 
 class InjectedFault(RuntimeError):
@@ -68,8 +75,10 @@ class FaultPlan:
     """What one scheduled fault does to its operation.
 
     ``kind``: ``fail`` (the attempt raises; retried), ``slow`` (the
-    attempt is delayed by ``delay_s``, then succeeds) or ``nan``
-    (engine-level: poison one lane's logits).  ``attempts`` is how many
+    attempt is delayed by ``delay_s``, then succeeds), ``nan``
+    (engine-level: poison one lane's logits), ``crash`` / ``hang``
+    (replica-level, consumed by the router's step driver — see the
+    ``replica_*`` sites).  ``attempts`` is how many
     consecutive attempts of the SAME operation fail before it succeeds —
     ``attempts > RetryPolicy.max_retries`` makes the operation fail
     permanently (breaker food).  ``lane`` targets a specific engine lane
@@ -109,9 +118,15 @@ class FaultSchedule:
             return p
         rate = self.rates.get(site, 0.0)
         if rate and self._draw(site, op_index) < rate:
-            # the nan site has no transfer to fail; a rate-drawn fault
-            # there poisons the step's logits instead
-            kind = "nan" if site == "nan" else "fail"
+            # sites without a transfer to fail draw their own kind: nan
+            # poisons the step's logits, replica_* act on the whole
+            # replica (crash fences it, hang skips `attempts` steps,
+            # slow sleeps)
+            kind = "fail"
+            if site == "nan":
+                kind = "nan"
+            elif site.startswith("replica_"):
+                kind = site.split("_", 1)[1]
             return FaultPlan(kind=kind, attempts=self.attempts)
         return None
 

@@ -1,0 +1,477 @@
+"""Replica router: health-checked failover over N in-process engine
+replicas with freeze-native lane migration.
+
+The paper's contract — frozen/stashed KV is *preserved, not evicted* —
+gives this engine a capability eviction-based servers don't have: a
+suspended lane's ``LaneSnapshot`` (host-side pool slice + host-store
+pages + snapshot-stable sampling key) resumes **token-identically on a
+different replica** (``export_lane``/``import_lane``).  ``ReplicaRouter``
+builds the serving layer that exploits it:
+
+* **SLO-aware placement** — each submitted request is placed on the live
+  replica with the lowest score: occupancy (active lanes + queue depth,
+  in lane units) + ``admission_pressure`` (stash + exported-snapshot
+  bytes over budget) + a deadline-headroom penalty (estimated start
+  delay over remaining slack) when the request carries an SLO.
+
+* **Deterministic replica faults** — each replica owns a
+  ``FaultInjector`` seeded ``seed + 7919 * rid`` over the shared
+  ``ChaosConfig``, consulted once per router tick at the ``replica_*``
+  sites: ``replica_crash`` fences the replica permanently,
+  ``replica_hang`` skips ``attempts`` consecutive ticks (no progress —
+  the heartbeat monitor sees a frozen ``wall_step``), ``replica_slow``
+  sleeps before the step.  Same seed + same trace = same kill points;
+  chaos runs are replayable.
+
+* **Heartbeat health-checking** — a live replica *with work* whose
+  engine ``wall_step`` fails to advance for ``hang_threshold``
+  consecutive ticks is declared dead and failed over; idle replicas
+  always beat.  Transient hangs (shorter than the threshold) recover
+  with no failover.
+
+* **Incremental lane checkpointing** — every ``checkpoint_every`` ticks
+  the router mirrors each decoding lane's ``checkpoint_lane`` snapshot
+  (non-destructive: the lane keeps running, the controller keeps owning
+  its store — ``exported=False`` accounting) into a router-side store.
+
+* **Failover** — on replica death, (1) the engine's retired-but-
+  unreported backlog is harvested (those finished — nothing to redo),
+  (2) queued work and engine-suspended snapshots re-place on survivors
+  via ``Scheduler.adopt`` (snapshots resume token-identically — the
+  payload is host numpy, valid on any same-config replica), and (3)
+  each in-flight lane resumes from its last router-side checkpoint on
+  the best survivor — token-identical from the checkpoint, re-decoding
+  the journaled committed tokens on the way — falling back to a fresh
+  re-prefill of the original request when no checkpoint exists (e.g.
+  death mid-prefill).  Zero requests are lost either way; the
+  checkpoint cadence only bounds how much decode work is repeated.
+
+* **Drain / rebalance** — ``drain_replica`` migrates an
+  overloaded-but-alive replica's lanes + queue to the others through
+  the same suspend/adopt path; ``step`` auto-rebalances one queued item
+  per tick toward an idle replica so one replica's backlog cannot
+  starve while another sits empty.
+
+Everything here is host-side numpy/bookkeeping — no jax import, no
+device syncs beyond what the engines' own step/checkpoint paths do.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import LaneSnapshot, PagedContinuousEngine, Request
+from repro.serving.faults import (ChaosConfig, FaultInjector, FaultPlan,
+                                  FaultSchedule)
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler
+
+# per-replica seed spacing for the shared chaos config (any odd prime
+# keeps the per-site crc32 streams disjoint across replicas)
+_REPLICA_SEED_STRIDE = 7919
+
+
+class ReplicaHandle:
+    """One in-process replica: its engine, its scheduler, its fault
+    injector and its health bookkeeping."""
+
+    def __init__(self, rid: int, engine: PagedContinuousEngine,
+                 sched: Scheduler,
+                 injector: Optional[FaultInjector] = None):
+        self.rid = rid
+        self.engine = engine
+        self.sched = sched
+        self.injector = injector
+        self.alive = True
+        self.fence_reason: Optional[str] = None
+        self.hang_left = 0          # remaining skipped ticks of a hang
+        self.no_progress = 0        # consecutive heartbeat misses
+        self.last_wall = -1
+        self.n_hang_ticks = 0
+        self.n_slow_ticks = 0
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.sched.queue) or self.sched.busy
+
+    def fence(self, reason: str) -> None:
+        """Mark dead: the router never steps a fenced replica again."""
+        self.alive = False
+        self.fence_reason = reason
+
+
+class ReplicaRouter:
+    """Front end spreading requests over N replicas (each its own
+    ``Scheduler`` + ``PagedContinuousEngine``) with health-checked
+    failover.  All replicas must share one model config/params (a
+    snapshot's pool slice only pushes into an identical layout); the
+    router gives every scheduler its own clock-shared view by
+    constructing them itself.
+
+    ``chaos`` seeds the deterministic replica-level fault injection
+    (``replica_*`` sites; engine-level sites stay with each engine's own
+    chaos config).  ``kill_at=(rid, tick)`` is the explicit mid-trace
+    crash switch benchmarks and ``--kill-replica-at`` use."""
+
+    def __init__(self, engines: List[PagedContinuousEngine],
+                 checkpoint_every: int = 8,
+                 hang_threshold: int = 3,
+                 chaos: Optional[ChaosConfig] = None,
+                 kill_at: Optional[Tuple[int, int]] = None,
+                 clock=time.monotonic,
+                 sched_kw: Optional[Dict[str, Any]] = None):
+        assert engines, "router needs at least one replica engine"
+        assert checkpoint_every >= 1 and hang_threshold >= 1
+        self.clock = clock
+        self.checkpoint_every = checkpoint_every
+        self.hang_threshold = hang_threshold
+        self.replicas: List[ReplicaHandle] = []
+        for rid, eng in enumerate(engines):
+            injector = None
+            if chaos is not None or (kill_at and kill_at[0] == rid):
+                base = chaos or ChaosConfig()
+                explicit = dict(base.explicit)
+                if kill_at and kill_at[0] == rid:
+                    explicit[("replica_crash", kill_at[1])] = \
+                        FaultPlan(kind="crash")
+                injector = FaultInjector(FaultSchedule(
+                    seed=base.seed + _REPLICA_SEED_STRIDE * rid,
+                    rates=base.rates, attempts=base.attempts,
+                    explicit=explicit))
+            sched = Scheduler(eng, clock=clock, **(sched_kw or {}))
+            self.replicas.append(ReplicaHandle(rid, eng, sched, injector))
+        self._uid = 0
+        self.requests: Dict[int, Request] = {}
+        self.placed: Dict[int, int] = {}       # uid -> rid
+        self.done: Dict[int, Request] = {}
+        self.metrics: Dict[int, Dict[str, Any]] = {}
+        # committed-token journal: the last harvested ``generated`` of
+        # each in-flight lane (telemetry + the failover consistency
+        # check; under entropy-recovery rewinds the list can shrink —
+        # it mirrors the lane, it does not promise monotonicity)
+        self.journal: Dict[int, List[int]] = {}
+        self.journal_at_fail: Dict[int, List[int]] = {}
+        # router-side checkpoint mirror: uid -> (rid, LaneSnapshot)
+        self.checkpoints: Dict[int, Tuple[int, LaneSnapshot]] = {}
+        self.tick = 0
+        self.n_failovers = 0
+        self.recovered_with_checkpoint = 0
+        self.recovered_reprefill = 0
+        self.requeued_items = 0
+        self.n_rebalanced = 0
+        self.events: List[Dict[str, Any]] = []
+
+    # ---------------- placement ---------------- #
+    def _live(self) -> List[ReplicaHandle]:
+        return [r for r in self.replicas if r.alive]
+
+    def _start_delay_s(self, r: ReplicaHandle) -> float:
+        """Estimated wall delay before a new arrival starts on replica
+        ``r``: zero with a free lane, else time for the shortest running
+        lane to retire plus the service of everything queued ahead."""
+        sched = r.sched
+        if r.engine.has_free_lane and not sched.queue:
+            return 0.0
+        running = [i for i, l in enumerate(r.engine.lanes)
+                   if l.request is not None]
+        wait = sched._est_free_s(running)
+        for entry in sched.queue:
+            wait += sched._est_service_s(entry[-1])
+        return wait
+
+    def _score(self, r: ReplicaHandle, req: Request,
+               deadline_t: Optional[float]) -> Tuple[float, int]:
+        """Placement score, lower better: occupancy in lane units +
+        admission pressure + deadline-headroom penalty (start delay over
+        remaining slack).  The rid tie-break keeps placement
+        deterministic."""
+        h = r.engine.health()
+        occupancy = (h["n_active_lanes"] + len(r.sched.queue)) \
+            / max(h["n_lanes"], 1)
+        score = occupancy + h["admission_pressure"]
+        if deadline_t is not None:
+            slack = max(deadline_t - self.clock(), 1e-3)
+            score += self._start_delay_s(r) / slack
+        return (score, r.rid)
+
+    def _best_replica(self, req: Request,
+                      deadline_t: Optional[float] = None,
+                      exclude: Tuple[int, ...] = ()) -> ReplicaHandle:
+        cands = [r for r in self._live() if r.rid not in exclude]
+        if not cands:
+            raise RuntimeError("no live replica to place work on")
+        return min(cands, key=lambda r: self._score(r, req, deadline_t))
+
+    def submit(self, prompt: np.ndarray, n_tokens: int,
+               sampling: SamplingParams = SamplingParams(),
+               priority: int = 0,
+               deadline_ms: Optional[float] = None,
+               slo_tokens_per_s: Optional[float] = None) -> int:
+        """Router-global uid; the request lands on the best-scored live
+        replica's queue immediately."""
+        self._uid += 1
+        req = Request(self._uid, np.asarray(prompt, np.int32), n_tokens,
+                      sampling, priority=priority, deadline_ms=deadline_ms,
+                      slo_tokens_per_s=slo_tokens_per_s)
+        self.requests[req.uid] = req
+        now = self.clock()
+        deadlines = []
+        if deadline_ms is not None:
+            deadlines.append(now + deadline_ms / 1e3)
+        if slo_tokens_per_s:
+            deadlines.append(now + n_tokens / slo_tokens_per_s)
+        deadline_t = min(deadlines) if deadlines else None
+        r = self._best_replica(req, deadline_t)
+        r.sched.enqueue(req, deadline_t=deadline_t)
+        self.placed[req.uid] = r.rid
+        return req.uid
+
+    # ---------------- faults + heartbeat ---------------- #
+    def _consult_faults(self, r: ReplicaHandle) -> str:
+        """One deterministic fault draw per site per tick; returns the
+        replica's disposition for this tick: "crash", "skip" (hanging)
+        or "step"."""
+        inj = r.injector
+        if inj is not None:
+            plan = inj.next_plan("replica_crash")
+            if plan is not None and plan.kind in ("crash", "fail"):
+                return "crash"
+            plan = inj.next_plan("replica_hang")
+            if plan is not None and plan.kind in ("hang", "fail"):
+                r.hang_left = max(r.hang_left, plan.attempts)
+            plan = inj.next_plan("replica_slow")
+            if plan is not None and plan.kind in ("slow", "fail"):
+                r.n_slow_ticks += 1
+                if plan.delay_s:
+                    time.sleep(plan.delay_s)
+        if r.hang_left > 0:
+            r.hang_left -= 1
+            r.n_hang_ticks += 1
+            return "skip"
+        return "step"
+
+    def _heartbeat(self, r: ReplicaHandle) -> None:
+        """Declare a replica dead after ``hang_threshold`` consecutive
+        ticks of work-without-progress (frozen ``wall_step``).  The
+        check is a host counter compare — no device sync."""
+        wall = r.engine.wall_step
+        if not r.busy or wall != r.last_wall:
+            r.no_progress = 0
+        else:
+            r.no_progress += 1
+        r.last_wall = wall
+        if r.no_progress >= self.hang_threshold:
+            self._failover(r, "hang")
+
+    # ---------------- journal + checkpoints ---------------- #
+    def _harvest(self, r: ReplicaHandle, finished: List[int]) -> None:
+        for uid in finished:
+            self.done[uid] = r.sched.done[uid]
+            self.metrics[uid] = r.sched.metrics[uid]
+            self.journal[uid] = list(self.done[uid].result)
+            self.checkpoints.pop(uid, None)
+        for l in r.engine.lanes:
+            if l.request is not None:
+                self.journal[l.request.uid] = list(l.generated)
+
+    def _checkpoint_tick(self, r: ReplicaHandle) -> None:
+        """Mirror every decoding lane's snapshot into the router store.
+        Replacing a prior checkpoint is free — checkpoint snapshots
+        never own exported accounting (``exported=False``)."""
+        for lane, l in enumerate(r.engine.lanes):
+            if l.request is None:
+                continue
+            snap = r.engine.checkpoint_lane(lane)
+            if snap is not None:
+                self.checkpoints[snap.req.uid] = (r.rid, snap)
+
+    # ---------------- failover + migration ---------------- #
+    def _failover(self, r: ReplicaHandle, reason: str) -> None:
+        """Fence a dead replica and re-place every piece of its work on
+        survivors: harvested retirements, queued items, engine-suspended
+        snapshots, and each in-flight lane from its last checkpoint
+        (re-prefill fallback without one)."""
+        r.fence(reason)
+        self.n_failovers += 1
+        self.events.append({"event": "failover", "rid": r.rid,
+                            "reason": reason, "tick": self.tick})
+        eng, sched = r.engine, r.sched
+        # 1) retirements stranded in the engine's backlog already
+        #    finished — harvest, don't redo.  (The async ring may also
+        #    hold a computed-but-uncommitted step; it is NOT drained —
+        #    a dead replica's device state is unreachable by assumption,
+        #    so that step re-decodes from the checkpoint like any other
+        #    post-checkpoint token.)
+        for req in list(eng._retired_backlog):
+            self.done[req.uid] = req
+            self.metrics[req.uid] = sched.metrics[req.uid]
+            self.checkpoints.pop(req.uid, None)
+        # 2) queued work + suspended snapshots re-place as-is (host-side
+        #    payloads, valid on any same-config replica)
+        pending = sched.extract_pending()
+        for snap in eng.drain_suspended():
+            pending.append((snap, sched.metrics[snap.req.uid]))
+        for item, row in pending:
+            req = item.req if isinstance(item, LaneSnapshot) else item
+            if req.result is not None:
+                continue
+            tgt = self._best_replica(req, row.get("deadline_t"),
+                                     exclude=(r.rid,))
+            tgt.sched.adopt(item, row)
+            self.placed[req.uid] = tgt.rid
+            self.requeued_items += 1
+        # 3) in-flight lanes: checkpoint resume, else re-prefill
+        inflight: Dict[int, Request] = {}
+        for l in eng.lanes:
+            if l.request is not None and l.request.result is None:
+                inflight[l.request.uid] = l.request
+        for pp in getattr(eng, "prefills", {}).values():
+            if pp.req.result is None:
+                inflight.setdefault(pp.req.uid, pp.req)
+        for uid, req in inflight.items():
+            row = sched.metrics[uid]
+            self.journal_at_fail[uid] = list(self.journal.get(uid, []))
+            ck = self.checkpoints.get(uid)
+            tgt = self._best_replica(req, row.get("deadline_t"),
+                                     exclude=(r.rid,))
+            if ck is not None:
+                tgt.sched.adopt(ck[1], row)
+                self.recovered_with_checkpoint += 1
+            else:
+                # fresh decode of the same request object: the dead
+                # replica is fenced (never stepped), so its stale lane
+                # reference cannot race the re-prefill
+                tgt.sched.enqueue(req, deadline_t=row.get("deadline_t"))
+                self.recovered_reprefill += 1
+            self.placed[uid] = tgt.rid
+            self.events.append({"event": "recover", "uid": uid,
+                                "rid": tgt.rid, "tick": self.tick,
+                                "from_checkpoint": ck is not None})
+
+    def drain_replica(self, rid: int) -> int:
+        """Migrate an overloaded-but-alive replica's entire load (queue
+        + running lanes, via the token-identical suspend path) onto the
+        other live replicas; returns items moved.  The replica stays
+        live and immediately placeable — this is rebalancing, not
+        fencing."""
+        r = self.replicas[rid]
+        assert r.alive, "drain a dead replica via failover, not drain"
+        moved = 0
+        for item, row in r.sched.extract_pending():
+            req = item.req if isinstance(item, LaneSnapshot) else item
+            tgt = self._best_replica(req, row.get("deadline_t"),
+                                     exclude=(rid,))
+            tgt.sched.adopt(item, row)
+            self.placed[req.uid] = tgt.rid
+            moved += 1
+        for lane, l in enumerate(r.engine.lanes):
+            if l.request is None:
+                continue
+            uid = l.request.uid
+            snap = r.engine.suspend_lane(lane)
+            if snap is None:
+                continue
+            row = r.sched.metrics[uid]
+            tgt = self._best_replica(snap.req, row.get("deadline_t"),
+                                     exclude=(rid,))
+            tgt.sched.adopt(snap, row)
+            self.placed[uid] = tgt.rid
+            moved += 1
+        return moved
+
+    def _rebalance(self) -> None:
+        """Move one queued item per tick from the deepest queue to a
+        live replica with a free lane and nothing queued — bounded-rate,
+        so migration can never thrash."""
+        live = self._live()
+        if len(live) < 2:
+            return
+        src = max(live, key=lambda r: len(r.sched.queue))
+        if len(src.sched.queue) < 2:
+            return
+        idle = [r for r in live if r is not src and not r.sched.queue
+                and r.engine.has_free_lane
+                and r.engine.admission_pressure
+                < r.engine.ladder_cfg.throttle_admissions]
+        if not idle:
+            return
+        entries = src.sched.extract_pending()
+        item, row = entries.pop(0)
+        for it, rw in entries:
+            src.sched.adopt(it, rw)
+        req = item.req if isinstance(item, LaneSnapshot) else item
+        tgt = min(idle, key=lambda r: self._score(r, req,
+                                                  row.get("deadline_t")))
+        tgt.sched.adopt(item, row)
+        self.placed[req.uid] = tgt.rid
+        self.n_rebalanced += 1
+
+    # ---------------- serving loop ---------------- #
+    def step(self) -> List[int]:
+        """One router tick: fault draws, one scheduler step per live
+        replica with work, journal harvest, heartbeat checks, the
+        checkpoint cadence and one bounded rebalance move.  Returns the
+        uids that finished this tick."""
+        self.tick += 1
+        finished: List[int] = []
+        for r in self._live():
+            disposition = self._consult_faults(r)
+            if disposition == "crash":
+                self._failover(r, "crash")
+                continue
+            if disposition == "skip" or not r.busy:
+                continue
+            done = r.sched.step()
+            self._harvest(r, done)
+            finished.extend(done)
+        for r in self._live():
+            self._heartbeat(r)
+        if self.tick % self.checkpoint_every == 0:
+            for r in self._live():
+                self._checkpoint_tick(r)
+        self._rebalance()
+        return finished
+
+    @property
+    def busy(self) -> bool:
+        return any(r.busy for r in self._live())
+
+    def pending_uids(self) -> List[int]:
+        return [u for u in self.requests if u not in self.done]
+
+    def run(self, max_ticks: int = 200_000) -> None:
+        """Serve until every submitted request is done.  ``max_ticks``
+        is a safety backstop — hitting it means work was lost, which the
+        zero-lost-requests invariant (and the soak tests) treat as a
+        failure, not a quiet exit."""
+        while self.pending_uids() and self.tick < max_ticks:
+            if not self._live():
+                raise RuntimeError("all replicas dead; "
+                                   f"lost={self.pending_uids()}")
+            self.step()
+
+    # ---------------- reporting ---------------- #
+    def report(self) -> Dict[str, Any]:
+        lost = self.pending_uids()
+        return {
+            "ticks": self.tick,
+            "n_replicas": len(self.replicas),
+            "n_live": len(self._live()),
+            "submitted": len(self.requests),
+            "completed": len(self.done),
+            "lost_requests": len(lost),
+            "n_failovers": self.n_failovers,
+            "recovered_with_checkpoint": self.recovered_with_checkpoint,
+            "recovered_reprefill": self.recovered_reprefill,
+            "requeued_items": self.requeued_items,
+            "n_rebalanced": self.n_rebalanced,
+            "replicas": [{
+                "rid": r.rid, "alive": r.alive,
+                "fence_reason": r.fence_reason,
+                "n_hang_ticks": r.n_hang_ticks,
+                "n_slow_ticks": r.n_slow_ticks,
+                "health": r.engine.health(),
+            } for r in self.replicas],
+        }

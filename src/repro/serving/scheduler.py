@@ -71,7 +71,15 @@ class Scheduler:
     ``policy="fifo"`` ignores priorities and deadlines entirely (pure
     submission order, no preemption) — the pre-PR-5 behaviour, kept as
     the benchmark baseline.  ``clock`` is injectable for deterministic
-    tests; it must be monotone seconds."""
+    tests; it must be monotone seconds.
+
+    ``aging_s`` bounds starvation across the strict classes: a queued
+    request's *effective* class drops by one (toward 0 = most important)
+    for every ``aging_s`` seconds it has waited, so a background request
+    under a permanent foreground flood (or a router throttle) is
+    eventually admitted instead of starving forever.  Running lanes keep
+    their raw class — aging changes who is admitted next, never who is
+    preempted."""
 
     def __init__(self,
                  engine: Union[Engine, ContinuousEngine,
@@ -79,6 +87,7 @@ class Scheduler:
                  batch_size: Optional[int] = None, pad_id: int = 0,
                  policy: str = "slo",
                  preemption: bool = True,
+                 aging_s: Optional[float] = None,
                  clock=time.monotonic, **kw):
         if isinstance(engine, (ContinuousEngine, PagedContinuousEngine)):
             self.engine = engine
@@ -88,6 +97,7 @@ class Scheduler:
         assert policy in ("slo", "fifo"), policy
         self.policy = policy
         self.preemption = preemption and policy == "slo"
+        self.aging_s = aging_s if policy == "slo" else None
         self.clock = clock
         # heap of (priority, deadline_t, seq, item); item is a Request or
         # a LaneSnapshot (a preempted victim awaiting resume).  Under
@@ -106,6 +116,31 @@ class Scheduler:
     def _deadline_t(self, uid: int) -> Optional[float]:
         return self.metrics[uid]["deadline_t"]
 
+    def _eff_priority(self, req: Request) -> int:
+        """The request's class as admission ordering sees it: raw class
+        minus one per ``aging_s`` seconds waited (floored at 0)."""
+        if self.aging_s is None:
+            return req.priority
+        waited = self.clock() - self.metrics[req.uid]["arrival_t"]
+        return max(0, req.priority - int(waited / self.aging_s))
+
+    def _apply_aging(self) -> None:
+        """Re-heap the queue when waiting has promoted any entry's
+        effective class — heap keys are computed at push time, so a
+        promotion invalidates the stored order.  O(n log n) only on the
+        passes where a promotion actually crossed an ``aging_s``
+        boundary; a no-op scan otherwise."""
+        if self.aging_s is None or not self.queue:
+            return
+        for key0, _, _, item in self.queue:
+            req = item.req if isinstance(item, LaneSnapshot) else item
+            if self._eff_priority(req) != key0:
+                items = [e[-1] for e in self.queue]
+                self.queue = []
+                for it in items:
+                    self._push(it)
+                return
+
     def _push(self, item: Union[Request, LaneSnapshot]) -> None:
         # the tie-break is the request's ORIGINAL submission seq, not a
         # fresh counter: a preempted victim re-enters the queue ahead of
@@ -120,7 +155,7 @@ class Scheduler:
             key = (0, _INF)
         else:
             dl = self._deadline_t(req.uid)
-            key = (req.priority, _INF if dl is None else dl)
+            key = (self._eff_priority(req), _INF if dl is None else dl)
         heapq.heappush(self.queue,
                        (*key, self.metrics[req.uid]["seq"], item))
 
@@ -154,6 +189,66 @@ class Scheduler:
         }
         self._push(req)
         return self._uid
+
+    # ---------------- router hand-off (serving/router.py) ---------- #
+    def enqueue(self, req: Request,
+                deadline_t: Optional[float] = None) -> int:
+        """Insert a pre-built ``Request`` PRESERVING its uid — the
+        router's placement path (router-global uids) and the re-prefill
+        failover fallback both re-enqueue the same request object on a
+        different replica.  ``deadline_t`` carries an absolute deadline
+        already computed against the shared clock (failed-over work keeps
+        its original deadline; None recomputes from the request's SLO
+        fields as ``submit`` would)."""
+        now = self.clock()
+        if deadline_t is None:
+            deadlines = []
+            if req.deadline_ms is not None:
+                deadlines.append(now + req.deadline_ms / 1e3)
+            if req.slo_tokens_per_s:
+                deadlines.append(now + req.n_tokens / req.slo_tokens_per_s)
+            deadline_t = min(deadlines) if deadlines else None
+        self._uid = max(self._uid, req.uid)   # keep submit() uids unique
+        self._seq += 1
+        self.metrics[req.uid] = {
+            "arrival_t": now, "priority": req.priority, "seq": self._seq,
+            "deadline_t": deadline_t,
+            "finish_t": None, "deadline_hit": None, "preempted": 0,
+            "shed": 0,
+        }
+        self._push(req)
+        return req.uid
+
+    def adopt(self, item: Union[Request, LaneSnapshot],
+              row: Dict[str, Any]) -> None:
+        """Requeue work migrated from another replica — a drained /
+        failed-over ``LaneSnapshot`` or a still-queued ``Request`` —
+        carrying its SLO bookkeeping row.  The row's absolute times are
+        valid here because every replica of a router shares one clock;
+        only the seq tie-break is re-stamped (per-replica counters
+        collide), so adopt in the source's seq order to preserve
+        relative arrival."""
+        req = item.req if isinstance(item, LaneSnapshot) else item
+        self._uid = max(self._uid, req.uid)
+        self._seq += 1
+        row = dict(row)
+        row["seq"] = self._seq
+        self.metrics[req.uid] = row
+        self._push(item)
+
+    def extract_pending(self) -> List[tuple]:
+        """Drain the queue for redistribution (replica drain / death):
+        returns ``[(item, metrics_row), ...]`` in queue-seq order and
+        forgets the entries locally.  In-flight LANES are not touched —
+        the caller suspends or abandons those separately."""
+        entries = sorted(self.queue, key=lambda e: e[-2])
+        self.queue = []
+        out = []
+        for e in entries:
+            item = e[-1]
+            req = item.req if isinstance(item, LaneSnapshot) else item
+            out.append((item, self.metrics[req.uid]))
+        return out
 
     # ---------------- admission + preemption ---------------- #
     def _admit_free(self) -> None:
@@ -262,7 +357,7 @@ class Scheduler:
             wait = self._est_free_s(running)
             if self.clock() + wait + self._est_service_s(head) <= dl:
                 return                      # on track without preempting
-            victim = self._pick_victim(req.priority)
+            victim = self._pick_victim(self._eff_priority(req))
             if victim is None:
                 return                      # nothing less important runs
             if not isinstance(head, LaneSnapshot) \
@@ -313,6 +408,7 @@ class Scheduler:
         self._push(snap)
 
     def _schedule(self) -> None:
+        self._apply_aging()
         self._maybe_shed()
         self._maybe_preempt()
         self._admit_free()

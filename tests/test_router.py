@@ -1,0 +1,254 @@
+"""Replica router: SLO-aware placement, heartbeat health-checking,
+checkpoint-based failover and freeze-native lane migration across
+replicas (serving/router.py).
+
+Parity methodology: greedy + f32 + ``burst_prefill=False`` makes every
+request's token stream a pure function of the request itself, so an
+uninterrupted solo run is an exact reference for any placement,
+migration or recovery path.  Recovery is OFF, so the committed-token
+journal is append-only and the journal-prefix check is exact."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.invariants import audit_controller
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving.engine import PagedContinuousEngine, Request
+from repro.serving.faults import FaultInjector, FaultPlan, FaultSchedule
+from repro.serving.router import ReplicaRouter
+from repro.serving.sampling import SamplingParams
+
+
+@pytest.fixture(scope="module")
+def tiny_f32():
+    cfg = get_config("llama3-8b-tiny")
+    fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                             tau_mode="quantile", quantile=0.5, k_soft=1.0,
+                             recovery_enabled=False)
+    cfg = dataclasses.replace(cfg, freeze=fc, dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def mk_engine(cfg, params):
+    return PagedContinuousEngine(cfg, params, max_seq=128, n_lanes=2,
+                                 max_active_pages=4, prefill_chunk=8,
+                                 burst_prefill=False)
+
+
+def mk_router(cfg, params, n=3, **kw):
+    return ReplicaRouter([mk_engine(cfg, params) for _ in range(n)], **kw)
+
+
+@pytest.fixture(scope="module")
+def solo_ref(tiny_f32):
+    """Memoized uninterrupted per-request reference tokens (one shared
+    engine: lane trajectories are per-lane pure and the jit caches are
+    reused)."""
+    cfg, params = tiny_f32
+    eng = mk_engine(cfg, params)
+    cache = {}
+
+    def ref(prompt, n_tokens):
+        key = (prompt.tobytes(), n_tokens)
+        if key not in cache:
+            req = Request(1, prompt, n_tokens, SamplingParams.greedy())
+            eng.admit(req)
+            while req.result is None:
+                eng.step_once()
+            cache[key] = np.asarray(req.result)
+        return cache[key]
+    return ref
+
+
+def mixed_trace(cfg):
+    """Fixed mixed-SLO trace (same across soak seeds so the solo
+    references are computed once): background priority 5 + deadlined
+    foreground priority 0."""
+    rng = np.random.RandomState(0)
+    reqs = []
+    for _ in range(4):
+        reqs.append(dict(
+            prompt=rng.randint(0, cfg.vocab_size, size=16).astype(np.int32),
+            n_tokens=int(rng.randint(22, 30)),
+            sampling=SamplingParams.greedy(), priority=5))
+    for _ in range(2):
+        reqs.append(dict(
+            prompt=rng.randint(0, cfg.vocab_size, size=10).astype(np.int32),
+            n_tokens=8, sampling=SamplingParams.greedy(), priority=0,
+            deadline_ms=60_000.0))
+    return reqs
+
+
+def assert_parity_and_invariants(router, solo_ref, tag=""):
+    assert router.report()["lost_requests"] == 0, tag
+    for uid, req in router.requests.items():
+        want = solo_ref(np.asarray(req.prompt, np.int32), req.n_tokens)
+        np.testing.assert_array_equal(
+            want, np.asarray(router.done[uid].result),
+            err_msg=f"{tag} uid={uid}")
+    # journal-at-failure must be a prefix of the final tokens (recovery
+    # off -> the journal is append-only)
+    for uid, j in router.journal_at_fail.items():
+        assert list(np.asarray(router.done[uid].result))[:len(j)] \
+            == list(j), f"{tag} uid={uid}"
+    # exact stash/exported-bytes accounting on every survivor
+    for r in router.replicas:
+        if r.alive:
+            audit_controller(r.engine.ctl)
+
+
+class TestPlacement:
+    def test_submissions_spread_over_idle_replicas(self, tiny_f32):
+        cfg, params = tiny_f32
+        router = mk_router(cfg, params)
+        rng = np.random.RandomState(1)
+        for _ in range(3):
+            router.submit(rng.randint(0, cfg.vocab_size,
+                                      size=8).astype(np.int32), 4,
+                          SamplingParams.greedy())
+        # each landed on a different (previously least-loaded) replica
+        assert sorted(router.placed.values()) == [0, 1, 2]
+        router.run()
+        assert router.report()["lost_requests"] == 0
+
+    def test_report_shape(self, tiny_f32):
+        cfg, params = tiny_f32
+        router = mk_router(cfg, params, n=2)
+        rep = router.report()
+        assert rep["n_replicas"] == 2 and rep["n_live"] == 2
+        assert rep["lost_requests"] == 0 and rep["submitted"] == 0
+        assert len(rep["replicas"]) == 2
+        assert rep["replicas"][0]["health"]["n_active_lanes"] == 0
+
+
+class TestFailover:
+    def test_mid_trace_kill_zero_loss_token_parity(self, tiny_f32,
+                                                   solo_ref):
+        """Crash a replica mid-decode: every request still completes,
+        checkpoint-recovered lanes resume token-identically on a
+        survivor, and the journal/accounting audits hold."""
+        cfg, params = tiny_f32
+        router = mk_router(cfg, params, checkpoint_every=4,
+                           kill_at=(0, 14))
+        for kw in mixed_trace(cfg):
+            router.submit(**kw)
+        router.run()
+        rep = router.report()
+        assert rep["n_failovers"] == 1
+        assert not router.replicas[0].alive
+        assert router.replicas[0].fence_reason == "crash"
+        # the kill landed after two checkpoint cadences, so at least one
+        # in-flight lane recovered from a checkpoint
+        assert rep["recovered_with_checkpoint"] >= 1
+        assert_parity_and_invariants(router, solo_ref, "kill")
+
+    def test_transient_hang_recovers_without_failover(self, tiny_f32):
+        """A hang shorter than the heartbeat threshold must stall the
+        replica, then recover in place — no failover, nothing moved."""
+        cfg, params = tiny_f32
+        router = mk_router(cfg, params, n=2, hang_threshold=4)
+        router.replicas[0].injector = FaultInjector(FaultSchedule(
+            explicit={("replica_hang", 4): FaultPlan(kind="hang",
+                                                     attempts=2)}))
+        rng = np.random.RandomState(2)
+        for _ in range(3):
+            router.submit(rng.randint(0, cfg.vocab_size,
+                                      size=12).astype(np.int32), 12,
+                          SamplingParams.greedy())
+        router.run()
+        rep = router.report()
+        assert rep["n_failovers"] == 0 and rep["lost_requests"] == 0
+        assert router.replicas[0].n_hang_ticks == 2
+        assert all(r.alive for r in router.replicas)
+
+    def test_hard_hang_fails_over_via_heartbeat(self, tiny_f32, solo_ref):
+        """A hang past the threshold: the heartbeat (frozen wall_step
+        with work queued) declares the replica dead and its work
+        migrates — still zero loss, still token-identical."""
+        cfg, params = tiny_f32
+        router = mk_router(cfg, params, checkpoint_every=3,
+                           hang_threshold=3)
+        router.replicas[1].injector = FaultInjector(FaultSchedule(
+            explicit={("replica_hang", 8): FaultPlan(kind="hang",
+                                                     attempts=50)}))
+        for kw in mixed_trace(cfg):
+            router.submit(**kw)
+        router.run()
+        rep = router.report()
+        assert rep["n_failovers"] == 1
+        assert router.replicas[1].fence_reason == "hang"
+        assert_parity_and_invariants(router, solo_ref, "hang")
+
+
+class TestDrainRebalance:
+    def test_drain_replica_migrates_live_load(self, tiny_f32, solo_ref):
+        """drain_replica moves a live replica's queue + running lanes to
+        the others through the suspend/adopt path; the drained replica
+        ends empty but stays alive and placeable."""
+        cfg, params = tiny_f32
+        router = mk_router(cfg, params)
+        for kw in mixed_trace(cfg):
+            router.submit(**kw)
+        for _ in range(10):
+            router.step()
+        victim = router.replicas[0]
+        had_work = victim.busy
+        moved = router.drain_replica(0)
+        assert had_work and moved > 0
+        assert all(l.request is None for l in victim.engine.lanes)
+        assert not victim.sched.queue and victim.alive
+        router.run()
+        assert_parity_and_invariants(router, solo_ref, "drain")
+
+    def test_rebalance_moves_queue_toward_idle_replica(self, tiny_f32):
+        """Pile every request onto one replica's queue (adopt-level, as
+        a failover would): the per-tick rebalance must move queued work
+        to the idle replicas instead of letting them sit empty."""
+        cfg, params = tiny_f32
+        router = mk_router(cfg, params)
+        rng = np.random.RandomState(3)
+        for _ in range(6):
+            router.submit(rng.randint(0, cfg.vocab_size,
+                                      size=10).astype(np.int32), 10,
+                          SamplingParams.greedy())
+        # forcibly stack everything on replica 0
+        for rid in (1, 2):
+            for item, row in router.replicas[rid].sched.extract_pending():
+                router.replicas[0].sched.adopt(item, row)
+        router.run()
+        rep = router.report()
+        assert rep["lost_requests"] == 0
+        assert rep["n_rebalanced"] > 0
+
+
+def _soak(tiny_f32, solo_ref, seed):
+    """One randomized kill-point run: seeded random victim + tick, mixed
+    trace, zero lost + parity (checkpointed AND re-prefilled recoveries)
+    + journal + exact accounting."""
+    cfg, params = tiny_f32
+    rng = np.random.RandomState(1000 + seed)
+    kill = (int(rng.randint(0, 3)), int(rng.randint(4, 22)))
+    router = mk_router(cfg, params, checkpoint_every=3 + seed % 3,
+                       kill_at=kill)
+    for kw in mixed_trace(cfg):
+        router.submit(**kw)
+    router.run()
+    rep = router.report()
+    assert rep["n_failovers"] == 1, f"seed={seed} kill={kill}"
+    assert_parity_and_invariants(router, solo_ref,
+                                 f"seed={seed} kill={kill}")
+
+
+class TestKillPointSoak:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_randomized_kill_point(self, tiny_f32, solo_ref, seed):
+        _soak(tiny_f32, solo_ref, seed)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("seed", [2, 3, 4, 5])
+    def test_randomized_kill_point_soak(self, tiny_f32, solo_ref, seed):
+        _soak(tiny_f32, solo_ref, seed)

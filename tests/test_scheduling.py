@@ -107,6 +107,49 @@ class TestPreemptResumeParity:
             np.testing.assert_array_equal(ref, req.result,
                                           err_msg=f"cut={cut}")
 
+    def test_parity_across_many_suspend_resume_cycles(self, tiny_f32):
+        """Regression for the documented parity-envelope bug: under the
+        aggressive recovery config, >= 4 suspend/resume cycles used to
+        diverge from the uninterrupted run.  Two causes, both fixed:
+        (1) ``staged_keys`` bookkeeping was dropped on export (the staged
+        device bytes themselves always survived — the pool slice spans
+        the staging slots — but losing the mark de-scheduled the resumed
+        lane's remap-only thaw install, feeding Rewalk a different
+        path); (2) thaw-candidate and prefetch score ties resolved by
+        dict insertion order, which export/import permutes.  Repeated
+        migration is now exact at any cycle count."""
+        cfg, params = tiny_f32
+        fc = dataclasses.replace(cfg.freeze, quantile=0.55, k_soft=0.7,
+                                 recovery_enabled=True,
+                                 entropy_abs_threshold=0.5, rewalk_tokens=8)
+        cfg = dataclasses.replace(cfg, freeze=fc)
+        rng = np.random.RandomState(3)
+        prompt = rng.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+        args = (prompt, 36, SamplingParams.greedy())
+        kw = dict(pages=5, max_seq=160)
+        ref = run_alone(cfg, params, args, **kw)
+
+        eng = paged_engine(cfg, params, **kw)
+        req = Request(1, *args)
+        eng.admit(req)
+        lane, cycles = 0, 0
+        for steps in (14, 8, 8, 8, 8):
+            for _ in range(steps):
+                if req.result is not None:
+                    break
+                eng.step_once()
+            if req.result is not None:
+                break
+            snap = eng.suspend_lane(lane)
+            assert snap is not None
+            lane = 1 - lane
+            eng.resume_lane(snap, lane=lane)
+            cycles += 1
+        assert cycles >= 4, "test premise: at least 4 migration cycles"
+        while req.result is None:
+            eng.step_once()
+        np.testing.assert_array_equal(ref, req.result)
+
     def test_preemption_under_full_host_pool(self, tiny_f32):
         """Suspend a lane whose device pool is saturated and whose host
         store already holds stashed pages: the whole-lane export must move
@@ -306,6 +349,60 @@ class TestSchedulerPolicy:
         # before the remaining queued background
         assert admits.index(fg) < admits.index(bg[2])
         assert admits.index(fg) < admits.index(bg[3])
+
+    def test_aging_bounds_starvation(self, tiny_f32):
+        """Strict classes can starve: under a steady higher-class stream
+        a background request waits forever.  With ``aging_s`` set, its
+        effective class decays one level per ``aging_s`` waited, so the
+        wait is bounded by ``priority * aging_s``; the tie then resolves
+        by original submission seq, putting the aged request ahead of
+        younger same-class arrivals."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(8)
+        t = [0.0]
+        eng = paged_engine(cfg, params)
+        aged = Scheduler(eng, policy="slo", clock=lambda: t[0],
+                         aging_s=5.0)
+        plain = Scheduler(eng, policy="slo", clock=lambda: t[0])
+        subs = {}
+        for s in (aged, plain):
+            t[0] = 0.0
+            bg = s.submit(rng.randint(0, cfg.vocab_size, size=8), 4,
+                          SamplingParams.greedy(), priority=5)
+            t[0] = 26.0           # 5 aging boundaries: class 5 -> 0
+            fg = s.submit(rng.randint(0, cfg.vocab_size, size=8), 4,
+                          SamplingParams.greedy(), priority=0)
+            subs[id(s)] = (bg, fg)
+        # without aging the younger foreground still jumps the queue
+        bg, fg = subs[id(plain)]
+        plain._apply_aging()
+        assert plain._pop().uid == fg
+        # with aging the background was promoted to class 0 and its
+        # earlier submission wins the tie
+        bg, fg = subs[id(aged)]
+        aged._apply_aging()
+        assert aged._pop().uid == bg
+
+    def test_aging_promotion_is_bounded_and_floored(self, tiny_f32):
+        """Effective priority never drops below 0 and never promotes a
+        request that hasn't crossed an aging boundary."""
+        cfg, params = tiny_f32
+        t = [0.0]
+        eng = paged_engine(cfg, params)
+        sched = Scheduler(eng, policy="slo", clock=lambda: t[0],
+                          aging_s=10.0)
+        rng = np.random.RandomState(9)
+        uid = sched.submit(rng.randint(0, cfg.vocab_size, size=8), 4,
+                           SamplingParams.greedy(), priority=2)
+        req = sched.queue[0][-1]
+        assert sched._eff_priority(req) == 2
+        t[0] = 9.9
+        assert sched._eff_priority(req) == 2
+        t[0] = 10.0
+        assert sched._eff_priority(req) == 1
+        t[0] = 1e6                # deep overtime: floored, not negative
+        assert sched._eff_priority(req) == 0
+        assert sched.metrics[uid]["priority"] == 2   # raw class untouched
 
     def test_deadline_preemption_end_to_end(self, tiny_f32):
         """Two background hogs + one deadlined foreground: the foreground

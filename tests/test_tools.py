@@ -55,7 +55,26 @@ def good_scheduling():
     }
 
 
-def run_main(tmp_path, report, bench, scheduling=None, extra=()):
+def good_failover():
+    return {
+        "lost_requests": 0,
+        "n_failovers": 1,
+        "recovered_with_checkpoint": 2,
+        "recovered_reprefill": 0,
+        "checkpoint_parity": True,
+        "checkpoint_audited": 2,
+        "journal_consistent": True,
+        "journal_audited": 2,
+        "invariants_ok": True,
+        "fg_deadline_hit_rate": 1.0,
+        "fg_deadline_hit_window": 0.9,
+        "fg_in_window": 4,
+        "fg_hit_floor": 0.8,
+    }
+
+
+def run_main(tmp_path, report, bench, scheduling=None, failover=None,
+             extra=()):
     rp = tmp_path / "report.json"
     bp = tmp_path / "bench.json"
     rp.write_text(json.dumps(report))
@@ -65,6 +84,10 @@ def run_main(tmp_path, report, bench, scheduling=None, extra=()):
         sp = tmp_path / "scheduling.json"
         sp.write_text(json.dumps(scheduling))
         argv += ["--scheduling", str(sp)]
+    if failover is not None:
+        fp = tmp_path / "failover.json"
+        fp.write_text(json.dumps(failover))
+        argv += ["--failover", str(fp)]
     argv += list(extra)
     rc = check_bench.main(argv)
     return rc, list(check_bench.FAILURES)
@@ -72,7 +95,8 @@ def run_main(tmp_path, report, bench, scheduling=None, extra=()):
 
 def test_check_bench_all_green(tmp_path):
     rc, fails = run_main(tmp_path, good_report(), good_bench(),
-                         good_scheduling(), extra=["--max-retraces", "0"])
+                         good_scheduling(), good_failover(),
+                         extra=["--max-retraces", "0"])
     assert rc == 0 and not fails
 
 
@@ -102,6 +126,39 @@ def test_check_bench_each_criterion_fails_alone(tmp_path, mutate, expect):
     mutate(r, b, s)
     rc, fails = run_main(tmp_path, r, b, s, extra=["--max-retraces", "0"])
     assert rc == len(fails) == 1 and fails == [expect]
+
+
+@pytest.mark.parametrize("mutate,expect", [
+    (lambda f: f.update(n_failovers=0), "failover-fired"),
+    (lambda f: f.update(lost_requests=2), "failover-zero-lost"),
+    (lambda f: f.update(recovered_with_checkpoint=0),
+     "failover-checkpoint-recovery"),
+    (lambda f: f.update(checkpoint_parity=False),
+     "failover-checkpoint-parity"),
+    (lambda f: f.update(journal_consistent=False),
+     "failover-journal-consistent"),
+    (lambda f: f.update(invariants_ok=False), "failover-invariants"),
+    (lambda f: f.update(fg_deadline_hit_window=0.5),
+     "failover-fg-window-floor"),
+    (lambda f: f.update(fg_in_window=0, fg_deadline_hit_window=1.0),
+     "failover-fg-window-nonempty"),
+])
+def test_check_failover_each_criterion_fails_alone(tmp_path, mutate,
+                                                   expect):
+    f = good_failover()
+    mutate(f)
+    rc, fails = run_main(tmp_path, good_report(), good_bench(),
+                         good_scheduling(), f,
+                         extra=["--max-retraces", "0"])
+    assert rc == len(fails) == 1 and fails == [expect]
+
+
+def test_check_failover_missing_keys_fail_fast(tmp_path):
+    f = good_failover()
+    del f["journal_consistent"]
+    rc, fails = run_main(tmp_path, good_report(), good_bench(),
+                         good_scheduling(), f)
+    assert rc >= 1 and "failover-keys" in fails
 
 
 def test_check_bench_retraces_uncapped_without_flag(tmp_path):

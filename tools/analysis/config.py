@@ -70,6 +70,13 @@ REPO_CONFIG = Config(
         "narrow_payload",
         # page-batched offload round-trip (dense engine's commit path)
         "HostOffloadController.sync",
+        # replica router: the tick loop, the per-tick heartbeat compare
+        # and the failover re-place path are all host-side bookkeeping
+        # and must stay free of device syncs (checkpoint_lane is NOT
+        # listed — it is a deliberate blocking pull, like suspend_lane)
+        "ReplicaRouter.step",
+        "ReplicaRouter._heartbeat",
+        "ReplicaRouter._failover",
     }),
     device_roots=frozenset({
         "state",        # self.state / lane_state / decode state pytrees

@@ -230,6 +230,52 @@ def check_chaos(path: pathlib.Path) -> None:
           "run in both poison scenarios")
 
 
+def check_failover(path: pathlib.Path) -> None:
+    """Named criteria for the replica-kill benchmark
+    (benchmarks/failover.py -> BENCH_failover.json): zero lost requests
+    across a mid-trace replica crash, token-identical checkpoint
+    recovery, append-only journal consistency, exact controller
+    accounting on the survivors, and a floor on the foreground
+    deadline-hit rate through the failover window."""
+    print(f"== {path} [--failover]")
+    f = json.loads(path.read_text())
+    if not require_keys("failover", f, (
+            "lost_requests", "n_failovers", "recovered_with_checkpoint",
+            "checkpoint_parity", "checkpoint_audited", "journal_consistent",
+            "journal_audited", "invariants_ok", "fg_deadline_hit_window",
+            "fg_in_window", "fg_hit_floor")):
+        return
+    check("failover-fired", f["n_failovers"] >= 1,
+          "the trace must actually kill a replica, else every other "
+          f"failover assertion is vacuous (n_failovers={f['n_failovers']})")
+    check("failover-zero-lost", f["lost_requests"] == 0,
+          "a replica crash may repeat decode work but must never lose a "
+          f"request (lost_requests={f['lost_requests']})")
+    check("failover-checkpoint-recovery", f["recovered_with_checkpoint"] >= 1,
+          "at least one in-flight lane must resume from a router-side "
+          "checkpoint — the freeze-native migration path under test "
+          f"(recovered_with_checkpoint={f['recovered_with_checkpoint']})")
+    check("failover-checkpoint-parity", bool(f["checkpoint_parity"]),
+          "every checkpoint-recovered request must be token-identical to "
+          f"an uninterrupted solo run ({f['checkpoint_audited']} audited)")
+    check("failover-journal-consistent", bool(f["journal_consistent"]),
+          "each recovered request's final tokens must extend its "
+          "journal-at-failure prefix exactly (recovery off -> append-only; "
+          f"{f['journal_audited']} audited)")
+    check("failover-invariants", bool(f["invariants_ok"]),
+          "surviving replicas must pass the exact stash/exported-bytes "
+          "controller accounting audit")
+    check("failover-fg-window-floor",
+          f["fg_deadline_hit_window"] >= f["fg_hit_floor"],
+          "foreground requests overlapping the failover window must still "
+          f"hit >= {f['fg_hit_floor']:.0%} of deadlines "
+          f"(got {f['fg_deadline_hit_window']} over "
+          f"{f['fg_in_window']} request(s))")
+    check("failover-fg-window-nonempty", f["fg_in_window"] >= 1,
+          "the trace must place foreground requests inside the failover "
+          f"window, else the floor is vacuous (fg_in_window={f['fg_in_window']})")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -243,6 +289,9 @@ def main(argv=None) -> int:
     ap.add_argument("--chaos", type=pathlib.Path, default=None,
                     help="BENCH_chaos.json (fault-injection / "
                          "degradation-ladder criteria, benchmarks/chaos.py)")
+    ap.add_argument("--failover", type=pathlib.Path, default=None,
+                    help="BENCH_failover.json (replica-kill criteria, "
+                         "benchmarks/failover.py)")
     ap.add_argument("--quant", action="store_true",
                     help="assert the quantized-KV guardrail block in the "
                          "bench summary (int8 needle arm: accuracy floor "
@@ -264,6 +313,8 @@ def main(argv=None) -> int:
         check_scheduling(args.scheduling, max_retraces=args.max_retraces)
     if args.chaos is not None:
         check_chaos(args.chaos)
+    if args.failover is not None:
+        check_failover(args.failover)
 
     if FAILURES:
         print(f"\n{len(FAILURES)} benchmark assertion(s) failed: "
