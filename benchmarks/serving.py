@@ -1,0 +1,341 @@
+"""Multi-tenant streaming-server benchmark: weighted fair sharing, hog
+containment, mid-stream disconnects, streaming parity.
+
+One seeded workload drives the ``AsyncServingEngine`` facade (in-process
+— the HTTP layer is byte-plumbing tested in tests/test_server.py; the
+scheduling behaviour under test lives below it):
+
+* **hog** (weight 1) — a burst of long generations submitted all at
+  once at t=0: the open-loop flood that would monopolize every lane
+  under plain FIFO admission.
+* **gold** (weight 3) / **silver** (weight 1) — closed-loop interactive
+  tenants, each keeping a couple of requests in flight; gold traffic
+  carries mixed SLO deadlines (EDF within the shared priority class),
+  and every third gold request *disconnects mid-stream* after a few
+  tokens — the client-goes-away path (freeze-native suspend + drop).
+
+All three tenants stay backlogged until a global committed-token target
+is reached, then outstanding work is cancelled — so the measured window
+is fully saturated and each tenant's goodput share is WFQ's to
+determine.  **Fairness acceptance** (gated by ``check_bench
+--serving``): every tenant's goodput share stays within
+[0.5x, 1.5x] of its weight share — the hog's 1/5 entitlement contains
+it, and gold's 3/5 holds despite the flood.  Also gated: zero unhandled
+server exceptions, disconnects actually happened and freed their lanes
+(no KV leak — ``audit_controller`` runs clean after the drain), and the
+**streaming parity** invariant: the designated probe request's streamed
+token sequence is identical to the same request served through the
+batch ``Scheduler`` path (``launch/serve.py``'s) on the same engine —
+greedy + f32 + ``burst_prefill=False``, the repo's parity methodology.
+
+    PYTHONPATH=src python -m benchmarks.serving           # full
+    PYTHONPATH=src python -m benchmarks.serving --smoke   # CI tier-2
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import numpy as np
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+WEIGHTS = {"gold": 3.0, "silver": 1.0, "hog": 1.0}
+FAIRNESS_LO, FAIRNESS_HI = 0.5, 1.5
+PROMPT_LEN = 12
+N_LANES = 3
+
+
+def serving_config(cfg):
+    """f32 + steady freeze pressure, recovery off: fairness and parity
+    must come from scheduling, not entropy spikes (same rationale as
+    benchmarks/scheduling.py)."""
+    fc = dataclasses.replace(cfg.freeze, page_size=16, window=16,
+                             tau_mode="quantile", quantile=0.5, k_soft=1.0,
+                             recovery_enabled=False)
+    return dataclasses.replace(cfg, freeze=fc, dtype="float32")
+
+
+async def _gold_worker(ae, wid, rng, cfg, stop, tally, probe_ref):
+    """Interactive tenant with a pipeline of 2 requests in flight — gold
+    is entitled to the majority weight share, so it must stay backlogged
+    deep enough to actually consume it (a WFQ server is work-conserving:
+    an under-backlogged tenant's slack flows to the others, which would
+    read as unfairness when it is really idleness).  Mixed deadlines;
+    every third request *disconnects* after 3 streamed tokens.  Worker
+    0's first request is the streaming-parity probe (never
+    disconnected)."""
+    from repro.serving.sampling import SamplingParams
+    i = 0
+
+    async def _submit():
+        nonlocal i
+        probe = wid == 0 and i == 0
+        prompt = probe_ref["prompt"] if probe else \
+            rng.randint(0, cfg.vocab_size, size=PROMPT_LEN)
+        n_tok = probe_ref["n_tokens"] if probe else int(rng.choice([16, 24]))
+        deadline = None if probe or i % 2 else float(rng.choice([400, 800]))
+        stream = await ae.submit(prompt, n_tok, SamplingParams.greedy(),
+                                 deadline_ms=deadline, tenant="gold")
+        disconnect = not probe and i % 3 == 2
+        i += 1
+        return stream, probe, disconnect
+
+    async def _consume(stream, probe, disconnect):
+        if disconnect:
+            got = 0
+            async for ev in stream:
+                if ev["event"] == "token":
+                    got += 1
+                    if got == 3:
+                        await ae.cancel(stream.uid)
+                elif ev["event"] == "done":
+                    tally["disconnected"] += ev["status"] == "cancelled"
+                    break
+        else:
+            ev = await stream.collect()
+            tally["stream_parity_ok"] &= ev["streamed"] == ev["tokens"]
+            if probe:
+                probe_ref["streamed"] = ev["streamed"]
+
+    inflight = [await _submit(), await _submit()]
+    while not stop.is_set():
+        await _consume(*inflight.pop(0))
+        inflight.append(await _submit())
+    for entry in inflight:
+        await ae.cancel(entry[0].uid)
+        await _consume(*entry)
+
+
+async def _silver_worker(ae, rng, cfg, stop, tally):
+    from repro.serving.sampling import SamplingParams
+    while not stop.is_set():
+        prompt = rng.randint(0, cfg.vocab_size, size=PROMPT_LEN)
+        stream = await ae.submit(prompt, int(rng.choice([16, 20])),
+                                 SamplingParams.greedy(), tenant="silver")
+        ev = await stream.collect()
+        tally["stream_parity_ok"] &= ev["streamed"] == ev["tokens"]
+
+
+async def _hog_burst(ae, rng, cfg, stop, tally, n_requests, n_tok):
+    """The flood: everything submitted up front, consumed concurrently;
+    whatever is still live when the target is reached gets cancelled
+    (the bench is over — drain would measure an unsaturated tail)."""
+    from repro.serving.sampling import SamplingParams
+    streams = []
+    for _ in range(n_requests):
+        prompt = rng.randint(0, cfg.vocab_size, size=PROMPT_LEN)
+        streams.append(await ae.submit(prompt, n_tok,
+                                       SamplingParams.greedy(),
+                                       tenant="hog"))
+
+    async def consume(stream):
+        ev = await stream.collect()
+        if ev["status"] == "completed":
+            tally["stream_parity_ok"] &= ev["streamed"] == ev["tokens"]
+    tasks = [asyncio.ensure_future(consume(s)) for s in streams]
+    await stop.wait()
+    for s in streams:
+        await ae.cancel(s.uid)
+    await asyncio.gather(*tasks)
+
+
+async def _controller(ae, stop, target_tokens, window):
+    """Set ``stop`` once total committed tokens reach the target, and
+    capture the tenancy stats AT that instant — the fairness shares are
+    measured over the fully-saturated window only, not the drain tail
+    (where tenants stop being backlogged and WFQ owes them nothing)."""
+    while not stop.is_set():
+        st = await ae.stats()
+        total = sum(t["goodput_tokens"]
+                    for t in st.get("tenants", {}).values())
+        if total >= target_tokens:
+            window["stats"] = st
+            stop.set()
+            return
+        await asyncio.sleep(0.05)
+
+
+async def run_serving(eng, target_tokens, hog_requests, hog_tok, cfg,
+                      probe_ref) -> Dict:
+    from repro.serving.scheduler import Scheduler
+    from repro.serving.server import AsyncServingEngine
+    from repro.serving.tenancy import TenancyController, TenantConfig
+    tenancy = TenancyController(
+        [TenantConfig(n, weight=w) for n, w in WEIGHTS.items()])
+    sched = Scheduler(eng, tenancy=tenancy)
+    ae = AsyncServingEngine(sched, stream_capacity=16)
+    await ae.start()
+    stop = asyncio.Event()
+    tally = {"disconnected": 0, "stream_parity_ok": True}
+    window: Dict = {}
+    rngs = {k: np.random.RandomState(i)
+            for i, k in enumerate(["g0", "g1", "s0", "s1", "hog"])}
+    t0 = time.monotonic()
+    await asyncio.gather(
+        _controller(ae, stop, target_tokens, window),
+        _gold_worker(ae, 0, rngs["g0"], cfg, stop, tally, probe_ref),
+        _gold_worker(ae, 1, rngs["g1"], cfg, stop, tally, probe_ref),
+        _silver_worker(ae, rngs["s0"], cfg, stop, tally),
+        _silver_worker(ae, rngs["s1"], cfg, stop, tally),
+        _hog_burst(ae, rngs["hog"], cfg, stop, tally, hog_requests,
+                   hog_tok),
+    )
+    wall = time.monotonic() - t0
+    stats = await ae.stats()
+    stats["tenants_at_stop"] = window["stats"]["tenants"]
+    await ae.close()
+    # post-drain invariants: no lane still owned, no stranded scheduler
+    # entry (every submitted uid reached `done`), stash store consistent
+    lanes_leaked = sum(l.request is not None for l in eng.lanes)
+    stranded = len(sched.metrics) - len(sched.done)
+    hits = [m["deadline_hit"] for m in sched.metrics.values()
+            if m["deadline_hit"] is not None]
+    from repro.analysis.invariants import audit_controller
+    audit_ok = True
+    try:
+        audit_controller(eng.ctl)
+    except AssertionError:
+        audit_ok = False
+    return {
+        "wall_s": round(wall, 2),
+        "stats": stats,
+        "tally": tally,
+        "lanes_leaked": lanes_leaked,
+        "stranded_entries": stranded,
+        "audit_clean": audit_ok,
+        "deadline_hit_rate": round(sum(hits) / len(hits), 3)
+        if hits else None,
+        "n_deadlined": len(hits),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workload for the CI tier-2 smoke job")
+    args = ap.parse_args()
+
+    import jax
+    from benchmarks.common import bench_config
+    from repro.models import model as MD
+    from repro.serving.config import ServingConfig
+    from repro.serving.engine import PagedContinuousEngine
+    from repro.serving.sampling import SamplingParams
+    from repro.serving.scheduler import Scheduler
+
+    cfg = serving_config(bench_config())
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    sv = ServingConfig(max_seq=256, n_lanes=N_LANES, max_active_pages=4,
+                       prefill_chunk=16,
+                       # deterministic chunk split: the parity probe's
+                       # reference interleaves admissions differently
+                       burst_prefill=False)
+    eng = PagedContinuousEngine(cfg, params, serving=sv)
+
+    target, hog_requests, hog_tok = (240, 24, 24) if args.smoke \
+        else (700, 48, 32)
+
+    # ---- parity probe reference: the SAME request through the batch
+    # Scheduler path (what launch/serve.py drives), on the SAME engine
+    # (fresh lanes after run(); greedy trajectories are per-lane pure,
+    # and reusing the engine reuses its jit caches as warmup) ---- #
+    rng = np.random.RandomState(1234)
+    probe_ref = {"prompt": rng.randint(0, cfg.vocab_size, size=PROMPT_LEN),
+                 "n_tokens": 20, "streamed": None}
+    s0 = Scheduler(eng)
+    uid = s0.submit(probe_ref["prompt"], probe_ref["n_tokens"],
+                    SamplingParams.greedy())
+    s0.run()
+    probe_ref["batch_tokens"] = [int(t) for t in s0.done[uid].result]
+
+    report = asyncio.run(run_serving(eng, target, hog_requests, hog_tok,
+                                     cfg, probe_ref))
+
+    parity_ok = probe_ref["streamed"] == probe_ref["batch_tokens"]
+    # fairness over the saturated window (tenancy stats captured the
+    # instant the token target was reached); final post-drain stats are
+    # still reported for the counters
+    tenants = report["stats"]["tenants_at_stop"]
+    total_goodput = sum(t["goodput_tokens"] for t in tenants.values())
+    wsum = sum(WEIGHTS.values())
+    fairness = {}
+    fairness_ok = True
+    for name, w in WEIGHTS.items():
+        share = tenants[name]["goodput_tokens"] / max(total_goodput, 1)
+        ratio = share / (w / wsum)
+        ok = FAIRNESS_LO <= ratio <= FAIRNESS_HI
+        fairness_ok &= ok
+        fairness[name] = {"weight": w, "goodput_tokens":
+                          tenants[name]["goodput_tokens"],
+                          "share": round(share, 3),
+                          "weight_share": round(w / wsum, 3),
+                          "ratio": round(ratio, 3), "ok": ok}
+
+    print(f"\n{'tenant':>8s} {'weight':>7s} {'goodput':>8s} {'share':>7s}"
+          f" {'ratio':>6s}")
+    for name, f in fairness.items():
+        print(f"{name:>8s} {f['weight']:>7.1f} {f['goodput_tokens']:>8d}"
+              f" {f['share']:>7.3f} {f['ratio']:>6.3f}")
+    print(f"\nfairness ok (each ratio in [{FAIRNESS_LO}, {FAIRNESS_HI}]): "
+          f"{fairness_ok}")
+    print(f"disconnects: {report['tally']['disconnected']}  "
+          f"cancelled total: {report['stats']['n_cancelled']}  "
+          f"paused/resumed: {report['stats']['n_paused']}/"
+          f"{report['stats']['n_resumed']}")
+    print(f"streaming parity vs batch path: {parity_ok}  "
+          f"per-stream replay parity: {report['tally']['stream_parity_ok']}")
+    print(f"lanes leaked: {report['lanes_leaked']}  stranded entries: "
+          f"{report['stranded_entries']}  audit clean: "
+          f"{report['audit_clean']}  unhandled exceptions: "
+          f"{report['stats']['unhandled_exceptions']}")
+    if report["deadline_hit_rate"] is not None:
+        print(f"deadline hit rate: {report['deadline_hit_rate']:.0%} "
+              f"({report['n_deadlined']} deadlined requests)")
+
+    full = {
+        "target_tokens": target,
+        "n_lanes": N_LANES,
+        "weights": WEIGHTS,
+        "fairness_bounds": [FAIRNESS_LO, FAIRNESS_HI],
+        "fairness": fairness,
+        "fairness_ok": bool(fairness_ok),
+        "streaming_parity_ok": bool(parity_ok),
+        "stream_replay_parity_ok": bool(report["tally"]
+                                        ["stream_parity_ok"]),
+        "disconnected_mid_stream": int(report["tally"]["disconnected"]),
+        "deadline_hit_rate": report["deadline_hit_rate"],
+        "n_deadlined": report["n_deadlined"],
+        "wall_s": report["wall_s"],
+        "lanes_leaked": report["lanes_leaked"],
+        "stranded_entries": report["stranded_entries"],
+        "audit_clean": report["audit_clean"],
+        "server": {k: report["stats"][k] for k in
+                   ("n_preemptions", "n_preempt_skipped_cost",
+                    "n_cancelled", "n_paused", "n_resumed",
+                    "unhandled_exceptions", "preempt_cost_s")},
+        "tenants": tenants,
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "serving.json").write_text(json.dumps(full, indent=2))
+    bench = {k: full[k] for k in
+             ("fairness_ok", "fairness", "streaming_parity_ok",
+              "stream_replay_parity_ok", "disconnected_mid_stream",
+              "deadline_hit_rate", "lanes_leaked", "stranded_entries",
+              "audit_clean")}
+    bench["unhandled_exceptions"] = \
+        report["stats"]["unhandled_exceptions"]
+    bench["n_cancelled"] = report["stats"]["n_cancelled"]
+    bench["goodput_per_tenant"] = {
+        n: tenants[n]["goodput_tokens"] for n in WEIGHTS}
+    (pathlib.Path(__file__).resolve().parents[1]
+     / "BENCH_serving.json").write_text(json.dumps(bench, indent=2))
+
+
+if __name__ == "__main__":
+    main()

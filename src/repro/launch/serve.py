@@ -37,10 +37,55 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import model as MD
+from repro.serving.config import ServingConfig
 from repro.serving.engine import (ContinuousEngine, Engine,
                                   PagedContinuousEngine)
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler, StaticScheduler
+
+
+def _serve_http(args, mk_engine) -> None:
+    """--http: stand up the multi-tenant SSE streaming front end over one
+    continuous engine (see serving/server.py) and serve until killed.
+
+        curl -N localhost:PORT/v1/generate -H 'X-Tenant: gold' \\
+             -d '{"prompt": [1, 2, 3], "n_tokens": 32}'
+    """
+    import asyncio
+
+    from repro.serving.server import AsyncServingEngine, ServingServer
+    from repro.serving.tenancy import TenancyController, TenantConfig
+    if args.static or args.replicas > 1:
+        raise SystemExit("--http serves one continuous engine "
+                         "(no --static / --replicas)")
+    tenancy = None
+    if args.tenants:
+        cfgs = []
+        for spec in args.tenants.split(","):
+            f = spec.split(":")
+            cfgs.append(TenantConfig(
+                f[0], weight=float(f[1]) if len(f) > 1 else 1.0,
+                max_lanes=int(f[2]) if len(f) > 2 else None,
+                tokens_per_s=float(f[3]) if len(f) > 3 else None))
+        tenancy = TenancyController(cfgs)
+    sched = Scheduler(mk_engine(), preemption=args.preempt,
+                      tenancy=tenancy)
+
+    async def _run():
+        srv = ServingServer(AsyncServingEngine(sched), port=args.http)
+        await srv.start()
+        print(f"serving on http://{srv.host}:{srv.port}  "
+              f"(POST /v1/generate streams SSE; GET /v1/health, "
+              f"/v1/stats)", flush=True)
+        try:
+            await asyncio.Event().wait()
+        finally:
+            await srv.close()
+
+    try:
+        asyncio.run(_run())
+    except KeyboardInterrupt:
+        pass
 
 
 def main():
@@ -131,6 +176,16 @@ def main():
                          "quantized.  'fp8' needs ml_dtypes "
                          "float8_e4m3fn.  'none' is bit-identical to the "
                          "unquantized engine (docs/quantization.md)")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP instead of driving a batch "
+                         "trace: multi-tenant SSE streaming front end "
+                         "(POST /v1/generate, GET /v1/health, /v1/stats; "
+                         "PORT 0 = ephemeral; docs/serving.md)")
+    ap.add_argument("--tenants", default=None,
+                    metavar="NAME:WEIGHT[:LANES[:TPS]],...",
+                    help="register tenants for --http, e.g. "
+                         "'gold:3,free:1:1:50' — weighted fair sharing "
+                         "plus optional concurrent-lane and tokens/s caps")
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantile-tau", type=float, default=0.45,
                     help="adaptive-tau quantile (0 = paper fixed tau)")
@@ -169,22 +224,22 @@ def main():
                                    ("pull", "push", "ring", "stage")})
     budget = int(args.stash_budget_mb * 2**20) \
         if args.stash_budget_mb is not None else None
-    robust_kw = dict(chaos=chaos, stash_budget_bytes=budget,
-                     kv_quant=args.kv_quant)
+    sv = ServingConfig(max_seq=args.max_seq, n_lanes=args.batch,
+                       enable_freeze=not args.no_freeze,
+                       async_pipeline=args.async_pipeline,
+                       prefill_chunk=args.prefill_chunk,
+                       max_active_pages=args.pages if args.paged else None,
+                       chaos=chaos, stash_budget_bytes=budget,
+                       kv_quant=args.kv_quant)
+
     def mk_engine():
         if args.paged:
-            return PagedContinuousEngine(cfg, params, max_seq=args.max_seq,
-                                         n_lanes=args.batch,
-                                         max_active_pages=args.pages,
-                                         enable_freeze=not args.no_freeze,
-                                         prefill_chunk=args.prefill_chunk,
-                                         async_pipeline=args.async_pipeline,
-                                         **robust_kw)
-        return ContinuousEngine(cfg, params, max_seq=args.max_seq,
-                                n_lanes=args.batch,
-                                enable_freeze=not args.no_freeze,
-                                async_pipeline=args.async_pipeline,
-                                **robust_kw)
+            return PagedContinuousEngine(cfg, params, serving=sv)
+        return ContinuousEngine(cfg, params, serving=sv)
+
+    if args.http is not None:
+        _serve_http(args, mk_engine)
+        return
 
     router = None
     if args.static:

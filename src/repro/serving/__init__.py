@@ -1,0 +1,41 @@
+"""Public serving API for the ASR-KF-EGR stack.
+
+Everything a deployment constructs by hand is re-exported here; the
+submodules stay importable directly (and the heavy internals — paged
+controller, DMA ring, chaos machinery — stay where they are).
+
+    from repro.serving import (ServingConfig, PagedContinuousEngine,
+                               Scheduler, TenancyController, TenantConfig,
+                               AsyncServingEngine, ServingServer)
+"""
+from repro.serving.config import ServingConfig
+from repro.serving.engine import (ContinuousEngine, Engine, LaneSnapshot,
+                                  PagedContinuousEngine, Request,
+                                  RequestStatus)
+from repro.serving.faults import ChaosConfig
+from repro.serving.router import ReplicaRouter
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler, StaticScheduler
+from repro.serving.server import (AsyncServingEngine, RequestStream,
+                                  ServingServer)
+from repro.serving.tenancy import TenancyController, TenantConfig
+
+__all__ = [
+    "AsyncServingEngine",
+    "ChaosConfig",
+    "ContinuousEngine",
+    "Engine",
+    "LaneSnapshot",
+    "PagedContinuousEngine",
+    "ReplicaRouter",
+    "Request",
+    "RequestStatus",
+    "RequestStream",
+    "SamplingParams",
+    "Scheduler",
+    "ServingConfig",
+    "ServingServer",
+    "StaticScheduler",
+    "TenancyController",
+    "TenantConfig",
+]

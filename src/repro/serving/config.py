@@ -1,0 +1,134 @@
+"""``ServingConfig`` — the one construction surface for the serving
+engines.
+
+PR after PR grew the engine constructors a keyword at a time
+(``async_pipeline``, ``chaos``, ``stash_budget_bytes``, ``ladder``,
+``quarantine_window``, ``kv_quant``, the rewind knobs, ...) until every
+call site — launcher, router, benchmarks, tests — re-spelled a dozen
+kwargs and adding a knob meant touching two engine signatures plus
+``from_engine``.  ``ServingConfig`` consolidates all of it into one
+dataclass that both engines, the ``ReplicaRouter`` build path and
+``launch/serve.py`` construct through:
+
+    sv = ServingConfig(max_seq=256, n_lanes=4, max_active_pages=8,
+                       kv_quant="int8")
+    eng = PagedContinuousEngine(cfg, params, serving=sv)
+
+The old keyword style still works — the engines funnel legacy kwargs
+through :func:`resolve_serving_config`, which builds the equivalent
+``ServingConfig`` and emits a single ``DeprecationWarning`` per process
+(the shim is a migration ramp, not a second API).
+
+Engine-specific fields: a knob only one engine reads is simply ignored
+by the other (``offload`` by the paged engine, ``max_active_pages`` by
+the contiguous one) — the config describes a *serving deployment*, and
+``launch/serve.py --paged`` flips engines under one config without
+re-spelling anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+from repro.configs.base import FreezeConfig
+from repro.serving.faults import ChaosConfig
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    """Everything about how a serving engine is deployed, minus the model
+    itself (``ModelConfig`` + params stay positional: they describe *what*
+    is served, this describes *how*).
+
+    Fields mirror the historical constructor kwargs one-for-one so the
+    legacy shim is a plain ``ServingConfig(**kwargs)``; defaults are the
+    engines' historical defaults."""
+    # ---- lane geometry (required by both engines) ---- #
+    max_seq: int = 512
+    n_lanes: int = 4
+    # ---- freeze machinery ---- #
+    freeze_cfg: Optional[FreezeConfig] = None   # None -> cfg.freeze
+    enable_freeze: bool = True
+    # ---- admission / sampling plumbing ---- #
+    pad_id: int = 0
+    seed: int = 0
+    min_prompt_bucket: int = 8
+    # ---- async DMA + robustness ---- #
+    async_pipeline: bool = True
+    chaos: Optional[ChaosConfig] = None
+    stash_budget_bytes: Optional[int] = None
+    ladder: Optional[Any] = None                # engine.LadderConfig
+    quarantine_window: int = 64
+    # ---- recovery rewind budget ---- #
+    max_rewinds: int = 4
+    rewind_cooldown: int = 32
+    # ---- per-page KV quantization ---- #
+    kv_quant: str = "none"
+    # ---- contiguous-engine-only ---- #
+    offload: bool = True
+    offload_every: int = 8
+    debug_lane_checks: bool = False
+    # ---- paged-engine-only ---- #
+    max_active_pages: Optional[int] = None      # required for the paged path
+    prefill_chunk: int = 64
+    speculative_thaw: Optional[bool] = None
+    speculative_slots: int = 3
+    burst_prefill: bool = True
+    debug_invariants: bool = False
+
+    def replace(self, **kw) -> "ServingConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_LEGACY_WARNED = False
+
+
+def resolve_serving_config(serving: Optional[ServingConfig],
+                           kind: str,
+                           max_seq: Optional[int],
+                           n_lanes: Optional[int],
+                           legacy: dict,
+                           max_active_pages: Optional[int] = None,
+                           ) -> ServingConfig:
+    """Normalize an engine constructor call to one ``ServingConfig``.
+
+    ``serving=`` given: the legacy positional/keyword arguments must be
+    absent (mixing the two surfaces silently overriding each other is
+    exactly the ambiguity the dataclass exists to kill).  ``serving=``
+    absent: rebuild the config from the legacy kwargs and warn ONCE per
+    process that the keyword surface is deprecated.  Unknown keywords
+    raise ``TypeError`` from the dataclass constructor, preserving the
+    old signatures' strictness."""
+    global _LEGACY_WARNED
+    if serving is not None:
+        if max_seq is not None or n_lanes is not None \
+                or max_active_pages is not None or legacy:
+            extra = [k for k, v in (("max_seq", max_seq),
+                                    ("n_lanes", n_lanes),
+                                    ("max_active_pages", max_active_pages))
+                     if v is not None] + sorted(legacy)
+            raise TypeError(
+                f"pass every serving knob through serving=ServingConfig(...) "
+                f"OR through legacy kwargs, not both (got serving= plus "
+                f"{extra})")
+        sv = serving
+    else:
+        if max_seq is None or n_lanes is None:
+            raise TypeError(
+                f"{kind} engine needs max_seq and n_lanes (or a "
+                f"serving=ServingConfig(...))")
+        if not _LEGACY_WARNED:
+            _LEGACY_WARNED = True
+            warnings.warn(
+                "constructing serving engines from loose kwargs is "
+                "deprecated; pass serving=ServingConfig(...) instead "
+                "(repro.serving.config)", DeprecationWarning, stacklevel=3)
+        try:
+            sv = ServingConfig(max_seq=max_seq, n_lanes=n_lanes,
+                               max_active_pages=max_active_pages, **legacy)
+        except TypeError as e:
+            raise TypeError(f"unknown engine kwarg(s): {e}") from None
+    if kind == "paged" and sv.max_active_pages is None:
+        raise TypeError("the paged engine requires max_active_pages")
+    return sv

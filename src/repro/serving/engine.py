@@ -61,6 +61,7 @@ upload (``core.paging.PagedController.stage_slots`` / ``staged_keys``).
 from __future__ import annotations
 
 import dataclasses
+import enum
 import functools
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -71,6 +72,7 @@ import numpy as np
 
 from repro.configs.base import FreezeConfig, ModelConfig
 from repro.core import quant
+from repro.serving.config import ServingConfig, resolve_serving_config
 from repro.core.cache import HostOffloadController, KVCache
 from repro.core.paging import PagedController, PageFreezeState
 from repro.core.recovery import RecoveryState
@@ -102,6 +104,36 @@ class GenerationResult:
         return 1.0 - self.active_kv[-1] / max(self.total_kv[-1], 1)
 
 
+class RequestStatus(str, enum.Enum):
+    """Request lifecycle status — ONE enum shared by the scheduler, both
+    engines, the replica router and the HTTP server (it replaced the
+    ad-hoc per-module status strings).
+
+    A ``str`` subclass on purpose: every value equals its historical
+    string (``RequestStatus.COMPLETED == "completed"``), so status
+    comparisons in older call sites, JSON reports and sorted tallies are
+    unchanged.  Lifecycle: requests are ``PENDING`` in flight (``SHED``
+    while parked by the degradation ladder's load-shed rung); retirement
+    resolves to ``COMPLETED``, ``SHED_RESUMED`` (completed after at least
+    one shed/resume round trip) or ``QUARANTINED`` (retired early — the
+    lane re-poisoned; the partial result is whatever survived the anomaly
+    rewinds).  ``CANCELLED`` is terminal for a client-disconnected
+    request whose lane was suspended and dropped."""
+    PENDING = "pending"
+    SHED = "shed"
+    COMPLETED = "completed"
+    SHED_RESUMED = "shed-resumed"
+    QUARANTINED = "quarantined"
+    CANCELLED = "cancelled"
+
+    def __str__(self) -> str:       # "completed", never the member repr
+        return self.value
+
+    @property
+    def terminal(self) -> bool:
+        return self not in (RequestStatus.PENDING, RequestStatus.SHED)
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request, as seen by the scheduler and lane manager.
@@ -112,7 +144,9 @@ class Request:
     ``slo_tokens_per_s`` (a decode-rate SLO the scheduler converts into a
     completion deadline) order requests within a class — earliest deadline
     first.  All three default to "no SLO", under which the scheduler
-    degrades to plain FIFO."""
+    degrades to plain FIFO.  ``tenant`` tags the request for the
+    tenancy layer's quota/fair-share accounting (None = untenanted,
+    exempt from quotas)."""
     uid: int
     prompt: np.ndarray            # (S,) int32
     n_tokens: int
@@ -122,13 +156,8 @@ class Request:
     slo_tokens_per_s: Optional[float] = None
     result: Optional[np.ndarray] = None
     telemetry: Optional[GenerationResult] = None
-    # terminal status, observable by the launcher: "pending" while in
-    # flight (the scheduler marks load-shed work "shed" in between);
-    # retirement resolves it to "completed", "shed-resumed" (completed
-    # after at least one memory-pressure shed/resume round trip) or
-    # "quarantined" (retired early because the lane re-poisoned — the
-    # partial ``result`` is whatever survived the anomaly rewinds)
-    status: str = "pending"
+    status: RequestStatus = RequestStatus.PENDING
+    tenant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -352,27 +381,22 @@ class _LaneEngineBase:
     the admit/finish event log.  Subclasses own the decode state layout
     (contiguous vs paged) and the step/admission mechanics."""
 
-    def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
-                 freeze_cfg: Optional[FreezeConfig] = None,
-                 enable_freeze: bool = True,
-                 pad_id: int = 0,
-                 seed: int = 0,
-                 min_prompt_bucket: int = 8,
-                 async_pipeline: bool = True,
-                 chaos: Optional[ChaosConfig] = None,
-                 stash_budget_bytes: Optional[int] = None,
-                 ladder: Optional[LadderConfig] = None,
-                 quarantine_window: int = 64):
+    def __init__(self, cfg: ModelConfig, params, serving: ServingConfig):
         assert not cfg.is_encoder_decoder, \
             "continuous batching is decoder-only (enc-dec uses Engine)"
+        sv = serving
+        max_seq, n_lanes = sv.max_seq, sv.n_lanes
+        pad_id, seed = sv.pad_id, sv.seed
+        async_pipeline, chaos = sv.async_pipeline, sv.chaos
         self.cfg = cfg
         self.params = params
+        self.serving = sv
         self.max_seq = max_seq
         self.n_lanes = n_lanes
-        self.fcfg = freeze_cfg or cfg.freeze
-        self.enable_freeze = enable_freeze
+        self.fcfg = sv.freeze_cfg or cfg.freeze
+        self.enable_freeze = sv.enable_freeze
         self.pad_id = pad_id
-        self.min_prompt_bucket = min_prompt_bucket
+        self.min_prompt_bucket = sv.min_prompt_bucket
         self._sample = jax.jit(sample_batched_perlane)
         self.lanes = [_Lane() for _ in range(n_lanes)]
         self.pos = np.zeros(n_lanes, np.int32)
@@ -427,15 +451,15 @@ class _LaneEngineBase:
             self.ep_pull = self.ep_push = None
             self.ep_ring = self.ep_stage = None
         # ---- host-stash budget + degradation ladder ---- #
-        self.stash_budget_bytes = stash_budget_bytes
-        self.ladder_cfg = ladder or LadderConfig()
+        self.stash_budget_bytes = sv.stash_budget_bytes
+        self.ladder_cfg = sv.ladder or LadderConfig()
         self.peak_stash_bytes = 0
         # ---- lane-level anomaly quarantine ---- #
         # A non-finite-entropy step triggers a bounded rewind-and-retry;
         # a lane that re-poisons within `quarantine_window` decode steps
         # of its last quarantine rewind is retired "quarantined" instead
         # of corrupting its batch peers' wall time any further.
-        self.quarantine_window = quarantine_window
+        self.quarantine_window = sv.quarantine_window
         self._last_quarantine = np.full(n_lanes, -10**9, np.int64)
         self.robust = {"quarantine_rewinds": 0, "quarantined": 0,
                        "ladder_deny": 0, "ladder_deepen": 0,
@@ -543,6 +567,40 @@ class _LaneEngineBase:
         contiguous snapshot owns nothing beyond host bookkeeping; the
         paged override returns the exported pages' byte accounting."""
 
+    # ---------------- client-disconnect cancellation ---------------- #
+    def cancel_lane(self, lane: int) -> Optional[Request]:
+        """Cancel the lane's in-flight request (client disconnect) through
+        the freeze-native drop path: ``suspend_lane`` (which flushes the
+        ring, stashes/cancels exactly as a preemption would, and frees the
+        lane) followed immediately by ``discard_snapshot`` (which returns
+        the exported pages' byte accounting so nothing leaks).  The
+        request keeps its partial tokens as ``result`` and ends
+        ``CANCELLED``.  Returns None when the request retired during the
+        suspend flush — the retirement is re-reported by the next
+        ``step_once`` and cancellation lost the race to completion."""
+        l = self.lanes[lane]
+        if l.request is None and lane not in getattr(self, "prefills", {}):
+            return None
+        snap = self.suspend_lane(lane)
+        if snap is None:
+            return None
+        self.discard_snapshot(snap)
+        req = snap.req
+        req.status = RequestStatus.CANCELLED
+        req.result = np.asarray(snap.generated[: req.n_tokens], np.int32)
+        self.events.append({"event": "cancel", "uid": req.uid,
+                            "lane": lane, "wall_step": self.wall_step,
+                            "generated": len(snap.generated)})
+        return req
+
+    def cancel_request(self, uid: int) -> Optional[Request]:
+        """Find and cancel the lane running ``uid`` (the paged override
+        also covers a preemptor still mid-``admit_over`` prefill)."""
+        for i, l in enumerate(self.lanes):
+            if l.request is not None and l.request.uid == uid:
+                return self.cancel_lane(i)
+        return None
+
     def robust_snapshot(self) -> Dict[str, Any]:
         """Fault/ladder/quarantine counters for benchmarks and serving
         reports (chaos-less engines report zeros)."""
@@ -566,10 +624,10 @@ class _LaneEngineBase:
     def _finalize_status(req: Request) -> None:
         """Map a retiring request's lifecycle status to its terminal
         value (quarantine retirement overwrites it afterwards)."""
-        if req.status == "shed":
-            req.status = "shed-resumed"
-        elif req.status == "pending":
-            req.status = "completed"
+        if req.status == RequestStatus.SHED:
+            req.status = RequestStatus.SHED_RESUMED
+        elif req.status == RequestStatus.PENDING:
+            req.status = RequestStatus.COMPLETED
 
     def _quarantine_rewind(self, lane: int) -> bool:
         """Attempt the engine's page-aware rewind for a quarantined lane;
@@ -604,7 +662,7 @@ class _LaneEngineBase:
                 rewound.add(i)
             else:
                 req = self._retire(i)
-                req.status = "quarantined"
+                req.status = RequestStatus.QUARANTINED
                 self.robust["quarantined"] += 1
                 retired.append(req)
         return retired
@@ -828,55 +886,39 @@ class ContinuousEngine(_LaneEngineBase):
     prefill compiles O(log max_seq) times, not once per prompt length.
     """
 
-    def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
-                 freeze_cfg: Optional[FreezeConfig] = None,
-                 enable_freeze: bool = True,
-                 offload: bool = True,
-                 max_rewinds: int = 4,
-                 rewind_cooldown: int = 32,
-                 pad_id: int = 0,
-                 offload_every: int = 8,
-                 seed: int = 0,
-                 min_prompt_bucket: int = 8,
-                 debug_lane_checks: bool = False,
-                 async_pipeline: bool = True,
-                 chaos: Optional[ChaosConfig] = None,
-                 stash_budget_bytes: Optional[int] = None,
-                 ladder: Optional[LadderConfig] = None,
-                 quarantine_window: int = 64,
-                 kv_quant: str = "none"):
-        super().__init__(cfg, params, max_seq, n_lanes,
-                         freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
-                         pad_id=pad_id, seed=seed,
-                         min_prompt_bucket=min_prompt_bucket,
-                         async_pipeline=async_pipeline,
-                         chaos=chaos, stash_budget_bytes=stash_budget_bytes,
-                         ladder=ladder, quarantine_window=quarantine_window)
-        quant.resolve_mode(kv_quant)
-        self.kv_quant = kv_quant
-        self.max_rewinds = max_rewinds
-        self.rewind_cooldown = rewind_cooldown
+    def __init__(self, cfg: ModelConfig, params,
+                 max_seq: Optional[int] = None,
+                 n_lanes: Optional[int] = None,
+                 serving: Optional[ServingConfig] = None,
+                 **legacy):
+        sv = resolve_serving_config(serving, "contiguous", max_seq, n_lanes,
+                                    legacy)
+        super().__init__(cfg, params, sv)
+        quant.resolve_mode(sv.kv_quant)
+        self.kv_quant = sv.kv_quant
+        self.max_rewinds = sv.max_rewinds
+        self.rewind_cooldown = sv.rewind_cooldown
         # legacy knob, no longer a wall-clock cadence: the freeze mask now
         # rides the per-step fetch ring (~KBs) and `needs_sync` triggers
         # the cache round-trip exactly when a page crosses fully-frozen —
         # retained so existing callers keep constructing
-        self.offload_every = offload_every
-        self.debug_lane_checks = debug_lane_checks
+        self.offload_every = sv.offload_every
+        self.debug_lane_checks = sv.debug_lane_checks
         # donated decode state: the per-step KV/freeze buffers are reused in
         # place rather than double-buffered in HBM (no-op on CPU)
         self._prefill = jax.jit(functools.partial(MD.prefill, cfg=cfg),
                                 donate_argnames=("state",))
         self._step = jax.jit(functools.partial(
             MD.decode_step, cfg=cfg, freeze_cfg=self.fcfg,
-            enable_freeze=enable_freeze), donate_argnames=("state",))
+            enable_freeze=self.enable_freeze), donate_argnames=("state",))
         self._write_lane = jax.jit(functools.partial(MD.write_lane_state, cfg),
                                    donate_argnames=("state", "lane_state"))
-        self.state = MD.init_decode_state(cfg, n_lanes, max_seq)
+        self.state = MD.init_decode_state(cfg, self.n_lanes, self.max_seq)
         self.offloader = HostOffloadController(self.fcfg.page_size) \
-            if (offload and enable_freeze) else None
+            if (sv.offload and self.enable_freeze) else None
         if self.offloader is not None:
-            self.offloader.stash_budget_bytes = stash_budget_bytes
-            self.offloader.kv_quant = kv_quant
+            self.offloader.stash_budget_bytes = sv.stash_budget_bytes
+            self.offloader.kv_quant = sv.kv_quant
 
     def _stash_bytes(self) -> int:
         return self.offloader.stash_bytes if self.offloader else 0
@@ -886,12 +928,13 @@ class ContinuousEngine(_LaneEngineBase):
                     **kw) -> "ContinuousEngine":
         """Build a continuous engine sharing a static Engine's model and
         freeze settings (the Scheduler's compatibility path)."""
-        return cls(engine.cfg, engine.params, engine.max_seq, n_lanes,
-                   freeze_cfg=engine.fcfg,
-                   enable_freeze=engine.enable_freeze,
-                   offload=engine.offload,
-                   max_rewinds=engine.max_rewinds,
-                   rewind_cooldown=engine.rewind_cooldown, **kw)
+        sv = ServingConfig(max_seq=engine.max_seq, n_lanes=n_lanes,
+                           freeze_cfg=engine.fcfg,
+                           enable_freeze=engine.enable_freeze,
+                           offload=engine.offload,
+                           max_rewinds=engine.max_rewinds,
+                           rewind_cooldown=engine.rewind_cooldown, **kw)
+        return cls(engine.cfg, engine.params, serving=sv)
 
     @property
     def kv_device_bytes(self) -> int:
@@ -1294,47 +1337,30 @@ class PagedContinuousEngine(_LaneEngineBase):
       mirroring ``ContinuousEngine``.
     """
 
-    def __init__(self, cfg: ModelConfig, params, max_seq: int, n_lanes: int,
-                 max_active_pages: int,
-                 freeze_cfg: Optional[FreezeConfig] = None,
-                 enable_freeze: bool = True,
-                 prefill_chunk: int = 64,
-                 max_rewinds: int = 4,
-                 rewind_cooldown: int = 32,
-                 pad_id: int = 0,
-                 seed: int = 0,
-                 min_prompt_bucket: int = 8,
-                 async_pipeline: bool = True,
-                 speculative_thaw: Optional[bool] = None,
-                 speculative_slots: int = 3,
-                 burst_prefill: bool = True,
-                 chaos: Optional[ChaosConfig] = None,
-                 stash_budget_bytes: Optional[int] = None,
-                 ladder: Optional[LadderConfig] = None,
-                 quarantine_window: int = 64,
-                 kv_quant: str = "none",
-                 debug_invariants: bool = False):
-        super().__init__(cfg, params, max_seq, n_lanes,
-                         freeze_cfg=freeze_cfg, enable_freeze=enable_freeze,
-                         pad_id=pad_id, seed=seed,
-                         min_prompt_bucket=min_prompt_bucket,
-                         async_pipeline=async_pipeline,
-                         chaos=chaos, stash_budget_bytes=stash_budget_bytes,
-                         ladder=ladder, quarantine_window=quarantine_window)
-        quant.resolve_mode(kv_quant)          # fail fast on bad/unsupported
-        self.kv_quant = kv_quant
-        self.debug_invariants = debug_invariants
-        assert max_active_pages >= 3, "pool needs tail + swap headroom"
-        assert prefill_chunk >= 1
+    def __init__(self, cfg: ModelConfig, params,
+                 max_seq: Optional[int] = None,
+                 n_lanes: Optional[int] = None,
+                 max_active_pages: Optional[int] = None,
+                 serving: Optional[ServingConfig] = None,
+                 **legacy):
+        sv = resolve_serving_config(serving, "paged", max_seq, n_lanes,
+                                    legacy, max_active_pages=max_active_pages)
+        super().__init__(cfg, params, sv)
+        quant.resolve_mode(sv.kv_quant)       # fail fast on bad/unsupported
+        self.kv_quant = sv.kv_quant
+        self.debug_invariants = sv.debug_invariants
+        assert sv.max_active_pages >= 3, "pool needs tail + swap headroom"
+        assert sv.prefill_chunk >= 1
+        max_active_pages = sv.max_active_pages
         self.P = max_active_pages          # usable (allocator-visible) pool
         self.page = self.fcfg.page_size
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = sv.prefill_chunk
         # load-adaptive burst chunks make the chunk split (and with it the
         # flash-attention summation order) depend on engine busyness;
         # disable for runs that must be bit-reproducible across pipelines
-        self.burst_prefill = burst_prefill
-        self.max_rewinds = max_rewinds
-        self.rewind_cooldown = rewind_cooldown
+        self.burst_prefill = sv.burst_prefill
+        self.max_rewinds = sv.max_rewinds
+        self.rewind_cooldown = sv.rewind_cooldown
         self.pending_thaws: set = set()   # lanes owed a host thaw (FR level)
         # speculative-thaw staging: S extra physical slots per (layer, lane)
         # hold prefetched stashed pages so a thaw is a page-table remap.
@@ -1342,14 +1368,15 @@ class PagedContinuousEngine(_LaneEngineBase):
         # (reserved_slots), so a P+S pool with S reserved is step-for-step
         # identical to a plain P pool — async and sync arms stay
         # token-parity even though only the async arm stages.
+        speculative_thaw = sv.speculative_thaw
         if speculative_thaw is None:
-            speculative_thaw = async_pipeline
-        self.S_stage = speculative_slots if (speculative_thaw
-                                             and enable_freeze) else 0
+            speculative_thaw = sv.async_pipeline
+        self.S_stage = sv.speculative_slots if (speculative_thaw
+                                                and self.enable_freeze) else 0
         self.P_total = self.P + self.S_stage
         self._step = jax.jit(functools.partial(
             MD.decode_step_paged, cfg=cfg, freeze_cfg=self.fcfg,
-            enable_freeze=enable_freeze, reserved_slots=self.S_stage),
+            enable_freeze=self.enable_freeze, reserved_slots=self.S_stage),
             donate_argnames=("state",))
         self._rewind = jax.jit(
             functools.partial(MD.rewind_paged_lane, cfg, page=self.page),
@@ -1410,24 +1437,24 @@ class PagedContinuousEngine(_LaneEngineBase):
         self._set_recovery = jax.jit(_set_rec_fn,
                                      donate_argnames=("state",))
         self.state = MD.init_paged_decode_state(
-            cfg, n_lanes, max_active_pages, staging_slots=self.S_stage)
+            cfg, self.n_lanes, max_active_pages, staging_slots=self.S_stage)
         self.L_attn = max(self.state.page_table.shape[0], 1)
         assert self.state.page_table.shape[0] == cfg.num_layers, \
             "paged continuous batching requires an attention-only stack"
-        self.ctl = PagedController(cfg=cfg, batch=n_lanes,
+        self.ctl = PagedController(cfg=cfg, batch=self.n_lanes,
                                    max_active_pages=max_active_pages)
-        self.ctl.kv_quant = kv_quant
-        self.ctl.stash_budget_bytes = stash_budget_bytes
+        self.ctl.kv_quant = sv.kv_quant
+        self.ctl.stash_budget_bytes = sv.stash_budget_bytes
         if self.injector is not None:
-            self.ep_stash = chaos.build_endpoint(
+            self.ep_stash = sv.chaos.build_endpoint(
                 "stash", self.injector, must_succeed=False)
             self.ctl.stash_endpoint = self.ep_stash
             self._endpoints["stash"] = self.ep_stash
         else:
             self.ep_stash = None
-        self.tail_slot = np.zeros((self.L_attn, n_lanes), np.int32)
+        self.tail_slot = np.zeros((self.L_attn, self.n_lanes), np.int32)
         self.prefills: Dict[int, _PendingPrefill] = {}
-        self._urgency = np.zeros(n_lanes, np.float32)   # thaw trend / lane
+        self._urgency = np.zeros(self.n_lanes, np.float32)  # thaw trend/lane
         self.n_boundary_ticks = 0   # boundary maintenance passes (each one
                                     # batched pull + one push)
         self.n_kv_pushes = 0        # pushes that had to carry pool K/V
@@ -2344,6 +2371,24 @@ class PagedContinuousEngine(_LaneEngineBase):
                             "lane": lane, "wall_step": self.wall_step,
                             "stashed_pages": len(snap.stashed)})
         return lane
+
+    def cancel_request(self, uid: int) -> Optional[Request]:
+        """Paged cancellation also reaches a preemptor still running its
+        ``admit_over`` chunked prefill: the prefill's scratch cache never
+        touched the lane's page pool, so dropping the pending prefill is
+        the whole cancellation — the victim keeps decoding, undisturbed."""
+        for lane, pp in list(self.prefills.items()):
+            if pp.req.uid == uid and pp.over:
+                self.prefills.pop(lane)
+                req = pp.req
+                req.status = RequestStatus.CANCELLED
+                req.result = np.zeros(0, np.int32)
+                self.events.append({"event": "cancel", "uid": uid,
+                                    "lane": lane,
+                                    "wall_step": self.wall_step,
+                                    "generated": 0})
+                return req
+        return super().cancel_request(uid)
 
     def discard_snapshot(self, snap: LaneSnapshot) -> None:
         """A suspended paged request that will never resume still owns

@@ -208,13 +208,17 @@ class ReplicaRouter:
                sampling: SamplingParams = SamplingParams(),
                priority: int = 0,
                deadline_ms: Optional[float] = None,
-               slo_tokens_per_s: Optional[float] = None) -> int:
+               slo_tokens_per_s: Optional[float] = None,
+               tenant: Optional[str] = None) -> int:
         """Router-global uid; the request lands on the best-scored live
-        replica's queue immediately."""
+        replica's queue immediately.  ``tenant`` rides the request across
+        placements and failovers — pass ONE shared ``TenancyController``
+        through ``sched_kw=dict(tenancy=...)`` and quotas/fair shares
+        hold router-wide, not per replica."""
         self._uid += 1
         req = Request(self._uid, np.asarray(prompt, np.int32), n_tokens,
                       sampling, priority=priority, deadline_ms=deadline_ms,
-                      slo_tokens_per_s=slo_tokens_per_s)
+                      slo_tokens_per_s=slo_tokens_per_s, tenant=tenant)
         self.requests[req.uid] = req
         now = self.clock()
         deadlines = []

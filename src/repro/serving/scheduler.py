@@ -32,7 +32,19 @@ The miss prediction is deliberately simple: an EMA of observed engine
 step time, the shortest remaining work across running lanes as the
 time-to-free estimate, and chunk-count + decode-length as the service
 estimate.  It only gates *when* a preemption fires; correctness never
-depends on it.
+depends on it.  A second model gates whether preempting is *worth it*:
+EMAs of the measured suspend and resume wall cost (``preempt_cost_s``)
+veto preemptions whose overhead would eat the whole queue-wait saving.
+
+**Multi-tenancy (PR 10).**  With a ``TenancyController``
+(serving/tenancy.py) attached, admission enforces per-tenant quotas
+(concurrent-lane caps, token-rate buckets) and weighted fair sharing:
+within a priority class the backlogged tenant with the smallest WFQ
+virtual time is admitted first, and every committed decode token
+advances its tenant's vtime by ``1/weight``.  ``cancel`` / ``pause`` /
+``release`` are the server front end's hooks — client disconnects and
+per-connection backpressure both route into the freeze-native
+suspend/drop machinery rather than growing new engine surface.
 
 Both engines default to the async DMA pipeline (serving/dma.py): a
 request may retire one ``step_once`` call after its final token was
@@ -56,8 +68,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.engine import (ContinuousEngine, Engine, LaneSnapshot,
-                                  PagedContinuousEngine, Request)
+                                  PagedContinuousEngine, Request,
+                                  RequestStatus)
 from repro.serving.sampling import SamplingParams
+from repro.serving.tenancy import TenancyController
 
 _INF = float("inf")
 
@@ -88,6 +102,7 @@ class Scheduler:
                  policy: str = "slo",
                  preemption: bool = True,
                  aging_s: Optional[float] = None,
+                 tenancy: Optional[TenancyController] = None,
                  clock=time.monotonic, **kw):
         if isinstance(engine, (ContinuousEngine, PagedContinuousEngine)):
             self.engine = engine
@@ -110,7 +125,19 @@ class Scheduler:
         # per-uid SLO bookkeeping (wall times are scheduler-relative)
         self.metrics: Dict[int, Dict[str, Any]] = {}
         self.n_preemptions = 0
+        self.n_cancelled = 0
         self._step_s: Optional[float] = None   # EMA of engine step time
+        # multi-tenant quotas + weighted fair sharing (serving/tenancy.py);
+        # None keeps the single-tenant behaviour bit-for-bit.  A router
+        # passes ONE shared controller to every replica via sched_kw.
+        self.tenancy = tenancy
+        # preemption cost model (the ROADMAP's missing piece): EMAs of the
+        # measured wall cost of a suspend and of a resume.  Until BOTH
+        # have been observed, preempt_cost_s() reports 0.0 — the first
+        # preemption always proceeds and seeds the calibration.
+        self._suspend_s: Optional[float] = None
+        self._resume_s: Optional[float] = None
+        self.n_preempt_skipped_cost = 0
 
     # ---------------- queue plumbing ---------------- #
     def _deadline_t(self, uid: int) -> Optional[float]:
@@ -165,15 +192,48 @@ class Scheduler:
     def _pop(self) -> Union[Request, LaneSnapshot]:
         return heapq.heappop(self.queue)[-1]
 
+    def _pop_admissible(self) -> Optional[Union[Request, LaneSnapshot]]:
+        """Pop the next item admission should take.  Without a tenancy
+        controller this is the plain heap head.  With one, entries of
+        quota-blocked tenants (lane cap reached, token bucket empty) are
+        passed over, and WITHIN a priority class the backlogged tenant
+        with the smallest WFQ virtual time goes first.  vtime moves with
+        every committed token, so the fair-share ordering is computed at
+        pop time over a linear scan — the heap keys keep providing the
+        class/EDF/seq order for the tenancy-free path and the
+        tie-breaks.  Returns None when nothing is quota-admissible."""
+        if not self.queue:
+            return None
+        if self.tenancy is None:
+            return heapq.heappop(self.queue)[-1]
+        adm: Dict[Optional[str], bool] = {}
+        best_i, best_key = None, None
+        for i, (p, dl, seq, item) in enumerate(self.queue):
+            req = item.req if isinstance(item, LaneSnapshot) else item
+            ok = adm.get(req.tenant)
+            if ok is None:
+                ok = adm[req.tenant] = self.tenancy.may_admit(req.tenant)
+            if not ok:
+                continue
+            key = (p, self.tenancy.vtime(req.tenant), dl, seq)
+            if best_key is None or key < best_key:
+                best_i, best_key = i, key
+        if best_i is None:
+            return None
+        item = self.queue.pop(best_i)[-1]
+        heapq.heapify(self.queue)
+        return item
+
     def submit(self, prompt: np.ndarray, n_tokens: int,
                sampling: SamplingParams = SamplingParams(),
                priority: int = 0,
                deadline_ms: Optional[float] = None,
-               slo_tokens_per_s: Optional[float] = None) -> int:
+               slo_tokens_per_s: Optional[float] = None,
+               tenant: Optional[str] = None) -> int:
         self._uid += 1
         req = Request(self._uid, np.asarray(prompt, np.int32), n_tokens,
                       sampling, priority=priority, deadline_ms=deadline_ms,
-                      slo_tokens_per_s=slo_tokens_per_s)
+                      slo_tokens_per_s=slo_tokens_per_s, tenant=tenant)
         now = self.clock()
         deadlines = []
         if deadline_ms is not None:
@@ -185,8 +245,10 @@ class Scheduler:
             "arrival_t": now, "priority": priority, "seq": self._seq,
             "deadline_t": min(deadlines) if deadlines else None,
             "finish_t": None, "deadline_hit": None, "preempted": 0,
-            "shed": 0,
+            "shed": 0, "tenant": tenant,
         }
+        if self.tenancy is not None:
+            self.tenancy.note_enqueue(tenant)
         self._push(req)
         return self._uid
 
@@ -214,8 +276,10 @@ class Scheduler:
             "arrival_t": now, "priority": req.priority, "seq": self._seq,
             "deadline_t": deadline_t,
             "finish_t": None, "deadline_hit": None, "preempted": 0,
-            "shed": 0,
+            "shed": 0, "tenant": req.tenant,
         }
+        if self.tenancy is not None:
+            self.tenancy.note_enqueue(req.tenant)
         self._push(req)
         return req.uid
 
@@ -233,7 +297,10 @@ class Scheduler:
         self._seq += 1
         row = dict(row)
         row["seq"] = self._seq
+        row.setdefault("tenant", req.tenant)
         self.metrics[req.uid] = row
+        if self.tenancy is not None:
+            self.tenancy.note_enqueue(req.tenant)
         self._push(item)
 
     def extract_pending(self) -> List[tuple]:
@@ -249,6 +316,93 @@ class Scheduler:
             req = item.req if isinstance(item, LaneSnapshot) else item
             out.append((item, self.metrics[req.uid]))
         return out
+
+    # ---------------- server front end (serving/server.py) ---------- #
+    def _remove_queued(self, uid: int) \
+            -> Optional[Union[Request, LaneSnapshot]]:
+        for i, e in enumerate(self.queue):
+            item = e[-1]
+            req = item.req if isinstance(item, LaneSnapshot) else item
+            if req.uid == uid:
+                self.queue.pop(i)
+                heapq.heapify(self.queue)
+                return item
+        return None
+
+    def _finish_cancelled(self, req: Request) -> None:
+        self.done[req.uid] = req
+        m = self.metrics[req.uid]
+        m["finish_t"] = self.clock()
+        m["deadline_hit"] = None      # cancelled: excluded from SLO stats
+        self.n_cancelled += 1
+        if self.tenancy is not None:
+            n = 0 if req.result is None else int(len(req.result))
+            self.tenancy.note_done(req.tenant, req.uid, n, cancelled=True)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a live request (the server's client-disconnect path).
+        A queued entry is removed — a suspended victim's snapshot is
+        discarded through the engine, so its exported stash bytes
+        release; a running lane goes through the engine's freeze-native
+        ``cancel_request`` (suspend + drop).  Either way no scheduler
+        entry is stranded: the uid lands in ``done`` with status
+        ``CANCELLED`` and its partial tokens as the result.  Returns
+        False when the uid already finished — including retiring during
+        the cancel's own ring flush, in which case it is too late to
+        cancel and the completed result surfaces via ``step`` as
+        normal."""
+        if uid in self.done or uid not in self.metrics:
+            return False
+        item = self._remove_queued(uid)
+        if item is not None:
+            req = item.req if isinstance(item, LaneSnapshot) else item
+            if isinstance(item, LaneSnapshot):
+                self.engine.discard_snapshot(item)
+                req.result = np.asarray(item.generated[: req.n_tokens],
+                                        np.int32)
+            else:
+                req.result = np.zeros(0, np.int32)
+            req.status = RequestStatus.CANCELLED
+            self._finish_cancelled(req)
+            return True
+        req = self.engine.cancel_request(uid)
+        if req is None:
+            return False
+        self._finish_cancelled(req)
+        return True
+
+    def pause(self, uid: int) -> Optional[Union[Request, LaneSnapshot]]:
+        """Freeze-native backpressure (the server's consumer queue is
+        full): suspend the uid's lane — or pull its still-queued entry —
+        and hand the item to the caller WITHOUT requeueing it, so the
+        scheduler cannot resume it until the caller gives it back via
+        :meth:`release`.  Returns None when the uid is not pauseable
+        right now (already finishing, or mid-install on the paged
+        engine)."""
+        if uid in self.done or uid not in self.metrics:
+            return None
+        item = self._remove_queued(uid)
+        if item is not None:
+            return item
+        eng = self.engine
+        for i, l in enumerate(eng.lanes):
+            if l.request is not None and l.request.uid == uid:
+                t0 = self.clock()
+                snap = eng.suspend_lane(i)
+                self._obs("_suspend_s", self.clock() - t0)
+                if snap is None:
+                    return None           # retired during the flush
+                if self.tenancy is not None:
+                    self.tenancy.note_release(snap.req.tenant, uid)
+                return snap
+        return None
+
+    def release(self, item: Union[Request, LaneSnapshot]) -> None:
+        """Requeue a paused item (the consumer drained its queue)."""
+        req = item.req if isinstance(item, LaneSnapshot) else item
+        if self.tenancy is not None:
+            self.tenancy.note_enqueue(req.tenant)
+        self._push(item)
 
     # ---------------- admission + preemption ---------------- #
     def _admit_free(self) -> None:
@@ -278,11 +432,18 @@ class Scheduler:
                     eng.ladder_cfg.throttle_admissions:
                 eng.robust["ladder_throttle"] += 1
                 return
-            item = self._pop()
+            item = self._pop_admissible()
+            if item is None:
+                return                      # nothing quota-admissible
+            req = item.req if isinstance(item, LaneSnapshot) else item
             if isinstance(item, LaneSnapshot):
+                t0 = self.clock()
                 eng.resume_lane(item)
+                self._obs("_resume_s", self.clock() - t0)
             else:
                 eng.admit(item)
+            if self.tenancy is not None:
+                self.tenancy.note_admit(req.tenant, req.uid)
             admitted += 1
 
     def _est_service_s(self, item: Union[Request, LaneSnapshot]) -> float:
@@ -311,6 +472,22 @@ class Scheduler:
         rem = min(self.engine.lanes[i].request.n_tokens
                   - len(self.engine.lanes[i].generated) for i in lanes)
         return max(rem, 0) * self._step_s
+
+    def _obs(self, attr: str, dt: float) -> None:
+        """Fold one wall-time observation into an EMA attribute (same
+        0.7/0.3 blend as the step-time EMA)."""
+        cur = getattr(self, attr)
+        setattr(self, attr, dt if cur is None else 0.7 * cur + 0.3 * dt)
+
+    def preempt_cost_s(self) -> float:
+        """Predicted wall cost of one preemption cycle: suspending the
+        victim now plus resuming its snapshot later, from the measured
+        EMAs.  0.0 until both legs have been observed — a cost model
+        calibrated from nothing would only ever veto, so the scheduler
+        preempts freely first and lets the measurements argue back."""
+        if self._suspend_s is None or self._resume_s is None:
+            return 0.0
+        return self._suspend_s + self._resume_s
 
     def _pick_victim(self, priority: int) -> Optional[int]:
         """The least valuable running lane strictly below `priority`:
@@ -352,11 +529,23 @@ class Scheduler:
             dl = self._deadline_t(req.uid)
             if dl is None:
                 return                      # no deadline -> no urgency
+            if self.tenancy is not None \
+                    and not self.tenancy.may_admit(req.tenant):
+                return    # quota-blocked: a freed lane couldn't seat it
             running = [i for i, l in enumerate(self.engine.lanes)
                        if l.request is not None]
             wait = self._est_free_s(running)
             if self.clock() + wait + self._est_service_s(head) <= dl:
                 return                      # on track without preempting
+            # cost model: preempting buys at most `wait` (the natural
+            # time-to-free) for the head, and costs a suspend now plus a
+            # resume later.  When the overhead eats the whole gain the
+            # preemption is pure churn — skip it and let the lane free
+            # naturally.
+            cost = self.preempt_cost_s()
+            if cost > 0.0 and wait <= cost:
+                self.n_preempt_skipped_cost += 1
+                return
             victim = self._pick_victim(self._eff_priority(req))
             if victim is None:
                 return                      # nothing less important runs
@@ -373,11 +562,15 @@ class Scheduler:
                 # immediate suspension: resuming a snapshot needs the lane
                 # free NOW (its pool slice pushes right back), and the
                 # contiguous engine has no scratch prefill to overlap
-                vic_uid = self.engine.lanes[victim].request.uid
+                vic = self.engine.lanes[victim].request
+                t0 = self.clock()
                 snap = self.engine.suspend_lane(victim)
+                self._obs("_suspend_s", self.clock() - t0)
                 if snap is not None:
-                    self.metrics[vic_uid]["preempted"] += 1
+                    self.metrics[vic.uid]["preempted"] += 1
                     self.n_preemptions += 1
+                    if self.tenancy is not None:
+                        self.tenancy.note_release(vic.tenant, vic.uid)
                     self._push(snap)
                 # the freed lane is filled by the _admit_free that follows
             return
@@ -399,12 +592,16 @@ class Scheduler:
         if victim is None:
             return
         req = self.engine.lanes[victim].request
+        t0 = self.clock()
         snap = self.engine.suspend_lane(victim)
+        self._obs("_suspend_s", self.clock() - t0)
         if snap is None:
             return                          # retired during the flush
-        req.status = "shed"
+        req.status = RequestStatus.SHED
         self.metrics[req.uid]["shed"] += 1
         self.engine.robust["ladder_shed"] += 1
+        if self.tenancy is not None:
+            self.tenancy.note_release(req.tenant, req.uid)
         self._push(snap)
 
     def _schedule(self) -> None:
@@ -441,9 +638,21 @@ class Scheduler:
         dt = self.clock() - t0
         self._step_s = dt if self._step_s is None \
             else 0.7 * self._step_s + 0.3 * dt
+        if self.tenancy is not None:
+            # charge each tenant the committed tokens its lanes gained
+            # this step (delta-based: rewinds shrink `generated` and are
+            # simply not refunded)
+            for l in self.engine.lanes:
+                if l.request is not None:
+                    self.tenancy.note_progress(
+                        l.request.tenant, l.request.uid, len(l.generated))
         for snap in self.engine.drain_suspended():
             self.metrics[snap.req.uid]["preempted"] += 1
             self.n_preemptions += 1
+            if self.tenancy is not None:
+                self.tenancy.note_progress(snap.req.tenant, snap.req.uid,
+                                           len(snap.generated))
+                self.tenancy.note_release(snap.req.tenant, snap.req.uid)
             self._push(snap)
         out = []
         now = self.clock()
@@ -453,6 +662,9 @@ class Scheduler:
             m["finish_t"] = now
             dl = m["deadline_t"]
             m["deadline_hit"] = None if dl is None else bool(now <= dl)
+            if self.tenancy is not None:
+                self.tenancy.note_done(req.tenant, req.uid,
+                                       int(len(req.result)))
             out.append(req.uid)
         return out
 

@@ -1,0 +1,367 @@
+"""The streaming server front end (serving/server.py): scheduler-level
+cancellation (mid-decode, mid-chunked-prefill, queued), freeze-native
+pause/release backpressure, async streaming parity with the batch path,
+client-disconnect cancellation with surviving-peer token parity, and the
+stdlib HTTP/SSE round trip."""
+import asyncio
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import audit_controller
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving.config import ServingConfig
+from repro.serving.engine import PagedContinuousEngine, Request, RequestStatus
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler
+from repro.serving.server import AsyncServingEngine, ServingServer
+from repro.serving.tenancy import TenancyController, TenantConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_f32():
+    cfg = get_config("llama3-8b-tiny")
+    fc = dataclasses.replace(cfg.freeze, page_size=8, window=8,
+                             tau_mode="quantile", quantile=0.5, k_soft=1.0,
+                             recovery_enabled=False)
+    cfg = dataclasses.replace(cfg, freeze=fc, dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def paged_engine(cfg, params, n_lanes=2, pages=4, max_seq=128):
+    return PagedContinuousEngine(cfg, params, serving=ServingConfig(
+        max_seq=max_seq, n_lanes=n_lanes, max_active_pages=pages,
+        prefill_chunk=8, burst_prefill=False))
+
+
+def run_alone(cfg, params, req_args, **eng_kw):
+    eng = paged_engine(cfg, params, **eng_kw)
+    req = Request(1, *req_args)
+    eng.admit(req)
+    while req.result is None:
+        eng.step_once()
+    return np.asarray(req.result)
+
+
+def _run(coro, timeout=300.0):
+    asyncio.run(asyncio.wait_for(coro, timeout))
+
+
+def _parse_sse(body: str):
+    """[(event, data), ...] from a raw SSE byte stream."""
+    out = []
+    for block in body.split("\n\n"):
+        block = block.strip()
+        if not block:
+            continue
+        lines = block.split("\n")
+        assert lines[0].startswith("event: ") and \
+            lines[1].startswith("data: "), block
+        out.append((lines[0][7:], json.loads(lines[1][6:])))
+    return out
+
+
+class TestSchedulerCancel:
+    """The server's hooks, exercised synchronously (deterministic)."""
+
+    def test_cancel_mid_decode(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(0)
+        prompt = rng.randint(0, cfg.vocab_size, size=20).astype(np.int32)
+        ref = run_alone(cfg, params, (prompt, 32, SamplingParams.greedy()))
+        sched = Scheduler(paged_engine(cfg, params))
+        uid = sched.submit(prompt, 32, SamplingParams.greedy())
+        for _ in range(12):
+            sched.step()
+        assert sched.cancel(uid)
+        req = sched.done[uid]
+        assert req.status == RequestStatus.CANCELLED
+        # the partial result is the committed prefix of the solo run
+        assert 1 <= len(req.result) < 32
+        np.testing.assert_array_equal(req.result, ref[: len(req.result)])
+        # lane freed, nothing stranded, controller accounting exact
+        assert sched.engine.n_active_lanes == 0
+        assert sched.metrics[uid]["finish_t"] is not None
+        assert sched.metrics[uid]["deadline_hit"] is None
+        audit_controller(sched.engine.ctl)
+        assert not sched.cancel(uid)        # already finished: idempotent
+
+    def test_cancel_mid_chunked_prefill(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(1)
+        prompt = rng.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+        sched = Scheduler(paged_engine(cfg, params, max_seq=160))
+        eng = sched.engine
+        uid = sched.submit(prompt, 8, SamplingParams.greedy())
+        sched.step()                        # admit + first prefill chunk
+        assert 0 in eng.prefills, "test premise: mid-prefill"
+        assert sched.cancel(uid)
+        assert sched.done[uid].status == RequestStatus.CANCELLED
+        assert sched.done[uid].result.shape == (0,)
+        assert 0 not in eng.prefills and eng.lanes[0].request is None
+        audit_controller(eng.ctl)
+        # the engine is unharmed: the next request serves with parity
+        ref = run_alone(cfg, params, (prompt, 8, SamplingParams.greedy()),
+                        max_seq=160)
+        uid2 = sched.submit(prompt, 8, SamplingParams.greedy())
+        sched.run()
+        np.testing.assert_array_equal(ref, sched.done[uid2].result)
+
+    def test_cancel_queued_and_suspended(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(2)
+        sched = Scheduler(paged_engine(cfg, params))
+        mk = lambda: sched.submit(
+            rng.randint(0, cfg.vocab_size, size=10), 16,
+            SamplingParams.greedy())
+        a, b, c = mk(), mk(), mk()          # 2 lanes: c stays queued
+        assert sched.cancel(c)              # plain queued entry
+        assert sched.done[c].result.shape == (0,)
+        for _ in range(6):
+            sched.step()
+        snap = sched.pause(a)               # park a's lane (snapshot)
+        assert snap is not None
+        sched.release(snap)                 # now a queued LaneSnapshot
+        assert sched.cancel(a)              # discard-snapshot path
+        req = sched.done[a]
+        assert req.status == RequestStatus.CANCELLED
+        assert len(req.result) >= 1         # keeps its partial tokens
+        sched.run()
+        assert sched.done[b].result.shape == (16,)
+        assert sched.n_cancelled == 2
+        audit_controller(sched.engine.ctl)
+
+    def test_pause_holds_release_resumes_with_parity(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(3)
+        prompt = rng.randint(0, cfg.vocab_size, size=20).astype(np.int32)
+        ref = run_alone(cfg, params, (prompt, 24, SamplingParams.greedy()))
+        sched = Scheduler(paged_engine(cfg, params))
+        uid = sched.submit(prompt, 24, SamplingParams.greedy())
+        for _ in range(8):
+            sched.step()
+        item = sched.pause(uid)
+        assert item is not None
+        assert sched.engine.n_active_lanes == 0
+        for _ in range(4):                  # the scheduler cannot resume it
+            sched.step()
+        assert uid not in sched.done and not sched.queue
+        sched.release(item)
+        sched.run()
+        np.testing.assert_array_equal(ref, sched.done[uid].result)
+
+
+class TestAsyncServingEngine:
+    def test_streaming_parity_with_batch_path(self, tiny_f32):
+        """The streamed committed sequence (tokens + rewinds replayed)
+        equals both the terminal event and the uninterrupted batch-path
+        result."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(10)
+        prompt = rng.randint(0, cfg.vocab_size, size=20).astype(np.int32)
+        ref = run_alone(cfg, params, (prompt, 24, SamplingParams.greedy()))
+
+        async def go():
+            ae = AsyncServingEngine(Scheduler(paged_engine(cfg, params)))
+            await ae.start()
+            try:
+                stream = await ae.submit(prompt, 24)
+                fin = await stream.collect()
+                assert fin["status"] == "completed"
+                assert fin["streamed"] == fin["tokens"] == ref.tolist()
+                st = await ae.stats()
+                assert st["unhandled_exceptions"] == 0
+                assert st["streams"] == 0 and st["done"] == 1
+            finally:
+                await ae.close()
+
+        _run(go())
+
+    def test_mid_decode_disconnect_peer_unaffected(self, tiny_f32):
+        """Cancel one of two concurrent streams after 3 tokens: its lane
+        frees (audit-clean, no stranded entry), its terminal carries the
+        committed prefix of its solo run, and the SURVIVING stream's
+        tokens are identical to a solo run — cancellation is invisible to
+        the peer lane."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(11)
+        vic_p = rng.randint(0, cfg.vocab_size, size=20).astype(np.int32)
+        sur_p = rng.randint(0, cfg.vocab_size, size=16).astype(np.int32)
+        ref_vic = run_alone(cfg, params, (vic_p, 48, SamplingParams.greedy()))
+        ref_sur = run_alone(cfg, params, (sur_p, 24, SamplingParams.greedy()))
+        sched = Scheduler(paged_engine(cfg, params))
+
+        async def go():
+            ae = AsyncServingEngine(sched)
+            await ae.start()
+            try:
+                victim = await ae.submit(vic_p, 48)
+                surv = await ae.submit(sur_p, 24)
+                got = []
+                async for ev in victim:
+                    if ev["event"] == "token":
+                        got.append(ev["token"])
+                        if len(got) >= 3:
+                            break
+                assert await ae.cancel(victim.uid)
+                fin_v = None
+                async for ev in victim:     # drain to the terminal
+                    if ev["event"] == "token":
+                        got.append(ev["token"])
+                    elif ev["event"] == "rewind":
+                        del got[ev["to"]:]
+                    else:
+                        fin_v = ev
+                assert fin_v["status"] == "cancelled"
+                assert got == fin_v["tokens"]
+                assert 3 <= len(got) < 48
+                assert got == ref_vic[: len(got)].tolist()
+                fin_s = await surv.collect()
+                assert fin_s["status"] == "completed"
+                assert fin_s["streamed"] == ref_sur.tolist()
+                st = await ae.stats()
+                assert st["n_cancelled"] == 1
+                assert st["active_lanes"] == 0 and st["streams"] == 0
+                assert st["unhandled_exceptions"] == 0
+            finally:
+                await ae.close()
+
+        _run(go())
+        assert all(m["finish_t"] is not None
+                   for m in sched.metrics.values())
+        audit_controller(sched.engine.ctl)
+
+    def test_slow_consumer_pauses_and_resumes(self, tiny_f32):
+        """A consumer that stops reading fills its bounded queue; the
+        serve loop parks the request through Scheduler.pause (lane frees)
+        and releases it when the queue drains — with full token parity."""
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(12)
+        prompt = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+        ref = run_alone(cfg, params, (prompt, 32, SamplingParams.greedy()))
+
+        async def go():
+            ae = AsyncServingEngine(Scheduler(paged_engine(cfg, params)),
+                                    stream_capacity=6)
+            await ae.start()
+            try:
+                stream = await ae.submit(prompt, 32)
+                deadline = asyncio.get_running_loop().time() + 120
+                while True:                 # read nothing: queue must fill
+                    st = await ae.stats()
+                    if st["n_paused"] >= 1:
+                        break
+                    assert asyncio.get_running_loop().time() < deadline, \
+                        "backpressure never paused the request"
+                    await asyncio.sleep(0.01)
+                fin = await stream.collect()
+                assert fin["status"] == "completed"
+                assert fin["streamed"] == fin["tokens"] == ref.tolist()
+                st = await ae.stats()
+                assert st["n_paused"] >= 1 and st["n_resumed"] >= 1
+                assert st["unhandled_exceptions"] == 0
+            finally:
+                await ae.close()
+
+        _run(go())
+
+
+class TestHTTPServer:
+    def test_sse_roundtrip_with_tenant(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(20)
+        prompt = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+        ref = run_alone(cfg, params, (prompt, 10, SamplingParams.greedy()))
+
+        async def go():
+            eng = paged_engine(cfg, params)
+            ten = TenancyController([TenantConfig("gold", weight=3.0)])
+            srv = ServingServer(
+                AsyncServingEngine(Scheduler(eng, tenancy=ten)), port=0)
+            await srv.start()
+            try:
+                r, w = await asyncio.open_connection("127.0.0.1", srv.port)
+                body = json.dumps({"prompt": prompt.tolist(),
+                                   "n_tokens": 10}).encode()
+                w.write(("POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                         "X-Tenant: gold\r\n"
+                         f"Content-Length: {len(body)}\r\n\r\n").encode()
+                        + body)
+                await w.drain()
+                raw = (await r.read()).decode()
+                w.close()
+                head, _, sse = raw.partition("\r\n\r\n")
+                assert head.startswith("HTTP/1.1 200")
+                assert "text/event-stream" in head
+                evs = _parse_sse(sse)
+                toks = []
+                for ev, data in evs[:-1]:
+                    if ev == "token":
+                        assert data["index"] == len(toks)
+                        toks.append(data["token"])
+                    elif ev == "rewind":
+                        del toks[data["to"]:]
+                assert evs[-1][0] == "done"
+                assert evs[-1][1]["status"] == "completed"
+                assert toks == evs[-1][1]["tokens"] == ref.tolist()
+                st = await srv.engine.stats()
+                assert st["tenants"]["gold"]["completed"] == 1
+                # health endpoint serves the engine facade
+                r2, w2 = await asyncio.open_connection("127.0.0.1",
+                                                       srv.port)
+                w2.write(b"GET /v1/health HTTP/1.1\r\n\r\n")
+                await w2.drain()
+                h = json.loads((await r2.read()).decode()
+                               .partition("\r\n\r\n")[2])
+                w2.close()
+                assert h["n_lanes"] == 2 and h["n_active_lanes"] == 0
+            finally:
+                await srv.close()
+
+        _run(go())
+
+    def test_disconnect_mid_stream_cancels(self, tiny_f32):
+        cfg, params = tiny_f32
+        rng = np.random.RandomState(21)
+        prompt = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+        sched = Scheduler(paged_engine(cfg, params))
+
+        async def go():
+            srv = ServingServer(AsyncServingEngine(sched), port=0)
+            await srv.start()
+            try:
+                r, w = await asyncio.open_connection("127.0.0.1", srv.port)
+                body = json.dumps({"prompt": prompt.tolist(),
+                                   "n_tokens": 64}).encode()
+                w.write(("POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                         f"Content-Length: {len(body)}\r\n\r\n").encode()
+                        + body)
+                await w.drain()
+                buf = b""
+                while buf.count(b"event: token") < 3:
+                    chunk = await r.read(256)
+                    assert chunk, "stream ended before 3 tokens"
+                    buf += chunk
+                w.close()                   # mid-stream disconnect
+                deadline = asyncio.get_running_loop().time() + 120
+                while True:
+                    st = await srv.engine.stats()
+                    if st["n_cancelled"] >= 1 and st["active_lanes"] == 0:
+                        break
+                    assert asyncio.get_running_loop().time() < deadline, \
+                        "disconnect never cancelled the request"
+                    await asyncio.sleep(0.02)
+                assert st["unhandled_exceptions"] == 0
+            finally:
+                await srv.close()
+
+        _run(go())
+        done = list(sched.done.values())
+        assert len(done) == 1
+        assert done[0].status == RequestStatus.CANCELLED
+        audit_controller(sched.engine.ctl)

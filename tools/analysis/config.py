@@ -77,6 +77,15 @@ REPO_CONFIG = Config(
         "ReplicaRouter.step",
         "ReplicaRouter._heartbeat",
         "ReplicaRouter._failover",
+        # multi-tenant server front end: the WFQ admission scan runs at
+        # every free-lane fill, tenancy accounting runs per lane per
+        # step, and the async engine's op/pump pair runs between every
+        # scheduler step on the event loop — all pure host bookkeeping
+        "Scheduler._pop_admissible",
+        "TenancyController.may_admit",
+        "TenancyController.note_progress",
+        "AsyncServingEngine._apply_ops",
+        "AsyncServingEngine._pump_all",
     }),
     device_roots=frozenset({
         "state",        # self.state / lane_state / decode state pytrees

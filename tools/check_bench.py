@@ -276,6 +276,49 @@ def check_failover(path: pathlib.Path) -> None:
           f"window, else the floor is vacuous (fg_in_window={f['fg_in_window']})")
 
 
+def check_serving(path: pathlib.Path) -> None:
+    """Named criteria for the multi-tenant streaming-server benchmark
+    (benchmarks/serving.py -> BENCH_serving.json): weighted-fair goodput
+    per tenant within bounds of its weight share under a hog flood,
+    mid-stream disconnects exercised and leak-free, streaming parity
+    with the batch path, and zero unhandled server exceptions."""
+    print(f"== {path} [--serving]")
+    s = json.loads(path.read_text())
+    if not require_keys("serving", s, (
+            "fairness_ok", "fairness", "streaming_parity_ok",
+            "stream_replay_parity_ok", "disconnected_mid_stream",
+            "lanes_leaked", "stranded_entries", "audit_clean",
+            "unhandled_exceptions", "n_cancelled", "goodput_per_tenant")):
+        return
+    ratios = {n: f.get("ratio") for n, f in s["fairness"].items()}
+    check("serving-fairness", bool(s["fairness_ok"]),
+          "every tenant's goodput share must stay within the fairness "
+          f"bounds of its weight share (ratios={ratios}, goodput="
+          f"{s['goodput_per_tenant']})")
+    check("serving-no-unhandled", s["unhandled_exceptions"] == 0,
+          "the async serving loop must never swallow a crash "
+          f"(unhandled_exceptions={s['unhandled_exceptions']})")
+    check("serving-disconnects-nonzero", s["disconnected_mid_stream"] > 0,
+          "the trace must exercise mid-stream client disconnects, else "
+          "the cancellation criteria are vacuous "
+          f"(disconnected={s['disconnected_mid_stream']}, "
+          f"cancelled={s['n_cancelled']})")
+    check("serving-no-lane-leak",
+          s["lanes_leaked"] == 0 and s["stranded_entries"] == 0,
+          "disconnected requests must free their lanes and leave no "
+          f"stranded scheduler entry (lanes_leaked={s['lanes_leaked']}, "
+          f"stranded={s['stranded_entries']})")
+    check("serving-audit-clean", bool(s["audit_clean"]),
+          "the paged controller's stash/exported-bytes accounting must "
+          "audit clean after the disconnect-heavy trace (no KV leak)")
+    check("serving-streaming-parity", bool(s["streaming_parity_ok"]),
+          "the probe request's streamed token sequence must be identical "
+          "to the same request through the batch Scheduler path")
+    check("serving-replay-parity", bool(s["stream_replay_parity_ok"]),
+          "every stream's token/rewind replay must reconstruct exactly "
+          "the request's final committed tokens")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -292,6 +335,9 @@ def main(argv=None) -> int:
     ap.add_argument("--failover", type=pathlib.Path, default=None,
                     help="BENCH_failover.json (replica-kill criteria, "
                          "benchmarks/failover.py)")
+    ap.add_argument("--serving", type=pathlib.Path, default=None,
+                    help="BENCH_serving.json (multi-tenant streaming "
+                         "server criteria, benchmarks/serving.py)")
     ap.add_argument("--quant", action="store_true",
                     help="assert the quantized-KV guardrail block in the "
                          "bench summary (int8 needle arm: accuracy floor "
@@ -315,6 +361,8 @@ def main(argv=None) -> int:
         check_chaos(args.chaos)
     if args.failover is not None:
         check_failover(args.failover)
+    if args.serving is not None:
+        check_serving(args.serving)
 
     if FAILURES:
         print(f"\n{len(FAILURES)} benchmark assertion(s) failed: "
